@@ -1,0 +1,43 @@
+"""Paper Fig. 4 analogue: block-size tuning for the blocked variants.
+
+On TPU the block size is the Pallas BlockSpec tile; on this CPU container we
+sweep the same parameter through the pure-jnp blocked implementations (the
+kernels' VMEM analysis lives in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro.core import pairwise, triplet
+
+from .common import emit, random_distance_matrix, time_fn
+
+
+def run(n: int = 1024, blocks=(32, 64, 128, 256, 512)) -> list[dict]:
+    D = jnp.asarray(random_distance_matrix(n))
+    rows = []
+    base = {}
+    for method, fn in [
+        ("pairwise", pairwise.pald_blocked),
+        ("triplet", triplet.pald_block_symmetric),
+    ]:
+        for b in blocks:
+            if n % b:
+                continue
+            t = time_fn(functools.partial(fn, D, block=b))
+            base.setdefault(method, t)
+            rows.append({
+                "method": method, "block": b, "seconds": round(t, 4),
+                "speedup_vs_first": round(base[method] / t, 2),
+            })
+    return rows
+
+
+def main() -> None:
+    emit(run(), header="fig4: block-size tuning (n=1024)")
+
+
+if __name__ == "__main__":
+    main()

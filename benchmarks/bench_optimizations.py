@@ -1,0 +1,64 @@
+"""Paper Fig. 3 analogue: the optimization waterfall.
+
+The paper stacks branch-avoidance / blocking / integer-U / tie-dropping on
+top of naive C loops.  On TPU/XLA (DESIGN.md §9) branches never exist, so
+the waterfall is re-based:
+
+    naive        entry-wise python loops (reference.py), n small
+    vectorized   dense branch-free jnp (pairwise.pald_dense)
+    blocked      cache-blocked pairwise (pairwise.pald_blocked)
+    symmetric    block-symmetric "triplet" (triplet.pald_block_symmetric)
+
+Speedups are reported relative to the PREVIOUS rung, like the paper's
+figure; multiply down the column for the total.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro.core import pairwise, reference, triplet
+
+from .common import emit, random_distance_matrix, time_fn
+
+
+def run(n: int = 1024, n_naive: int = 192) -> list[dict]:
+    rows = []
+    Dn = random_distance_matrix(n_naive)
+    t_naive = time_fn(
+        lambda: reference.pald_pairwise_reference(Dn, ties="ignore"),
+        warmup=0, iters=1,
+    )
+    # scale the naive O(n^3) python time to n for reference
+    t_naive_scaled = t_naive * (n / n_naive) ** 3
+
+    D = jnp.asarray(random_distance_matrix(n))
+    Dp = D  # n is a block multiple below
+    t_dense = time_fn(functools.partial(pairwise.pald_dense, D, z_chunk=256))
+    t_blocked = time_fn(functools.partial(pairwise.pald_blocked, Dp, block=256))
+    t_sym = time_fn(functools.partial(triplet.pald_block_symmetric, Dp, block=256))
+
+    prev = t_naive_scaled
+    for name, t in [
+        ("naive-python (scaled)", t_naive_scaled),
+        ("vectorized-dense", t_dense),
+        ("blocked-pairwise", t_blocked),
+        ("block-symmetric", t_sym),
+    ]:
+        rows.append({
+            "stage": name,
+            "seconds": round(t, 4),
+            "speedup_vs_prev": round(prev / t, 2),
+            "speedup_vs_naive": round(t_naive_scaled / t, 2),
+        })
+        prev = t
+    return rows
+
+
+def main() -> None:
+    emit(run(), header="fig3: optimization waterfall (n=1024)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Paper Figs. 9-11 analogue: parallel scaling of distributed PaLD.
+
+Two parts:
+
+1. MEASURED strong/weak scaling on this host's fake CPU devices (1..8):
+   wall-clock of ``pald_distributed`` per strategy.  CPU "devices" are
+   threads, so these speedups are indicative, not roofline.
+
+2. MODELED communication volume per chip on the production meshes, the
+   TPU analogue of the paper's NUMA study: allgather vs ring vs 2-D vs
+   2-D+pod-stream on (16,16) and (2,16,16).  The 2-D schedule is the
+   comm-optimal one (Θ(n²/√P) words/chip); pod-streaming keeps every word
+   crossing the slow inter-pod link exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+
+from repro.core import distributed
+from repro.launch import mesh as meshlib
+
+from .common import emit, random_distance_matrix, time_fn
+
+
+def measured(n: int = 768) -> list[dict]:
+    D = random_distance_matrix(n)
+    rows = []
+    ndev = len(jax.devices())
+    for p in (1, 2, 4, 8):
+        if p > ndev:
+            break
+        mesh = meshlib.make_test_mesh((p,), ("data",))
+        for strat in ("allgather", "ring"):
+            t = time_fn(functools.partial(
+                distributed.pald_distributed, D, mesh,
+                strategy=strat, impl="jnp"), warmup=1, iters=2)
+            rows.append({"kind": "strong", "strategy": strat, "p": p, "n": n,
+                         "seconds": round(t, 4)})
+        if p >= 2:
+            r = int(p ** 0.5) if int(p ** 0.5) ** 2 == p else None
+            shape = (r, r) if r else (p // 2, 2)
+            mesh2 = meshlib.make_test_mesh(shape, ("data", "model"))
+            t = time_fn(functools.partial(
+                distributed.pald_distributed, D, mesh2,
+                strategy="2d", impl="jnp"), warmup=1, iters=2)
+            rows.append({"kind": "strong", "strategy": "2d", "p": p, "n": n,
+                         "seconds": round(t, 4)})
+    # weak scaling: n^3/p fixed  ->  n scales as p^(1/3)
+    n1 = 512
+    for p in (1, 2, 4, 8):
+        if p > ndev:
+            break
+        nw = int(n1 * p ** (1 / 3) // 16 * 16)
+        Dw = random_distance_matrix(nw, seed=p)
+        mesh = meshlib.make_test_mesh((p,), ("data",))
+        t = time_fn(functools.partial(
+            distributed.pald_distributed, Dw, mesh,
+            strategy="ring", impl="jnp"), warmup=1, iters=2)
+        rows.append({"kind": "weak", "strategy": "ring", "p": p, "n": nw,
+                     "seconds": round(t, 4)})
+    return rows
+
+
+def comm_model(n: int = 100_000) -> list[dict]:
+    """Per-chip words moved by each strategy (fp32 words)."""
+    rows = []
+    for mesh_name, (pods, pr, pc) in [("16x16", (1, 16, 16)),
+                                      ("2x16x16", (2, 16, 16))]:
+        P = pods * pr * pc
+        rows += [
+            {"mesh": mesh_name, "strategy": "allgather",
+             # gather all of D onto every chip
+             "words_per_chip": int(n * n * (1 - 1 / P)),
+             "peak_mem_words": n * n},
+            {"mesh": mesh_name, "strategy": "ring",
+             # rotate row blocks P-1 times (both passes)
+             "words_per_chip": int(2 * n * (n / P) * (P - 1)),
+             "peak_mem_words": int(2 * n * n / P)},
+            {"mesh": mesh_name, "strategy": "2d",
+             # gather row block along cols + col slab along rows, both passes
+             "words_per_chip": int(2 * (n * n / (pods * pr) + n * n / pc)),
+             "peak_mem_words": int(n * n / pc + n * n / (pods * pr))},
+            {"mesh": mesh_name, "strategy": "2d+pod-stream",
+             # intra-pod gathers + one inter-pod traversal of the slab
+             "words_per_chip": int(2 * (n * n / (pods * pr) + n * n / pc)),
+             "peak_mem_words": int(n * n / pc / pods + n * n / (pods * pr)),
+             },
+        ]
+    for r in rows:
+        r["GB_per_chip"] = round(r["words_per_chip"] * 4 / 1e9, 2)
+        r["peak_GB"] = round(r["peak_mem_words"] * 4 / 1e9, 2)
+    return rows
+
+
+def main() -> None:
+    emit(measured(), header="fig10/11: measured scaling (fake CPU devices)")
+    emit(comm_model(), header="fig9 analogue: modeled comm volume, n=100k")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Paper §7 analogue: semantic community analysis on embedding vectors.
+
+No network access, so instead of fastText vectors we build a synthetic
+"vocabulary" of n=2712 embedding vectors with planted topic clusters of
+varying density — exactly the regime PaLD's universal threshold is built
+for — run the full distributed pipeline, and report strong-tie stats plus
+wall time (the paper reports 0.178 s at n=2712 / p=32 CPU threads).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import analysis, distributed, pald
+from repro.launch import mesh as meshlib
+
+from .common import emit
+
+
+def synthetic_embeddings(n: int = 2712, dim: int = 64, topics: int = 40,
+                         seed: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(topics, dim)) * 4.0
+    # topic sizes follow a Zipf-ish law; per-topic spread varies 4x
+    sizes = np.maximum(1, (n * rng.dirichlet(np.ones(topics) * 0.5))).astype(int)
+    sizes[-1] += n - sizes.sum()
+    X, label = [], []
+    for t, s in enumerate(sizes):
+        spread = 0.25 + 1.0 * rng.random()
+        X.append(centers[t] + rng.normal(size=(s, dim)) * spread)
+        label += [t] * s
+    return np.vstack(X)[:n].astype(np.float32), np.asarray(label[:n])
+
+
+def run() -> list[dict]:
+    X, label = synthetic_embeddings()
+    n = X.shape[0]
+    D = np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1))
+    np.fill_diagonal(D, 0.0)
+
+    rows = []
+    # sequential blocked
+    t0 = time.perf_counter()
+    C = np.asarray(pald.cohesion(D, method="triplet", block=256))
+    t_seq = time.perf_counter() - t0
+
+    # distributed over all fake devices
+    ndev = len(jax.devices())
+    mesh = meshlib.make_test_mesh((ndev,), ("data",))
+    t0 = time.perf_counter()
+    Cd = np.asarray(distributed.pald_distributed(D, mesh, strategy="ring", impl="jnp"))
+    t_par = time.perf_counter() - t0
+    assert np.allclose(C, Cd, atol=1e-5)
+
+    comms = analysis.communities(C)
+    purity = np.mean([
+        np.bincount(label[c]).max() / len(c) for c in comms if len(c) > 1
+    ])
+    rows.append({
+        "n": n,
+        "seq_seconds": round(t_seq, 3),
+        f"par_seconds_p{ndev}": round(t_par, 3),
+        "speedup": round(t_seq / t_par, 2),
+        "communities": len(comms),
+        "mean_purity": round(float(purity), 3),
+    })
+    return rows
+
+
+def main() -> None:
+    emit(run(), header="section7: text-analysis application (synthetic embeddings, n=2712)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""§Perf hillclimb driver: re-dry-run one cell with config overrides and
+print the before/after roofline delta against the recorded baseline JSON.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb \
+        --arch phi3.5-moe-42b-a6.6b --shape train_4k --mesh single \
+        --set moe_shard_constraints=True [--microbatches 4] [--save NAME]
+
+Must run in a fresh process (forces 512 host devices).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+
+
+def parse_override(s: str):
+    k, v = s.split("=", 1)
+    if v in ("True", "False"):
+        return k, v == "True"
+    try:
+        return k, int(v)
+    except ValueError:
+        return k, v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig field override, e.g. moe_shard_constraints=True")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--q-chunk", type=int, default=1024)
+    ap.add_argument("--baseline-dir", default="benchmarks/dryrun_out")
+    ap.add_argument("--save", default=None,
+                    help="dump the new cell JSON under this tag in --baseline-dir")
+    args = ap.parse_args()
+
+    from repro import configs
+    from repro.launch import dryrun
+
+    overrides = dict(parse_override(s) for s in args.set)
+    cfg = configs.get(args.arch)
+    nested = {k: v for k, v in overrides.items() if "." in k}
+    flat = {k: v for k, v in overrides.items() if "." not in k}
+    for k, v in nested.items():
+        outer, inner = k.split(".", 1)
+        sub = dataclasses.replace(getattr(cfg, outer), **{inner: v})
+        flat[outer] = sub
+    cfg = dataclasses.replace(cfg, **flat)
+    configs.REGISTRY[cfg.name] = cfg  # run_cell resolves by name
+
+    cell = dryrun.run_cell(
+        args.arch, args.shape, args.mesh == "multi",
+        q_chunk=args.q_chunk, microbatches=args.microbatches,
+    )
+
+    tag = f"{args.arch}__{args.shape}__{args.mesh}"
+    base_path = os.path.join(args.baseline_dir, tag + ".json")
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base = json.load(f)
+        if base.get("status") == "ok":
+            print("\n=== delta vs baseline ===")
+            for k in ("compute_s", "memory_s", "collective_s"):
+                b, n = base["roofline"][k], cell["roofline"][k]
+                print(f"  {k:13s} {b*1e3:12.2f} -> {n*1e3:12.2f} ms "
+                      f"({(b-n)/b*100 if b else 0:+.1f}% less)")
+            bm = base["memory_analysis"]; nm = cell["memory_analysis"]
+            bb = bm.get("temp_size_in_bytes", 0) + bm.get("argument_size_in_bytes", 0)
+            nb = nm.get("temp_size_in_bytes", 0) + nm.get("argument_size_in_bytes", 0)
+            print(f"  {'GiB/dev':13s} {bb/2**30:12.2f} -> {nb/2**30:12.2f}")
+            print(f"  {'useful_ratio':13s} {base['useful_flop_ratio']:12.3f} -> "
+                  f"{cell['useful_flop_ratio']:12.3f}")
+    if args.save:
+        out = os.path.join(args.baseline_dir, f"{tag}__{args.save}.json")
+        cell["overrides"] = overrides
+        with open(out, "w") as f:
+            json.dump(cell, f, indent=1)
+        print(f"saved {out}")
+
+
+if __name__ == "__main__":
+    main()

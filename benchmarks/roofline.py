@@ -1,0 +1,71 @@
+"""Render the roofline table from the dry-run JSON dumps.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir benchmarks/dryrun_out]
+
+Per (arch x shape x mesh) cell: the three roofline terms in seconds, the
+dominant term, MODEL_FLOPS/HLO_FLOPS, and bytes/device.  Markdown to stdout
+(pasted into EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname: str) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_cell(c: dict) -> str:
+    if c.get("status") == "skipped":
+        return (f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | "
+                f"skipped | — | — |")
+    if c.get("status") != "ok":
+        return (f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | "
+                f"ERROR | — | — |")
+    r = c["roofline"]
+    mem = c.get("memory_analysis", {})
+    bpd = (mem.get("temp_size_in_bytes", 0) + mem.get("argument_size_in_bytes", 0)) / 2**30
+    uf = c.get("useful_flop_ratio")
+    uf_s = f"{uf:.3f}" if uf else "n/a"
+    return (
+        f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+        f"| {r['compute_s']*1e3:9.2f} | {r['memory_s']*1e3:9.2f} "
+        f"| {r['collective_s']*1e3:9.2f} | {r['bottleneck']} "
+        f"| {uf_s} | {bpd:7.2f} |"
+    )
+
+
+def render(cells: list[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+        "| bottleneck | useful-flop ratio | GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    cells = sorted(cells, key=lambda c: (c["arch"], order.get(c["shape"], 9), c["mesh"]))
+    for c in cells:
+        out.append(fmt_cell(c))
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    err = [c for c in cells if c.get("status") not in ("ok", "skipped")]
+    out.append("")
+    out.append(f"cells: {len(ok)} ok, {len(skipped)} skipped, {len(err)} errors")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/dryrun_out")
+    args = ap.parse_args()
+    print(render(load(args.dir)))
+
+
+if __name__ == "__main__":
+    main()

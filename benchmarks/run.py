@@ -1,0 +1,80 @@
+"""Benchmark orchestrator: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Sections:
+    fig3   optimization waterfall        (bench_optimizations)
+    fig4   block-size tuning             (bench_blocksize)
+    table1 pairwise vs triplet           (bench_variants)
+    fig9+  scaling + comm model          (bench_scaling)
+    sec7   text-analysis application     (bench_text_analysis)
+    roofline summary of dry-run JSONs    (roofline), if present
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    from . import (bench_blocksize, bench_optimizations, bench_scaling,
+                   bench_text_analysis, bench_variants, common)
+
+    if args.fast:
+        common.emit(bench_optimizations.run(n=512, n_naive=96),
+                    header="fig3: optimization waterfall (n=512, --fast)")
+        common.emit(bench_blocksize.run(n=512, blocks=(32, 64, 128, 256)),
+                    header="fig4: block-size tuning (n=512, --fast)")
+        common.emit(bench_variants.run(ns=(128, 256, 512)),
+                    header="table1: pairwise vs triplet (--fast)")
+    else:
+        bench_optimizations.main()
+        bench_blocksize.main()
+        bench_variants.main()
+    bench_scaling.main()
+    bench_text_analysis.main()
+    from . import bench_graphs
+    if args.fast:
+        common.emit(bench_graphs.run(ns=(256,)),
+                    header="appendixC: PaLD on graph APSP (--fast)")
+    else:
+        bench_graphs.main()
+
+    here = os.path.dirname(__file__)
+    from . import roofline
+    for tag, sub in [("baseline", "dryrun_out"), ("optimized", "dryrun_out_opt")]:
+        dr = os.path.join(here, sub)
+        if os.path.isdir(dr) and os.listdir(dr):
+            print(f"# roofline ({tag} dry-run dumps)")
+            print(roofline.render(roofline.load(dr)))
+            print()
+    pald = os.path.join(here, "dryrun_out_pald")
+    if os.path.isdir(pald) and os.listdir(pald):
+        import glob as _glob
+        import json as _json
+        print("# pald workload dry-run (paper technique at pod scale)")
+        print("| workload | strategy | mesh | GiB/dev | coll GiB/chip | compute_s | coll_s | bottleneck |")
+        print("|---|---|---|---|---|---|---|---|")
+        for p in sorted(_glob.glob(os.path.join(pald, "*.json"))):
+            c = _json.load(open(p))
+            if c.get("status") != "ok":
+                print(f"| {os.path.basename(p)} | — | — | — | — | — | — | ERROR |")
+                continue
+            m = c["memory_analysis"]
+            gib = (m.get("temp_size_in_bytes", 0) + m.get("argument_size_in_bytes", 0)) / 2**30
+            r = c["roofline"]
+            print(f"| {c['workload']} ({c.get('dtype','f32')}) | {c['strategy']} | {c['mesh']} "
+                  f"| {gib:.2f} | {c['coll_bytes_per_chip']/2**30:.2f} "
+                  f"| {r['compute_s']:.2f} | {r['collective_s']:.3f} | {r['bottleneck']} |")
+        print()
+    print(f"# benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Batched serving example: prefill + sampled decode on any assigned arch.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch gemma2-2b
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-780m --gen 64
+
+Uses the reduced (CPU-sized) config by default; pass --full on a TPU pod.
+"""
+import argparse
+
+from repro.launch import serve as serve_cli
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    argv = ["--arch", args.arch, "--batch", str(args.batch),
+            "--prompt-len", str(args.prompt_len), "--gen", str(args.gen)]
+    if not args.full:
+        argv.append("--smoke")
+    serve_cli.main(argv)
+
+
+if __name__ == "__main__":
+    main()

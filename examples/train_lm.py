@@ -1,0 +1,58 @@
+"""End-to-end driver: train a ~100M-parameter llama-family model for a few
+hundred steps on synthetic data with checkpointing, then analyze its token
+embedding space with PaLD (the paper's technique as a framework feature).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+On this CPU container a 100M model at batch 8 x seq 256 runs ~1 step/s; use
+--steps 30 for a quick pass.  The same script runs unchanged on a TPU pod
+with --mesh production.
+"""
+import argparse
+
+from repro.launch import train as train_cli
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--mesh", default="1")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: 12L x d512 (GQA 8/4) x ff2048, 32k vocab — llama-family
+    import dataclasses
+    from repro import configs
+    from repro.configs import base as cb
+
+    cfg100m = dataclasses.replace(
+        configs.get("llama3.2-3b"),
+        name="llama-100m",
+        n_layers=12, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=32000, remat="nothing", sharding_profile="dp",
+    )
+    # register it so the CLI can find it
+    configs.REGISTRY["llama-100m"] = cfg100m
+    t, _ = cfg100m.param_count()
+    print(f"[train_lm] llama-100m: {t/1e6:.1f}M params")
+
+    train_cli.main([
+        "--arch", "llama-100m", "--steps", str(args.steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+        "--mesh", args.mesh, "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "100", "--log-every", "10",
+    ])
+
+    print("[train_lm] analyzing the trained embedding table with PaLD...")
+    import subprocess
+    import sys
+    subprocess.run([
+        sys.executable, "examples/pald_text_analysis.py",
+        "--ckpt", args.ckpt_dir, "--max-tokens", "1024",
+    ], check=False)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""PaLD core: the paper's contribution as a composable JAX module."""
+from . import analysis, pairwise, pald, reference, triplet  # noqa: F401
+from .pald import cohesion, local_depths  # noqa: F401

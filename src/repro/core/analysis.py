@@ -1,0 +1,60 @@
+"""Cohesion-matrix analysis: universal threshold, strong ties, communities.
+
+Follows Berenhaut, Moore & Melvin (PNAS 2022), the paper's reference [2]:
+
+* the *universal threshold* for distinguishing strong from weak ties is half
+  the mean self-cohesion:  tau = mean(diag(C)) / 2;
+* the strong-tie matrix keeps symmetrized cohesion min(c_xy, c_yx) where it
+  exceeds tau;
+* communities are the connected components of the strong-tie graph.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["universal_threshold", "strong_ties", "communities", "top_ties"]
+
+
+def universal_threshold(C: np.ndarray) -> float:
+    return float(np.mean(np.diag(C))) / 2.0
+
+
+def strong_ties(C: np.ndarray, threshold: float | None = None) -> np.ndarray:
+    """Symmetrized cohesion, zeroed below the universal threshold."""
+    C = np.asarray(C)
+    tau = universal_threshold(C) if threshold is None else threshold
+    S = np.minimum(C, C.T)
+    np.fill_diagonal(S, 0.0)
+    S[S < tau] = 0.0
+    return S
+
+
+def communities(C: np.ndarray, threshold: float | None = None) -> list[list[int]]:
+    """Connected components of the strong-tie graph (union-find)."""
+    S = strong_ties(C, threshold)
+    n = S.shape[0]
+    parent = list(range(n))
+
+    def find(a: int) -> int:
+        while parent[a] != a:
+            parent[a] = parent[parent[a]]
+            a = parent[a]
+        return a
+
+    for x, y in zip(*np.nonzero(S)):
+        ra, rb = find(int(x)), find(int(y))
+        if ra != rb:
+            parent[ra] = rb
+    groups: dict[int, list[int]] = {}
+    for i in range(n):
+        groups.setdefault(find(i), []).append(i)
+    return sorted(groups.values(), key=len, reverse=True)
+
+
+def top_ties(C: np.ndarray, x: int, k: int = 10) -> list[tuple[int, float]]:
+    """Strongest symmetric ties of point x (paper §7 word-cloud analogue)."""
+    S = np.minimum(C, C.T)
+    row = S[x].copy()
+    row[x] = -np.inf
+    idx = np.argsort(row)[::-1][:k]
+    return [(int(i), float(row[i])) for i in idx]

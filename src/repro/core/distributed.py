@@ -1,0 +1,268 @@
+"""Distributed-memory PaLD under ``jax.shard_map``.
+
+The paper proves sequential communication optimality (W = Theta(n^3/sqrt(M)))
+and parallelizes on one shared-memory node.  This module is the
+distributed-memory extension (DESIGN.md §5): the same two-pass structure
+mapped onto a TPU mesh, with per-device compute delegated to the Pallas
+kernel primitives (``repro.kernels.ops.focus_general`` /
+``cohesion_general``) and inter-device movement expressed with
+``jax.lax`` collectives so XLA can overlap compute with communication.
+
+Strategies
+----------
+allgather     D row-sharded; one all-gather of D; embarrassing row-parallel.
+              Comm n^2 words/device, memory n^2/device.  (OpenMP-pairwise
+              analogue: every thread reads all of D.)
+ring          D row-sharded; row blocks rotate via ppermute; comm n^2
+              words/device but memory only O(n^2/P).  Compute of step s
+              overlaps the permute for step s+1.
+2d            D block-sharded over (rows x cols) mesh axes; all-gathers along
+              each axis; comm ~3 n^2/sqrt(P) words/device -- the SUMMA-style
+              communication-optimal schedule (distributed analogue of the
+              paper's 3NL-optimal blocking).
+2d+pod-stream D as 2d but the slow ``pod`` axis is *streamed*: the per-pod
+              row slab rotates across pods via ppermute while both passes
+              consume it chunk-by-chunk, so each word crosses the inter-pod
+              link once and peak gather memory drops by the pod count
+              (the NUMA-placement analogue; DESIGN.md §2).
+
+All strategies return C row-sharded the same way D arrived, un-normalized
+(the ``pald_distributed`` wrapper handles padding + 1/(n-1)).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels import ops as kops
+
+__all__ = ["pald_distributed"]
+
+
+def _weights_rows(U_rows: jnp.ndarray, row_offset: jnp.ndarray, n_valid) -> jnp.ndarray:
+    """W = 1/U for a row block: zero diagonal (global row == col) and padding."""
+    m, n = U_rows.shape
+    rows = row_offset + jnp.arange(m)
+    diag = rows[:, None] == jnp.arange(n)[None, :]
+    W = jnp.where(diag | (U_rows == 0), 0.0, 1.0 / jnp.where(U_rows == 0, 1.0, U_rows))
+    if n_valid is not None:
+        W = W * (rows[:, None] < n_valid) * (jnp.arange(n)[None, :] < n_valid)
+    return W.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# 1-D strategies: D row-sharded over a single (flattened) axis
+# ---------------------------------------------------------------------------
+def _allgather_body(Dloc, *, axis, n_valid, impl):
+    m = Dloc.shape[0]
+    Dall = jax.lax.all_gather(Dloc, axis, tiled=True)          # (n, n)
+    off = jax.lax.axis_index(axis) * m
+    U = kops.focus_general(Dloc, Dall, Dloc, impl=impl)        # (m, n)
+    W = _weights_rows(U, off, n_valid)
+    return kops.cohesion_general(Dloc, Dall, Dloc, W, impl=impl)
+
+
+def _ring_body(Dloc, *, axis, p, n_valid, impl):
+    m, n = Dloc.shape
+    fwd = [(j, (j + 1) % p) for j in range(p)]
+    r = jax.lax.axis_index(axis)
+
+    def owner_cols(s):
+        # after s forward shifts we hold the block originally on (r - s) % p
+        return ((r - s) % p) * m
+
+    # ---- pass 1: local-focus rows ----------------------------------------
+    def f_step(s, carry):
+        blk, U = carry
+        nxt = jax.lax.ppermute(blk, axis, fwd)                  # comm ...
+        off = owner_cols(s)
+        Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
+        Ublk = kops.focus_general(Dloc, blk, Dxy, impl=impl)    # ... overlaps compute
+        U = jax.lax.dynamic_update_slice(U, Ublk, (0, off))
+        return nxt, U
+
+    _, U = jax.lax.fori_loop(
+        0, p, f_step, (Dloc, jnp.zeros((m, n), jnp.float32))
+    )
+    W = _weights_rows(U, r * m, n_valid)
+
+    # ---- pass 2: cohesion rows --------------------------------------------
+    def c_step(s, carry):
+        blk, C = carry
+        nxt = jax.lax.ppermute(blk, axis, fwd)
+        off = owner_cols(s)
+        Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
+        Wxy = jax.lax.dynamic_slice(W, (0, off), (m, m))
+        C = C + kops.cohesion_general(Dloc, blk, Dxy, Wxy, impl=impl)
+        return nxt, C
+
+    _, C = jax.lax.fori_loop(
+        0, p, c_step, (Dloc, jnp.zeros((m, n), jnp.float32))
+    )
+    return C
+
+
+# ---------------------------------------------------------------------------
+# 2-D strategy (comm-optimal), optionally streaming over the pod axis
+# ---------------------------------------------------------------------------
+def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, impl, mesh_shape):
+    mr, mc = Dblk.shape
+    gathered_rows = tuple(a for a in row_axes if a != stream_axis)
+    # row index offset of this device's X block within the global ordering
+    roff = jax.lax.axis_index(row_axes) * mr if len(row_axes) == 1 else (
+        jax.lax.axis_index(row_axes[0]) * (mr * mesh_shape[row_axes[1]])
+        + jax.lax.axis_index(row_axes[1]) * mr
+    )
+    coff = jax.lax.axis_index(col_axis) * mc
+
+    # D rows for the local X block, all columns: gather along the column axis.
+    Grow = jax.lax.all_gather(Dblk, col_axis, axis=1, tiled=True)     # (mx, n)
+    n = Grow.shape[1]
+    mx = mr * 1
+    if stream_axis is None:
+        # full gather along all row axes: slab = all rows, local col block
+        slab = jax.lax.all_gather(Dblk, row_axes, axis=0, tiled=True)  # (n, mc)
+        nsteps, slab_rows = 1, n
+    else:
+        # gather along the fast intra-pod axes only; rotate pod slabs
+        slab = jax.lax.all_gather(Dblk, gathered_rows, axis=0, tiled=True)
+        nsteps, slab_rows = mesh_shape[stream_axis], slab.shape[0]
+    npods = nsteps
+    fwd = None if stream_axis is None else [
+        (j, (j + 1) % npods) for j in range(npods)
+    ]
+    pod_idx = 0 if stream_axis is None else jax.lax.axis_index(stream_axis)
+
+    def slab_row_offset(s):
+        if stream_axis is None:
+            return jnp.int32(0)
+        return ((pod_idx - s) % npods) * slab_rows
+
+    # ---- pass 1: U[Xi, Yj] = sum_z mask, z streamed in slab chunks ---------
+    # slab holds D[chunk_rows, Zj]; by symmetry slab.T = d_{y in Yj, z in chunk}
+    def f_step(s, carry):
+        blk, U = carry
+        nxt = blk if stream_axis is None else jax.lax.ppermute(blk, stream_axis, fwd)
+        zoff = slab_row_offset(s)
+        dxz = jax.lax.dynamic_slice(Grow, (0, zoff), (mr, slab_rows))
+        U = U + kops.focus_general(dxz, blk.T, Dblk, impl=impl)
+        return nxt, U
+
+    _, U = jax.lax.fori_loop(0, nsteps, f_step, (slab, jnp.zeros((mr, mc), jnp.float32)))
+
+    # weights need full U rows: gather along the column axis (intra-pod)
+    Urow = jax.lax.all_gather(U, col_axis, axis=1, tiled=True)         # (mx, n)
+    Wrow = _weights_rows(Urow, roff, n_valid)
+
+    # ---- pass 2: C[Xi, Zj] = sum_y mask * w, y streamed in slab chunks -----
+    def c_step(s, carry):
+        blk, C = carry
+        nxt = blk if stream_axis is None else jax.lax.ppermute(blk, stream_axis, fwd)
+        yoff = slab_row_offset(s)
+        dxy = jax.lax.dynamic_slice(Grow, (0, yoff), (mr, slab_rows))
+        w = jax.lax.dynamic_slice(Wrow, (0, yoff), (mr, slab_rows))
+        C = C + kops.cohesion_general(Dblk, blk, dxy, w, impl=impl)
+        return nxt, C
+
+    _, C = jax.lax.fori_loop(0, nsteps, c_step, (slab, jnp.zeros((mr, mc), jnp.float32)))
+    return C
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+def pald_distributed(
+    D: jnp.ndarray,
+    mesh: Mesh,
+    *,
+    strategy: str = "auto",
+    row_axes: Sequence[str] | None = None,
+    col_axis: str | None = None,
+    pod_stream: bool | None = None,
+    normalize: bool = True,
+    impl: str | None = None,
+    comm_dtype=None,
+) -> jnp.ndarray:
+    """Compute the PaLD cohesion matrix on a device mesh.
+
+    D is a host/global array; it is padded to shard evenly, placed according
+    to the strategy, processed, and returned unsharded (n, n).
+
+    ``comm_dtype=jnp.bfloat16`` moves/gathers distances in bf16 (halving
+    every collective) and compares in bf16 — PaLD depends only on the
+    ORDER of distances, so this is exact whenever no two distances fall in
+    the same bf16 ulp; distances that collide round to an exact tie, which
+    the optimized paths drop (the paper's own tie semantics).  §Perf 3.
+    """
+    axis_names = list(mesh.axis_names)
+    if row_axes is None:
+        row_axes = tuple(a for a in axis_names if a != axis_names[-1])
+    else:
+        row_axes = tuple(row_axes)
+    col_axis = col_axis or axis_names[-1]
+    if strategy == "auto":
+        strategy = "2d" if len(axis_names) >= 2 else "ring"
+    if pod_stream is None:
+        pod_stream = "pod" in axis_names and strategy == "2d"
+
+    n0 = D.shape[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    pr = 1
+    for a in row_axes:
+        pr *= sizes[a]
+    pc = sizes[col_axis]
+
+    if strategy in ("allgather", "ring"):
+        p = pr * pc
+        flat_axes = tuple(axis_names)
+        quantum = p
+        spec_in = P(flat_axes, None)
+    else:
+        quantum = pr * pc  # rows need pr | n, cols pc | n; lcm-ish via pr*pc
+        spec_in = P(tuple(row_axes), col_axis)
+
+    m = -(-n0 // quantum) * quantum
+    dt = comm_dtype or jnp.float32
+    Dp = jnp.full((m, m), jnp.inf, dt)
+    Dp = Dp.at[:n0, :n0].set(jnp.asarray(D, dt))
+    Dp = Dp.at[jnp.arange(m), jnp.arange(m)].set(0.0)
+    n_valid = n0 if m != n0 else None
+
+    mesh_shape = sizes
+    if strategy == "allgather":
+        body = functools.partial(
+            _allgather_body, axis=flat_axes, n_valid=n_valid, impl=impl
+        )
+        out_spec = P(flat_axes, None)
+    elif strategy == "ring":
+        body = functools.partial(
+            _ring_body, axis=flat_axes, p=p, n_valid=n_valid, impl=impl
+        )
+        out_spec = P(flat_axes, None)
+    elif strategy == "2d":
+        body = functools.partial(
+            _2d_body,
+            row_axes=row_axes,
+            col_axis=col_axis,
+            stream_axis="pod" if pod_stream else None,
+            n_valid=n_valid,
+            impl=impl,
+            mesh_shape=mesh_shape,
+        )
+        out_spec = P(tuple(row_axes), col_axis)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    fn = jax.jit(
+        jax.shard_map(
+            body, mesh=mesh, in_specs=spec_in, out_specs=out_spec, check_vma=False
+        )
+    )
+    C = fn(Dp)[:n0, :n0]
+    if normalize:
+        C = C / (n0 - 1)
+    return C

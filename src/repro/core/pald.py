@@ -1,0 +1,81 @@
+"""Public PaLD API.
+
+    from repro.core import pald
+    C = pald.cohesion(D)                      # auto method selection
+    C = pald.cohesion(D, method="pairwise")   # blocked pairwise (Fig. 5)
+    C = pald.cohesion(D, method="triplet")    # block-symmetric (Alg. 2 analogue)
+    C = pald.cohesion(D, method="kernel")     # Pallas TPU kernels
+    C = pald.cohesion(D, method="dense")      # un-blocked vectorized baseline
+
+Inputs of any size are padded internally to a block multiple with +inf
+distances; padded points land outside every local focus and contribute
+nothing, so the result restricted to the original n x n is exact.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax.numpy as jnp
+
+from . import pairwise as _pairwise
+from . import triplet as _triplet
+
+Method = Literal["auto", "dense", "pairwise", "triplet", "kernel"]
+
+__all__ = ["cohesion", "local_depths", "pad_distance_matrix"]
+
+
+def pad_distance_matrix(D: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
+    """Pad D to a multiple of ``block`` with +inf off-diagonal, 0 diagonal.
+
+    Padded points are infinitely far from everything: they never enter a real
+    pair's local focus (inf < d is false) and every real z is inside a padded
+    pair's focus but contributes to padded rows of C only.
+    """
+    n = D.shape[0]
+    m = -(-n // block) * block
+    if m == n:
+        return D, n
+    P = jnp.full((m, m), jnp.inf, D.dtype)
+    P = P.at[:n, :n].set(D)
+    P = P.at[jnp.arange(m), jnp.arange(m)].set(0.0)
+    return P, n
+
+
+def cohesion(
+    D: jnp.ndarray,
+    *,
+    method: Method = "auto",
+    block: int = 128,
+    normalize: bool = True,
+    z_chunk: int | None = None,
+) -> jnp.ndarray:
+    """Compute the PaLD cohesion matrix C from a distance matrix D."""
+    n = D.shape[0]
+    if method == "auto":
+        method = "dense" if n <= 256 else "triplet"
+    if method == "dense":
+        return _pairwise.pald_dense(D, z_chunk=z_chunk, normalize=normalize)
+    Dp, n0 = pad_distance_matrix(jnp.asarray(D, jnp.float32), block)
+    nv = jnp.asarray(n0) if Dp.shape[0] != n0 else None
+    # normalization is applied here (not inside the blocked fns) so the padded
+    # size never leaks into the 1/(n-1) factor.
+    if method == "pairwise":
+        C = _pairwise.pald_blocked(Dp, block=block, n_valid=nv)
+    elif method == "triplet":
+        C = _triplet.pald_block_symmetric(Dp, block=block, n_valid=nv)
+    elif method == "kernel":
+        from repro.kernels import ops as _kops
+
+        C = _kops.pald(Dp, block=block, n_valid=nv)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    C = C[:n0, :n0]
+    if normalize:
+        C = C / (n0 - 1)
+    return C
+
+
+def local_depths(C: jnp.ndarray) -> jnp.ndarray:
+    """l_x = sum_z c_xz (cohesion is *partitioned* local depth)."""
+    return jnp.sum(C, axis=1)

@@ -1,0 +1,95 @@
+"""Block-symmetric ("triplet-flavoured") PaLD in pure JAX.
+
+The paper's triplet algorithm (Algorithm 2) exploits the symmetry of unordered
+triplets to cut scalar work to ~1.33 n^3 flops at the cost of irregular 6-way
+scattered writes -- which is hostile to a (8,128)-VREG vector machine.  The
+TPU-idiomatic translation (DESIGN.md §4.3) lifts the symmetry from scalars to
+*blocks*: only the nb(nb+1)/2 upper-triangular (X, Y) block pairs are visited,
+and each off-diagonal visit performs BOTH role updates
+
+    C[x, z] += (d_xz < d_yz) & (d_xz < d_xy) * W[x, y]   (x-role)
+    C[y, z] += (d_yz < d_xz) & (d_yz < d_xy) * W[x, y]   (y-role)
+
+so every unordered pair is touched exactly once, halving comparisons versus
+the dense pairwise form while keeping fully regular vector access.  Diagonal
+blocks (X == Y) fall back to the dense one-sided update, which already covers
+both orders of the pairs inside the block.
+
+Matches ``reference.pald_pairwise_reference(ties='ignore')`` on tie-free input.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .pairwise import _weights
+
+__all__ = ["pald_block_symmetric"]
+
+
+def _tri_pairs(nb: int) -> tuple[np.ndarray, np.ndarray]:
+    xs, ys = np.triu_indices(nb)
+    return xs.astype(np.int32), ys.astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "normalize"))
+def pald_block_symmetric(
+    D: jnp.ndarray,
+    *,
+    block: int = 128,
+    normalize: bool = False,
+    n_valid: jnp.ndarray | int | None = None,
+) -> jnp.ndarray:
+    D = D.astype(jnp.float32)
+    n = D.shape[0]
+    assert n % block == 0, "caller must pad to a block multiple"
+    nb = n // block
+    xs, ys = _tri_pairs(nb)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    npairs = int(xs.shape[0])
+
+    # ---- pass 1: local focus, upper-tri block pairs, mirrored -------------
+    def focus_loop(i, U):
+        xb, yb = xs[i], ys[i]
+        Dx = jax.lax.dynamic_slice(D, (xb * block, 0), (block, n))
+        Dy = jax.lax.dynamic_slice(D, (yb * block, 0), (block, n))
+        Dxy = jax.lax.dynamic_slice_in_dim(Dx, yb * block, block, axis=1)
+        m = (Dx[:, None, :] < Dxy[:, :, None]) | (Dy[None, :, :] < Dxy[:, :, None])
+        blk = jnp.sum(m, axis=-1, dtype=jnp.float32)
+        U = jax.lax.dynamic_update_slice(U, blk, (xb * block, yb * block))
+        U = jax.lax.dynamic_update_slice(U, blk.T, (yb * block, xb * block))
+        return U
+
+    U = jax.lax.fori_loop(0, npairs, focus_loop, jnp.zeros((n, n), jnp.float32))
+    W = _weights(U, n_valid)
+
+    # ---- pass 2: cohesion, both roles per off-diagonal block pair ---------
+    def coh_loop(i, C):
+        xb, yb = xs[i], ys[i]
+        Dx = jax.lax.dynamic_slice(D, (xb * block, 0), (block, n))
+        Dy = jax.lax.dynamic_slice(D, (yb * block, 0), (block, n))
+        Dxy = jax.lax.dynamic_slice_in_dim(Dx, yb * block, block, axis=1)
+        Wxy = jax.lax.dynamic_slice(W, (xb * block, yb * block), (block, block))
+        diag = xb == yb
+        gx = (Dx[:, None, :] < Dy[None, :, :]) & (Dx[:, None, :] < Dxy[:, :, None])
+        add_x = jnp.einsum("xyz,xy->xz", gx.astype(jnp.float32), Wxy)
+        # y-role: skipped for diagonal blocks (dense one-sided already covers
+        # both orders there); masked to zero via `diag`.
+        gy = (Dy[None, :, :] < Dx[:, None, :]) & (Dy[None, :, :] < Dxy[:, :, None])
+        add_y = jnp.einsum("xyz,xy->yz", gy.astype(jnp.float32), Wxy)
+        add_y = jnp.where(diag, 0.0, 1.0) * add_y
+
+        rx = jax.lax.dynamic_slice(C, (xb * block, 0), (block, n))
+        C = jax.lax.dynamic_update_slice(C, rx + add_x, (xb * block, 0))
+        ry = jax.lax.dynamic_slice(C, (yb * block, 0), (block, n))
+        C = jax.lax.dynamic_update_slice(C, ry + add_y, (yb * block, 0))
+        return C
+
+    C = jax.lax.fori_loop(0, npairs, coh_loop, jnp.zeros((n, n), jnp.float32))
+    if normalize:
+        C = C / (n - 1)
+    return C

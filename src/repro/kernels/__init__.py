@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the PaLD hot spots (focus + cohesion passes)."""
+from . import ops, ref  # noqa: F401

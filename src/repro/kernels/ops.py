@@ -1,0 +1,173 @@
+"""jit'd wrappers around the PaLD Pallas kernels.
+
+On TPU the kernels lower to Mosaic; on CPU (this container) either
+``interpret=True`` Pallas execution (bit-faithful to the kernel body, used by
+tests) or a vectorized jnp fallback with identical semantics (used for speed
+in distributed CPU runs) is selected via ``impl=``.
+
+The *general* (rectangular) forms are the primitives that both the sequential
+square algorithm and the shard_map distributed algorithms call per device:
+
+    focus_general(DXZ, DYZ, DXY)        -> U (mx, my)
+    cohesion_general(DXZ, DYZ, DXY, W)  -> C (mx, mz)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .pald_cohesion import cohesion_general_pallas, cohesion_pallas  # noqa: F401
+from .pald_focus import focus_general_pallas, focus_pallas  # noqa: F401
+from .pald_focus_tri import focus_tri_pallas  # noqa: F401
+from .ref import weights_ref
+
+__all__ = [
+    "pald",
+    "focus",
+    "cohesion_from_weights",
+    "focus_general",
+    "cohesion_general",
+    "on_tpu",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _default_impl() -> str:
+    return "pallas" if on_tpu() else "jnp"
+
+
+def _pick_block(m: int, want: int) -> int:
+    """Largest divisor of m that is <= want (block shapes must tile exactly)."""
+    b = min(want, m)
+    while m % b:
+        b -= 1
+    return b
+
+
+# --------------------------------------------------------------------------
+# jnp fallback with identical semantics to the kernels (z/y-chunked).
+# --------------------------------------------------------------------------
+# The fallback materializes an (mx, my, chunk) comparison cube per step; at
+# production block sizes (6400x6400 on the 2-D distributed schedule) a fixed
+# 512-chunk is a 20 GiB buffer.  Cap the bool cube at 512 MiB instead (its
+# f32-cast sibling in the cohesion einsum is then <= 2 GiB) — the chunk
+# adapts down as blocks grow (PaLD §Perf iteration).
+_CUBE_BUDGET = 512 << 20
+
+
+def _adaptive_chunk(mx: int, my: int, mz: int, want: int) -> int:
+    cap = max(_CUBE_BUDGET // max(mx * my, 1), 8)
+    return _pick_block(mz, min(want, cap))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _focus_general_jnp(DXZ, DYZ, DXY, *, chunk: int = 512):
+    mx, mz = DXZ.shape
+    c = _adaptive_chunk(mx, DYZ.shape[0], mz, chunk)
+
+    def body(acc, blks):
+        dxz, dyz = blks  # (mx, c), (my, c)
+        m = (dxz[:, None, :] < DXY[:, :, None]) | (dyz[None, :, :] < DXY[:, :, None])
+        return acc + jnp.sum(m, axis=-1, dtype=jnp.float32), None
+
+    xs = (
+        DXZ.reshape(mx, mz // c, c).transpose(1, 0, 2),
+        DYZ.reshape(DYZ.shape[0], mz // c, c).transpose(1, 0, 2),
+    )
+    U, _ = jax.lax.scan(body, jnp.zeros(DXY.shape, jnp.float32), xs)
+    return U
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _cohesion_general_jnp(DXZ, DYZ, DXY, W, *, chunk: int = 128):
+    my = DYZ.shape[0]
+    mx, mz = DXZ.shape
+    c = _adaptive_chunk(mx, mz, my, chunk)
+
+    def body(acc, blks):
+        dyz, dxy, w = blks  # (c, mz), (mx, c), (mx, c)
+        g = (DXZ[:, None, :] < dyz[None, :, :]) & (DXZ[:, None, :] < dxy[:, :, None])
+        return acc + jnp.einsum("xyz,xy->xz", g.astype(jnp.float32), w), None
+
+    xs = (
+        DYZ.reshape(my // c, c, -1),
+        DXY.reshape(DXY.shape[0], my // c, c).transpose(1, 0, 2),
+        W.reshape(W.shape[0], my // c, c).transpose(1, 0, 2),
+    )
+    C, _ = jax.lax.scan(body, jnp.zeros((DXZ.shape[0], DXZ.shape[1]), jnp.float32), xs)
+    return C
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+def focus_general(DXZ, DYZ, DXY, *, block: int = 128, block_z: int = 512, impl: str | None = None):
+    impl = impl or _default_impl()
+    if impl == "jnp":
+        return _focus_general_jnp(DXZ, DYZ, DXY, chunk=block_z)
+    bx = _pick_block(DXZ.shape[0], block)
+    by = _pick_block(DYZ.shape[0], block)
+    bz = _pick_block(DXZ.shape[1], block_z)
+    return focus_general_pallas(
+        DXZ, DYZ, DXY, block_x=bx, block_y=by, block_z=bz, interpret=impl == "interpret"
+    )
+
+
+def cohesion_general(DXZ, DYZ, DXY, W, *, block: int = 128, block_z: int = 512, impl: str | None = None):
+    impl = impl or _default_impl()
+    if impl == "jnp":
+        return _cohesion_general_jnp(DXZ, DYZ, DXY, W, chunk=block)
+    bx = _pick_block(DXZ.shape[0], block)
+    by = _pick_block(DYZ.shape[0], block)
+    bz = _pick_block(DXZ.shape[1], block_z)
+    return cohesion_general_pallas(
+        DXZ, DYZ, DXY, W, block_x=bx, block_y=by, block_z=bz, interpret=impl == "interpret"
+    )
+
+
+def focus(D, *, block: int = 128, block_z: int = 512, impl: str | None = None,
+          schedule: str = "dense"):
+    """schedule='tri' uses the upper-triangular scalar-prefetch kernel
+    (pald_focus_tri): ~half the comparisons of the dense grid, same
+    result.  Only meaningful for the square (sequential) case."""
+    if schedule == "tri":
+        impl = impl or ("pallas" if on_tpu() else "interpret")
+        if impl in ("pallas", "interpret"):
+            b = _pick_block(D.shape[0], block)
+            bz = _pick_block(D.shape[0], block_z)
+            return focus_tri_pallas(
+                D, block=b, block_z=bz, interpret=impl == "interpret"
+            )
+    return focus_general(D, D, D, block=block, block_z=block_z, impl=impl)
+
+
+def cohesion_from_weights(D, W, *, block: int = 128, block_z: int = 512, impl: str | None = None):
+    return cohesion_general(D, D, D, W, block=block, block_z=block_z, impl=impl)
+
+
+def pald(
+    D,
+    *,
+    block: int = 128,
+    block_z: int = 512,
+    normalize: bool = False,
+    n_valid=None,
+    impl: str | None = None,
+):
+    """Full PaLD via the kernel pipeline (input padded to block multiples).
+
+    impl: 'pallas' (TPU), 'interpret' (CPU bit-faithful kernel execution),
+    'jnp' (vectorized fallback), or None for backend default.
+    """
+    impl = impl or ("pallas" if on_tpu() else "interpret")
+    U = focus(D, block=block, block_z=block_z, impl=impl)
+    W = weights_ref(U, n_valid)
+    C = cohesion_from_weights(D, W, block=block, block_z=block_z, impl=impl)
+    if normalize:
+        C = C / (D.shape[0] - 1)
+    return C

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel for PaLD pass 2: cohesion accumulation.
+
+    C[x, z] = sum_y (D[x,z] < D[y,z]) & (D[x,z] < D[x,y]) * W[x,y]
+
+with W = 1/U (zero diagonal / padded entries; computed outside the kernel so
+the reciprocal is done once — the paper's "precompute reciprocals" trick).
+
+Grid (nx, nz, ny) with the y-reduction innermost: the output block C[X, Z]
+stays resident in VMEM across all y steps.  The kernel updates unit-stride
+(bx, bz) rows of C — the TPU translation of the paper's "updating columns of
+C instead" stride-1 optimization (their C is updated column-wise because the
+z loop streams columns; our block layout makes the streamed dim contiguous).
+
+VMEM = D_XZ + C_XZ + D_YZ + D_XY + W_XY = 3*bx*bz + 2*bx*by floats.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cohesion_pallas"]
+
+
+def _cohesion_kernel(dxz_ref, dyz_ref, dxy_ref, w_ref, c_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    dxz = dxz_ref[...]  # (bx, bz)
+    dyz = dyz_ref[...]  # (by, bz)
+    dxy = dxy_ref[...]  # (bx, by)
+    w = w_ref[...]      # (bx, by)
+    by = dxy.shape[1]
+
+    def body(y, acc):
+        row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)   # (1, bz)  d_yz
+        thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)   # (bx, 1) d_xy
+        wy = jax.lax.dynamic_slice_in_dim(w, y, 1, axis=1)      # (bx, 1)
+        g = (dxz < row) & (dxz < thr)                           # (bx, bz)
+        return acc + g.astype(jnp.float32) * wy
+
+    add = jax.lax.fori_loop(0, by, body, jnp.zeros_like(c_ref))
+    c_ref[...] += add
+
+
+@functools.partial(jax.jit, static_argnames=("block_x", "block_z", "block_y", "interpret"))
+def cohesion_general_pallas(
+    DXZ: jnp.ndarray,  # (mx, mz)
+    DYZ: jnp.ndarray,  # (my, mz)
+    DXY: jnp.ndarray,  # (mx, my)
+    W: jnp.ndarray,    # (mx, my)
+    *,
+    block_x: int = 128,
+    block_z: int = 512,
+    block_y: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """C (mx, mz) = sum_y (DXZ < DYZ[y]) & (DXZ < DXY[:,y]) * W[:,y].
+
+    Rectangular form for distributed per-device compute; the square
+    sequential case passes D three times.
+    """
+    mx, mz = DXZ.shape
+    my = DYZ.shape[0]
+    assert DYZ.shape[1] == mz and DXY.shape == (mx, my) and W.shape == (mx, my)
+    assert mx % block_x == 0 and mz % block_z == 0 and my % block_y == 0
+    grid = (mx // block_x, mz // block_z, my // block_y)
+    return pl.pallas_call(
+        _cohesion_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_x, block_z), lambda i, j, k: (i, j)),  # DXZ
+            pl.BlockSpec((block_y, block_z), lambda i, j, k: (k, j)),  # DYZ
+            pl.BlockSpec((block_x, block_y), lambda i, j, k: (i, k)),  # DXY
+            pl.BlockSpec((block_x, block_y), lambda i, j, k: (i, k)),  # W
+        ],
+        out_specs=pl.BlockSpec((block_x, block_z), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mx, mz), jnp.float32),
+        interpret=interpret,
+    )(
+        DXZ.astype(jnp.float32),
+        DYZ.astype(jnp.float32),
+        DXY.astype(jnp.float32),
+        W.astype(jnp.float32),
+    )
+
+
+def cohesion_pallas(
+    D: jnp.ndarray,
+    W: jnp.ndarray,
+    *,
+    block_x: int = 128,
+    block_z: int = 512,
+    block_y: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Square cohesion matrix (un-normalized, sequential case)."""
+    return cohesion_general_pallas(
+        D, D, D, W, block_x=block_x, block_z=block_z, block_y=block_y, interpret=interpret
+    )

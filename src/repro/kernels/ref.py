@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the PaLD Pallas kernels.
+
+Kept deliberately naive (one O(n^3) broadcast, z-chunked) so kernel tests
+compare against straight-line jnp semantics, independent of the blocked
+implementations in repro.core.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["focus_ref", "cohesion_ref", "weights_ref"]
+
+
+def focus_ref(D: jnp.ndarray) -> jnp.ndarray:
+    D = D.astype(jnp.float32)
+    m = (D[:, None, :] < D[:, :, None]) | (D[None, :, :] < D[:, :, None])
+    return jnp.sum(m, axis=-1).astype(jnp.float32)
+
+
+def weights_ref(U: jnp.ndarray, n_valid=None) -> jnp.ndarray:
+    n = U.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    W = jnp.where(eye | (U == 0), 0.0, 1.0 / jnp.where(U == 0, 1.0, U))
+    if n_valid is not None:
+        valid = jnp.arange(n) < n_valid
+        W = W * valid[:, None] * valid[None, :]
+    return W.astype(jnp.float32)
+
+
+def cohesion_ref(D: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
+    D = D.astype(jnp.float32)
+    # g[x, y, z] = (d_xz < d_yz) & (d_xz < d_xy)
+    g = (D[:, None, :] < D[None, :, :]) & (D[:, None, :] < D[:, :, None])
+    return jnp.einsum("xyz,xy->xz", g.astype(jnp.float32), W.astype(jnp.float32))

@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` must succeed for the
+single-pod (16, 16) and multi-pod (2, 16, 16) production meshes, for every
+runnable cell.  Per cell we record memory_analysis(), cost_analysis() and
+the collective schedule parsed from the optimized HLO, dumped as JSON for
+benchmarks/roofline.py.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out benchmarks/dryrun_out
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.configs.base import SHAPES, runnable
+from repro.launch import hlo_analysis, mesh as meshlib, specs
+
+
+def _extract_costs(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    coll = hlo_analysis.collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        # roofline uses modeled link traffic; operand bytes kept alongside
+        "coll_bytes": float(coll.total_traffic),
+        "coll_operand_bytes": float(coll.total_bytes),
+        "coll": coll.as_dict(),
+    }
+
+
+def probe_costs(cfg, shape, mesh, *, microbatches: int = 1,
+                q_chunk: int = 1024) -> dict:
+    """Per-chip (flops, bytes, collective bytes) via unrolled probes.
+
+    XLA cost analysis counts a while-loop body ONCE, so the production
+    program (scan over layer repeats, lax.map over q chunks) under-reports
+    everything by ~depth×.  We compile the same cell at 1 and 2
+    layer-repeats with every loop python-unrolled (identical math and
+    chunk structure, no while ops), then extrapolate linearly:
+
+        cost(R) = cost(1) + (R - 1) * (cost(2) - cost(1))
+
+    This is exact for costs that are affine in depth (all of ours: the
+    top-level embed/head/loss/optimizer is the intercept, the layer body is
+    the slope).
+    """
+    R = cfg.n_repeats
+    out = {}
+    probes = {}
+    for r in (1, 2):
+        pcfg = dataclasses.replace(
+            cfg, n_layers=r * len(cfg.pattern), scan_unroll=r,
+            probe_unroll=True,
+        )
+        fn, args = specs.cell_lowerable(
+            pcfg, shape, mesh, q_chunk=q_chunk, microbatches=microbatches
+        )
+        with mesh:
+            compiled = jax.jit(fn).lower(*args).compile()
+        probes[r] = _extract_costs(compiled)
+    for k in ("flops", "bytes", "coll_bytes"):
+        # a tiny negative slope can appear on shallow decode cells (XLA
+        # optimizes the 1- and 2-repeat programs slightly differently);
+        # clamp — per-layer cost is physically non-negative
+        slope = max(probes[2][k] - probes[1][k], 0.0)
+        out[k] = probes[1][k] + (R - 1) * slope
+        out[k + "_per_layer_repeat"] = slope
+    out["coll_by_kind_2repeat"] = probes[2]["coll"]["by_kind"]
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             q_chunk: int = 1024, microbatches: int = 1,
+             verbose: bool = True) -> dict:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    ok, why = runnable(cfg, shape)
+    if shape.kind == "train" and microbatches == 1:
+        microbatches = cfg.train_microbatches
+    cell = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "microbatches": microbatches,
+    }
+    if not ok:
+        cell.update(status="skipped", reason=why)
+        return cell
+
+    t0 = time.time()
+    fn, args = specs.cell_lowerable(
+        cfg, shape, mesh, q_chunk=q_chunk, microbatches=microbatches
+    )
+    with mesh:
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    raw = _extract_costs(compiled)
+
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_d[k] = int(v)
+
+    # while-loop bodies are counted once by cost analysis -> probe-compile
+    # unrolled 1/2-repeat variants and extrapolate to the real depth
+    t0 = time.time()
+    # probes always run microbatches=1: the mb loop is a while (counted
+    # once); the step's total compute is batch-size-, not mb-, determined.
+    # Grad all-reduces differ slightly (once per mb vs once) — noted in
+    # EXPERIMENTS.md.
+    probed = probe_costs(cfg, shape, mesh, microbatches=1, q_chunk=q_chunk)
+    t_probe = time.time() - t0
+
+    terms = hlo_analysis.roofline_terms(
+        hlo_flops=probed["flops"], hlo_bytes=probed["bytes"],
+        coll_bytes=probed["coll_bytes"], chips=chips,
+        flops_is_global=False,  # partitioned executable = per-chip program
+    )
+    mf = hlo_analysis.model_flops(cfg, shape)
+    cell.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        probe_s=round(t_probe, 2),
+        memory_analysis=mem_d,
+        hlo_flops_per_chip=probed["flops"],
+        hlo_bytes_per_chip=probed["bytes"],
+        coll_bytes_per_chip=probed["coll_bytes"],
+        per_layer_repeat={
+            k: probed[k + "_per_layer_repeat"] for k in ("flops", "bytes", "coll_bytes")
+        },
+        coll_by_kind_2repeat=probed["coll_by_kind_2repeat"],
+        raw_while_counted_once=raw,
+        roofline=terms,
+        model_flops_global=mf,
+        model_flops_per_chip=mf / chips,
+        useful_flop_ratio=(mf / chips / probed["flops"]) if probed["flops"] else None,
+    )
+    if verbose:
+        ma = mem_d.get("temp_size_in_bytes", 0) + mem_d.get("argument_size_in_bytes", 0)
+        print(
+            f"  ok  lower {t_lower:5.1f}s compile {t_compile:6.1f}s probe {t_probe:6.1f}s  "
+            f"bytes/dev {ma/2**30:7.2f} GiB  "
+            f"flops/chip {probed['flops']:,.3g}  "
+            f"coll {probed['coll_bytes']/2**20:,.1f} MiB  "
+            f"bottleneck {terms['bottleneck']}  "
+            f"useful {cell['useful_flop_ratio'] and round(cell['useful_flop_ratio'], 3)}"
+        )
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/dryrun_out")
+    ap.add_argument("--q-chunk", type=int, default=1024)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    archs = list(configs.ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+                print(f"[dryrun] {tag}")
+                try:
+                    cell = run_cell(
+                        arch, shape, multi,
+                        q_chunk=args.q_chunk, microbatches=args.microbatches,
+                    )
+                except Exception:
+                    failures += 1
+                    cell = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if multi else "16x16",
+                        "status": "error",
+                        "traceback": traceback.format_exc(limit=12),
+                    }
+                    print("  ERROR")
+                    print(cell["traceback"])
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(cell, f, indent=1)
+    print(f"[dryrun] done, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

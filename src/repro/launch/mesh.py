@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The production topology is a TPU v5e pod of
+16 x 16 = 256 chips; the multi-pod configuration is 2 such pods (512 chips)
+with a leading "pod" axis whose links are the slow inter-pod interconnect.
+
+Axis roles:
+    pod    slow inter-pod axis: ZeRO-3 parameter sharding, PaLD z-streaming
+    data   fast intra-pod axis: DP/FSDP, batch sharding
+    model  fast intra-pod axis: TP/EP (heads, ff, experts, vocab)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — the "
+            "dry-run entrypoint must set xla_force_host_platform_device_count "
+            "before any jax import"
+        )
+    arr = np.asarray(devs[:n]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")) -> Mesh:
+    """Small mesh over however many host devices tests forced."""
+    n = math.prod(shape)
+    devs = jax.devices()
+    assert len(devs) >= n, f"need {n} devices, have {len(devs)}"
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)

@@ -1,0 +1,145 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+Nothing in this module allocates device memory: model/optimizer state comes
+from ``jax.eval_shape`` and inputs are ShapeDtypeStructs with NamedShardings
+attached, so ``jax.jit(...).lower(...)`` can compile 512-chip programs on a
+single-CPU host.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model
+from repro.sharding import partition
+from repro.train import serve_step, train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _with_shardings(shapes: Any, shardings: Any) -> Any:
+    return jax.tree.map(
+        lambda s, sh: SDS(s.shape, s.dtype, sharding=sh), shapes, shardings
+    )
+
+
+def _cast_tree(shapes: Any, dtype) -> Any:
+    def c(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return SDS(s.shape, dtype)
+        return s
+    return jax.tree.map(c, shapes)
+
+
+# ---------------------------------------------------------------------------
+# model / optimizer state
+# ---------------------------------------------------------------------------
+def state_specs(cfg: ModelConfig, mesh: Mesh):
+    """(state ShapeDtypeStructs with shardings, logical spec tree)."""
+    key = SDS((2,), jnp.uint32)
+    cap: dict[str, Any] = {}
+
+    def build(k):
+        state, specs = train_step.init_state(cfg, k)
+        cap["specs"] = specs  # pure-static string tree; capture, don't trace
+        return state
+
+    shapes = jax.eval_shape(build, key)
+    specs = cap["specs"]
+    psh = partition.param_shardings(
+        specs["params"], cfg.sharding_profile, mesh, shapes["params"]
+    )
+    shardings = {
+        "params": psh,
+        "opt": {"m": psh, "v": psh},
+        "step": NamedSharding(mesh, P()),
+    }
+    return _with_shardings(shapes, shardings), shardings
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, dtype=jnp.bfloat16):
+    """Serving-time parameter stand-ins (bf16 on-device copies)."""
+    key = SDS((2,), jnp.uint32)
+    model = Model(cfg)
+    cap: dict[str, Any] = {}
+
+    def build(k):
+        params, specs = model.init(k)
+        cap["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(build, key)
+    shardings = partition.param_shardings(
+        cap["specs"], cfg.sharding_profile, mesh, shapes
+    )
+    return _with_shardings(_cast_tree(shapes, dtype), shardings), shardings
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
+    model = Model(cfg)
+    shapes = jax.eval_shape(
+        lambda: model.init_caches(batch, max_len, dtype=jnp.bfloat16)
+    )
+    shardings = serve_step.cache_shardings(cfg, mesh, batch, max_len)
+    return _with_shardings(shapes, shardings), shardings
+
+
+# ---------------------------------------------------------------------------
+# inputs
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Input stand-ins for one step of the given shape kind.
+
+    train    {"tokens"|"embeds", "labels"}: full (B, S) sequences
+    prefill  {"tokens"|"embeds"}: the prompt batch
+    decode   one new token (B, 1) (or (B, 1, d) embeds)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    bspec = partition.batch_pspec(mesh, B)
+    tok_sh = NamedSharding(mesh, P(*bspec, None))
+    emb_sh = NamedSharding(mesh, P(*bspec, None, None))
+    stub = cfg.modality in ("audio", "vlm")
+
+    def toks(s):
+        return SDS((B, s), jnp.int32, sharding=tok_sh)
+
+    def embs(s):
+        return SDS((B, s, cfg.d_model), jnp.bfloat16, sharding=emb_sh)
+
+    if shape.kind == "train":
+        batch = {"embeds": embs(S)} if stub else {"tokens": toks(S)}
+        batch["labels"] = toks(S)
+        return batch
+    if shape.kind == "prefill":
+        return {"embeds": embs(S)} if stub else {"tokens": toks(S)}
+    # decode: one token against a cache of S slots
+    return {"embeds": embs(1)} if stub else {"tokens": toks(1)}
+
+
+def cell_lowerable(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                   q_chunk: int = 1024, microbatches: int = 1):
+    """(fn, example_args) ready for ``jax.jit(fn).lower(*example_args)``."""
+    if shape.kind == "train":
+        step = train_step.make_train_step(
+            cfg, microbatches=microbatches, q_chunk=q_chunk
+        )
+        state, _ = state_specs(cfg, mesh)
+        return step, (state, batch_specs(cfg, shape, mesh))
+    if shape.kind == "prefill":
+        step = serve_step.make_prefill_step(cfg, q_chunk=q_chunk)
+        params, _ = param_specs(cfg, mesh)
+        caches, _ = cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        return step, (params, batch_specs(cfg, shape, mesh), caches)
+    # decode
+    step = serve_step.make_decode_step(cfg)
+    params, _ = param_specs(cfg, mesh)
+    caches, _ = cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+    batch = batch_specs(cfg, shape, mesh)
+    token = batch.get("tokens", batch.get("embeds"))
+    pos = SDS((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return step, (params, token, caches, pos)

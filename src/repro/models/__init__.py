@@ -1,0 +1,2 @@
+"""LM substrate: layers, MoE, Mamba2, generic decoder."""
+from . import layers, mamba2, model, moe, transformer  # noqa: F401

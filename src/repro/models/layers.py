@@ -1,0 +1,283 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention, gated MLP.
+
+Functional style: ``init_*`` returns ``(params, specs)`` where ``specs``
+mirrors the param tree with *logical* axis-name tuples per dimension
+(mapped to mesh axes by ``repro.sharding.partition``).  ``apply`` functions
+are pure.
+
+Attention is computed with fp32 softmax and **query chunking** (a scan over
+query blocks) so peak score memory is O(q_chunk * kv_len) instead of
+O(seq^2) — required for the 32k prefill shapes to fit v5e HBM.  Sliding
+windows, GQA, attention-logit softcapping (gemma2) and QKV bias (qwen2.5)
+are all supported.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# norms / embeddings / rope
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": ("embed_nosplit",)}
+
+
+def rmsnorm(params, x: Array, eps: float, f32: bool = True) -> Array:
+    if f32:
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+        return y.astype(x.dtype)
+    # bf16 normalize, f32 statistics: avoids materializing a full f32 copy
+    # of the residual at the layer boundary — which XLA otherwise hoists
+    # into the scan stash, doubling (bf16 + f32 = 3x) the saved bytes per
+    # layer (§Perf 1.3)
+    var = (jnp.einsum("...d,...d->...", x, x,
+                      preferred_element_type=jnp.float32) / x.shape[-1])
+    r = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * r * params["scale"].astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    emb = jax.random.normal(key, (vocab, d), dtype) * 0.02
+    return {"embedding": emb}, {"embedding": ("vocab", "embed")}
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Rotary embedding.  x: (..., seq, heads, head_dim), positions: (seq,) or
+    broadcastable to x's batch/seq dims."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg):
+    """Attention parameters in explicit 3-D head layout.
+
+    Keeping the head axis as a real tensor dimension (instead of a flat
+    h*hd matrix) is what makes GQA tensor parallelism expressible in GSPMD:
+    the 'q_heads' / 'kv_heads' logical axes shard over 'model' only when the
+    head count divides it (see repro.sharding.partition).  KV heads usually
+    don't (GQA kv=8 < model=16) and stay replicated — Megatron-style GQA TP.
+    """
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    params = {
+        "wq": jax.random.normal(ks[0], (d, h, hd), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, kv, hd), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, kv, hd), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (h, hd, d), jnp.float32) * s,
+    }
+    specs = {
+        "wq": ("embed", "q_heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("q_heads", None, "embed"),
+    }
+    if cfg.qkv_bias:
+        params |= {
+            "bq": jnp.zeros((h, hd), jnp.float32),
+            "bk": jnp.zeros((kv, hd), jnp.float32),
+            "bv": jnp.zeros((kv, hd), jnp.float32),
+        }
+        specs |= {
+            "bq": ("q_heads", None),
+            "bk": ("kv_heads", None),
+            "bv": ("kv_heads", None),
+        }
+    return params, specs
+
+
+def _attend(
+    q: Array,          # (B, Sq, H, hd)  flat query heads
+    k: Array,          # (B, Skv, KV, hd)
+    v: Array,          # (B, Skv, KV, hd)
+    q_positions: Array,   # (Sq,) global token positions of queries
+    kv_positions: Array,  # (Skv,) global token positions of kv slots (-1 invalid)
+    window: Optional[int],
+    softcap: Optional[float],
+    out_f32: bool = True,
+) -> Array:
+    """Masked softmax attention for one query block.
+
+    The query head axis stays FLAT (H, not (KV, G)) so a 'model'-axis shard
+    of q-heads remains expressible; K/V are broadcast to H inside the
+    einsums (jnp.repeat of a replicated operand — XLA fuses it).  QK/PV
+    einsums run in the input dtype with fp32 accumulation; softmax is fp32;
+    probs are cast back to the input dtype so the largest intermediate
+    (scores) exists once in fp32 and once in bf16, not twice in fp32.
+    """
+    H, KV = q.shape[2], k.shape[2]
+    g = H // KV
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)   # (B, Skv, H, hd)
+        v = jnp.repeat(v, g, axis=2)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum(
+        "bqhe,bshe->bhqs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = kv_positions[None, :] <= q_positions[:, None]      # causal
+    mask &= kv_positions[None, :] >= 0                        # validity
+    if window is not None:
+        mask &= kv_positions[None, :] > q_positions[:, None] - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    if out_f32:
+        out = jnp.einsum(
+            "bhqs,bshe->bqhe", probs, v, preferred_element_type=jnp.float32
+        )
+    else:
+        out = jnp.einsum("bhqs,bshe->bqhe", probs, v)
+    return out
+
+
+def attention_apply(
+    params,
+    cfg,
+    x: Array,                      # (B, S, d)
+    *,
+    positions: Array,              # (S,) global positions of x tokens
+    window: Optional[int],
+    kv_cache: Optional[dict] = None,   # {"k","v"}: (B, Sc, KV, hd), "pos": scalar
+    q_chunk: int = 512,
+    unroll: bool = False,              # python-loop the q chunks (cost probes)
+) -> tuple[Array, Optional[dict]]:
+    """Returns (output (B, S, d), updated kv_cache or None).
+
+    Without a cache: causal self-attention over x (train / one-shot scoring).
+    With a cache: entries of x are written at ``positions`` into the
+    (possibly windowed, circular) cache, then attend over the whole cache —
+    used for both prefill (S = prompt length) and decode (S = 1).
+    """
+    B, S, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    from repro.sharding import partition as _part
+    use_seq_tp = h % _part.model_axis_size() != 0
+    if use_seq_tp and cfg.attn_seq_proj:
+        # §Perf 2 (Megatron-SP analogue): when heads can't shard, split the
+        # PROJECTION compute by sequence too — weights are replicated over
+        # 'model', but each chip projects only its sequence slice
+        x = _part.seq_shard(x, dim=1)
+    q = jnp.einsum("bsd,dhe->bshe", x, params["wq"])    # (B, S, H, hd)
+    kx = jnp.einsum("bsd,dke->bske", x, params["wk"])   # (B, S, KV, hd)
+    vx = jnp.einsum("bsd,dke->bske", x, params["wv"])
+    if cfg.qkv_bias:
+        q, kx, vx = q + params["bq"], kx + params["bk"], vx + params["bv"]
+    q = rope(q, positions, cfg.rope_theta)
+    kx = rope(kx, positions, cfg.rope_theta)
+
+    # context parallelism: when q-heads don't divide the 'model' axis (GQA
+    # head counts often don't), shard the query SEQUENCE dim over 'model'
+    # instead — attention compute splits by q blocks, K/V are gathered once
+    if use_seq_tp:
+        q = _part.seq_shard(q, dim=1)
+
+    softcap = cfg.attn_logit_softcap
+    new_cache = None
+    if kv_cache is None:
+        k_all, v_all = kx, vx
+        kv_positions = positions
+    else:
+        Sc = kv_cache["k"].shape[1]
+        # circular write for windowed caches; identity for full caches
+        slots = positions % Sc
+        cdt = kv_cache["k"].dtype
+        # positions are batch-uniform, so cache writes use
+        # dynamic-update-slice wherever the written span is contiguous —
+        # DUS partitions as a masked select under GSPMD, whereas the
+        # batched scatter triggers "involuntary full rematerialization"
+        # (replicate + repartition) on seq-sharded caches.
+        if S <= Sc:
+            # decode (S=1) and fresh prefill: span [slots[0], slots[0]+S)
+            # is contiguous (a prefill that wrapped the circular window
+            # would not be, but serving always prefills a fresh cache)
+            k_all = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["k"], kx.astype(cdt), slots[0], axis=1)
+            v_all = jax.lax.dynamic_update_slice_in_dim(
+                kv_cache["v"], vx.astype(cdt), slots[0], axis=1)
+        else:
+            # prompt longer than the sliding window: only the last Sc
+            # tokens survive; their slots tile the cache exactly once
+            kl, vl, sl = kx[:, -Sc:], vx[:, -Sc:], slots[-Sc:]
+            k_all = jnp.zeros_like(kv_cache["k"]).at[:, sl].set(kl.astype(cdt))
+            v_all = jnp.zeros_like(kv_cache["v"]).at[:, sl].set(vl.astype(cdt))
+        cpos = kv_cache["pos"]  # first position being written this call
+        last = cpos + S - 1     # last global position now present
+        slot_ids = jnp.arange(Sc)
+        # token held by slot s = largest t <= last with t % Sc == s
+        tok = last - ((last - slot_ids) % Sc)
+        kv_positions = jnp.where(tok >= 0, tok, -1)
+        new_cache = {"k": k_all, "v": v_all, "pos": cpos + S}
+
+    # rematerialize scores in the backward pass: without this, scanning over
+    # q chunks stacks every chunk's (bx, S_kv) score block as a saved
+    # residual — measured 7 GiB/chip at train_4k before the checkpoint
+    def q_block(qc, qpos):
+        return _attend(qc, k_all, v_all, qpos, kv_positions, window, softcap,
+                       cfg.attn_out_f32)
+
+    if S > q_chunk and S % q_chunk == 0:
+        nc = S // q_chunk
+        qs = q.reshape(B, nc, q_chunk, h, hd)
+        ps = positions.reshape(nc, q_chunk)
+        if unroll:
+            # identical math, loop unrolled so XLA cost analysis counts
+            # every chunk (while bodies are counted once)
+            outs = [q_block(qs[:, i], ps[i]) for i in range(nc)]
+            out = jnp.stack(outs, axis=1).reshape(B, S, h, hd)
+        else:
+            out = jax.lax.map(
+                jax.checkpoint(lambda args: q_block(args[0], args[1])),
+                (jnp.moveaxis(qs, 1, 0), ps),
+            )  # (nc, B, q_chunk, H, hd)
+            out = jnp.moveaxis(out, 0, 1).reshape(B, S, h, hd)
+    else:
+        out = q_block(q, positions)
+
+    out = out.astype(x.dtype)
+    return jnp.einsum("bshe,hed->bsd", out, params["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, ff: int):
+    ks = jax.random.split(key, 3)
+    params = {
+        "w_gate": jax.random.normal(ks[0], (d, ff), jnp.float32) * d ** -0.5,
+        "w_up": jax.random.normal(ks[1], (d, ff), jnp.float32) * d ** -0.5,
+        "w_down": jax.random.normal(ks[2], (ff, d), jnp.float32) * ff ** -0.5,
+    }
+    specs = {
+        "w_gate": ("embed", "ff"),
+        "w_up": ("embed", "ff"),
+        "w_down": ("ff", "embed"),
+    }
+    return params, specs
+
+
+def mlp_apply(params, x: Array, act: str) -> Array:
+    a = jax.nn.silu if act == "silu" else (lambda t: jax.nn.gelu(t, approximate=True))
+    return (a(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]

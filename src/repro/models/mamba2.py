@@ -1,0 +1,198 @@
+"""Mamba2 (state-space duality / SSD) mixer block.
+
+Chunked SSD scan for training/prefill (O(L) memory, MXU-friendly block
+einsums) and an O(1)-state single-step path for decode.  Heads are sharded
+over the ``model`` mesh axis (head-dim groups stay whole per shard); the
+B/C group projections (n_groups=1 at the assigned configs) are replicated.
+
+The jamba hybrid uses this same block (DESIGN.md §9: Mamba-1 -> Mamba2
+substitution).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def init_mamba(key, cfg):
+    m = cfg.mamba
+    d = cfg.d_model
+    d_in = m.expand * d
+    H = d_in // m.head_dim
+    gn = m.n_groups * m.d_state
+    ks = jax.random.split(key, 9)
+    s = d ** -0.5
+    params = {
+        "in_z": jax.random.normal(ks[0], (d, d_in), jnp.float32) * s,
+        "in_x": jax.random.normal(ks[1], (d, d_in), jnp.float32) * s,
+        "in_B": jax.random.normal(ks[2], (d, gn), jnp.float32) * s,
+        "in_C": jax.random.normal(ks[3], (d, gn), jnp.float32) * s,
+        "in_dt": jax.random.normal(ks[4], (d, H), jnp.float32) * s,
+        "conv_x": jax.random.normal(ks[5], (m.conv_width, d_in), jnp.float32) * 0.1,
+        "conv_B": jax.random.normal(ks[6], (m.conv_width, gn), jnp.float32) * 0.1,
+        "conv_C": jax.random.normal(ks[7], (m.conv_width, gn), jnp.float32) * 0.1,
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((d_in,), jnp.float32),
+        "out": jax.random.normal(ks[8], (d_in, d), jnp.float32) * d_in ** -0.5,
+    }
+    specs = {
+        "in_z": ("embed", "mamba_inner"),
+        "in_x": ("embed", "mamba_inner"),
+        "in_B": ("embed", None),
+        "in_C": ("embed", None),
+        "in_dt": ("embed", "mamba_heads"),
+        "conv_x": (None, "mamba_inner"),
+        "conv_B": (None, None),
+        "conv_C": (None, None),
+        "A_log": ("mamba_heads",),
+        "D": ("mamba_heads",),
+        "dt_bias": ("mamba_heads",),
+        "norm": ("mamba_inner",),
+        "out": ("mamba_inner", "embed"),
+    }
+    return params, specs
+
+
+def _causal_conv(x: Array, w: Array, state: Array | None):
+    """Depthwise causal conv.  x: (B, L, C), w: (K, C).
+    state: (B, K-1, C) trailing context or None (zero history).
+    Returns (y (B, L, C), new_state)."""
+    B, L, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, K-1+L, C)
+    y = sum(xp[:, i : i + L, :] * w[i] for i in range(K))
+    new_state = xp[:, L:, :] if K > 1 else state
+    return y, new_state
+
+
+def _ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, h0: Array | None):
+    """Chunked SSD.  xh: (B,L,H,P), dt: (B,L,H), A: (H,), Bm/Cm: (B,L,G,N).
+    Returns (y (B,L,H,P), h_final (B,H,P,N))."""
+    B, L, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    hpg = H // G
+    Q = min(chunk, L)
+    while L % Q:
+        Q -= 1
+    nc = L // Q
+
+    def to_heads(t):  # (B,L,G,N) -> (B,L,H,N)
+        return jnp.repeat(t, hpg, axis=2)
+
+    Bh, Ch = to_heads(Bm), to_heads(Cm)
+    a = dt * A  # (B, L, H), negative log-decays
+    xr = xh.reshape(B, nc, Q, H, P)
+    dtr = dt.reshape(B, nc, Q, H)
+    ar = a.reshape(B, nc, Q, H)
+    Br = Bh.reshape(B, nc, Q, H, N)
+    Cr = Ch.reshape(B, nc, Q, H, N)
+    acs = jnp.cumsum(ar, axis=2)  # (B, nc, Q, H)
+
+    # intra-chunk (diagonal) term
+    seg = acs[:, :, :, None, :] - acs[:, :, None, :, :]         # (B,nc,Q_i,Q_j,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcihn,bcjhn->bcijh", Cr, Br)               # (B,nc,Q,Q,H)
+    xdt = xr * dtr[..., None]
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", CB * M, xdt)
+
+    # per-chunk input->state contribution
+    decay_to_end = jnp.exp(acs[:, :, -1:, :] - acs)             # (B,nc,Q,H)
+    states = jnp.einsum("bcjhn,bcjhp->bchpn", Br * (decay_to_end * dtr)[..., None], xr)
+    chunk_decay = jnp.exp(acs[:, :, -1, :])                     # (B,nc,H)
+
+    # inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_out = h      # state *entering* this chunk
+        h = h * dec[:, :, None, None] + st
+        return h, h_out
+
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    h_final, h_enter = jax.lax.scan(step, h0, xs)
+    h_enter = jnp.moveaxis(h_enter, 0, 1)                        # (B,nc,H,P,N)
+    y_off = jnp.einsum("bcihn,bchpn->bcihp", Cr, h_enter) * jnp.exp(acs)[..., None]
+
+    y = (y_diag + y_off).reshape(B, L, H, P)
+    return y, h_final
+
+
+def mamba_apply(params, cfg, x: Array, *, state: dict | None = None):
+    """x: (B, L, d).  state: {"conv_x","conv_B","conv_C","ssm"} or None.
+    Returns (y (B, L, d), new_state or None)."""
+    m = cfg.mamba
+    B, L, d = x.shape
+    d_in = m.expand * d
+    H = d_in // m.head_dim
+    P = m.head_dim
+    G, N = m.n_groups, m.d_state
+
+    z = x @ params["in_z"]
+    xs = x @ params["in_x"]
+    Bm = x @ params["in_B"]
+    Cm = x @ params["in_C"]
+    dt = jax.nn.softplus(x @ params["in_dt"] + params["dt_bias"])  # (B,L,H)
+
+    st = state or {}
+    xs, cs_x = _causal_conv(xs, params["conv_x"], st.get("conv_x"))
+    Bm, cs_B = _causal_conv(Bm, params["conv_B"], st.get("conv_B"))
+    Cm, cs_C = _causal_conv(Cm, params["conv_C"], st.get("conv_C"))
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    A = -jnp.exp(params["A_log"])  # (H,)
+    xh = xs.reshape(B, L, H, P).astype(jnp.float32)
+    Bh = Bm.reshape(B, L, G, N).astype(jnp.float32)
+    Ch = Cm.reshape(B, L, G, N).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    if L > 1:
+        # chunked SSD for train and prefill (carries incoming state if any)
+        y, h_final = _ssd_chunked(xh, dtf, A, Bh, Ch, m.chunk, st.get("ssm"))
+    else:
+        # single-step recurrence for decode
+        h = st.get("ssm")
+        if h is None:
+            h = jnp.zeros((B, H, P, N), jnp.float32)
+
+        def step(h, inp):
+            xt, dtt, Bt, Ct = inp  # (B,H,P),(B,H),(B,G,N),(B,G,N)
+            hpg = H // G
+            Bt = jnp.repeat(Bt, hpg, axis=1)  # (B,H,N)
+            Ct = jnp.repeat(Ct, hpg, axis=1)
+            da = jnp.exp(dtt * A)              # (B,H)
+            h = h * da[:, :, None, None] + jnp.einsum(
+                "bhp,bhn->bhpn", xt * dtt[..., None], Bt
+            )
+            y = jnp.einsum("bhn,bhpn->bhp", Ct, h)
+            return h, y
+
+        xs_seq = (
+            jnp.moveaxis(xh, 1, 0),
+            jnp.moveaxis(dtf, 1, 0),
+            jnp.moveaxis(Bh, 1, 0),
+            jnp.moveaxis(Ch, 1, 0),
+        )
+        h_final, ys = jax.lax.scan(step, h, xs_seq)
+        y = jnp.moveaxis(ys, 0, 1)  # (B,L,H,P)
+
+    y = y + xh * params["D"][:, None]
+    y = y.reshape(B, L, d_in).astype(x.dtype)
+    # gated RMSNorm then output projection
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+         * params["norm"]).astype(x.dtype)
+    out = y @ params["out"]
+    new_state = None
+    if state is not None:
+        new_state = {"conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C, "ssm": h_final}
+    return out, new_state

@@ -1,0 +1,90 @@
+"""Model façade: build/init/apply + modality frontend stubs.
+
+Per the brief, ``[audio]`` / ``[vlm]`` architectures specify the transformer
+*backbone* only; the modality frontend is a stub whose job is to provide
+precomputed frame/patch embeddings with the right shapes (see
+``repro.launch.dryrun.input_specs``).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import transformer
+
+Array = jnp.ndarray
+
+
+def cast_floats(tree, dtype):
+    def c(x):
+        if isinstance(x, jnp.ndarray) and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(c, tree)
+
+
+class Model:
+    """Functional wrapper binding a config to init/apply entry points."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- params -------------------------------------------------------------
+    def init(self, key):
+        return transformer.init(key, self.cfg)
+
+    # -- full-sequence forward (train / scoring) ----------------------------
+    def apply(self, params, batch: dict, *, q_chunk: int = 512):
+        """batch: {"tokens": (B,S)} or {"embeds": (B,S,d)}.
+        Returns (logits, aux_loss)."""
+        logits, _, aux = transformer.forward(
+            params, self.cfg,
+            tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            q_chunk=q_chunk,
+        )
+        return logits, aux
+
+    # -- serving ------------------------------------------------------------
+    def init_caches(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return transformer.init_caches(self.cfg, batch, max_len, dtype)
+
+    def prefill(self, params, batch: dict, caches, *, q_chunk: int = 512):
+        """Run the prompt through the model, filling caches.
+        Returns (last-token logits (B, V), caches)."""
+        logits, caches, _ = transformer.forward(
+            params, self.cfg,
+            tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            caches=caches, q_chunk=q_chunk, last_only=True,
+        )
+        return logits[:, -1], caches
+
+    def decode_step(self, params, token: Array, caches, pos: Array):
+        """One decode step.  token: (B, 1) int32 (or (B,1,d) embeds);
+        pos: scalar int32 position.  Returns (logits (B, V), caches)."""
+        kw: dict[str, Any] = {}
+        if token.ndim == 3:
+            kw["embeds"] = token
+        else:
+            kw["tokens"] = token
+        logits, caches, _ = transformer.forward(
+            params, self.cfg,
+            positions=jnp.full((1,), pos, jnp.int32),
+            caches=caches, **kw,
+        )
+        return logits[:, -1], caches
+
+
+# ---------------------------------------------------------------------------
+# modality frontend stubs
+# ---------------------------------------------------------------------------
+def audio_frontend_stub(key, batch: int, seq: int, d_model: int, dtype=jnp.bfloat16):
+    """Pretend-EnCodec frame embeddings (musicgen): (B, S, d)."""
+    return jax.random.normal(key, (batch, seq, d_model), dtype) * 0.02
+
+
+def vision_frontend_stub(key, batch: int, seq: int, d_model: int, dtype=jnp.bfloat16):
+    """Pretend-InternViT patch embeddings projected to LM width: (B, S, d)."""
+    return jax.random.normal(key, (batch, seq, d_model), dtype) * 0.02

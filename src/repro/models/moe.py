@@ -1,0 +1,114 @@
+"""Top-k capacity-based Mixture-of-Experts with expert parallelism.
+
+MaxText-style "dropping" implementation that is pure-pjit friendly: tokens
+are grouped (group = tokens that stay on one data shard), each group
+dispatches into an (experts, capacity) buffer with one-hot einsums, the
+expert FFN runs with the expert dimension sharded over the ``model`` mesh
+axis (EP), and a combine einsum scatters results back.  All shapes static;
+overflowing tokens beyond ``capacity_factor * k * T / E`` are dropped
+(standard at-scale behaviour).
+
+Dispatch/combine einsum FLOPs are ~0.2% of expert FLOPs at the assigned
+configs (DESIGN.md), so HLO_FLOPs stays honest w.r.t. 6*N_active*D.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def init_moe(key, d: int, moe_cfg):
+    e, ff = moe_cfg.n_experts, moe_cfg.d_ff
+    ks = jax.random.split(key, 4)
+    params = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * d ** -0.5,
+        "w_gate": jax.random.normal(ks[1], (e, d, ff), jnp.float32) * d ** -0.5,
+        "w_up": jax.random.normal(ks[2], (e, d, ff), jnp.float32) * d ** -0.5,
+        "w_down": jax.random.normal(ks[3], (e, ff, d), jnp.float32) * ff ** -0.5,
+    }
+    specs = {
+        "router": ("embed_nosplit", None),
+        "w_gate": ("experts", "embed", None),
+        "w_up": ("experts", "embed", None),
+        "w_down": ("experts", None, "embed"),
+    }
+    return params, specs
+
+
+def moe_apply(
+    params,
+    x: Array,               # (B, S, d)
+    moe_cfg,
+    act: str,
+    *,
+    group_tokens: int | None = None,   # target tokens per dispatch group
+    shard_constraints: bool = False,
+) -> tuple[Array, Array]:
+    """Returns (output (B, S, d), router aux loss scalar).
+
+    Tokens are split into groups of ~``group_tokens`` before dispatch so the
+    (g, tg, e, cap) dispatch/combine tensors stay O(k * T * tg) total instead
+    of O(k * T^2 / g) — with tg=512 the dispatch einsum FLOPs are ~2% of the
+    expert FLOPs at the assigned MoE configs.  The group dim inherits the
+    batch sharding under pjit (g is a multiple of the data-shard count
+    whenever B is).
+    """
+    B, S, d = x.shape
+    e, k = moe_cfg.n_experts, moe_cfg.top_k
+    T = B * S
+    tg = min(group_tokens or moe_cfg.group_tokens, T)
+    while T % tg:
+        tg -= 1
+    g = T // tg
+    xt = x.reshape(g, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xt, params["router"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (g, tg, e)
+    gate_vals, ids = jax.lax.top_k(probs, k)                      # (g, tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    cap = int(moe_cfg.capacity_factor * k * tg / e)
+    cap = max(cap, k)
+
+    # expert-axis sharding helper: GSPMD does not reliably infer that the
+    # dispatch/combine chain should shard its `e` dim with the expert-
+    # sharded weights, and replicates it over 'model' instead (measured 5x
+    # flop inflation / 77 GB all-reduces at phi3.5 train_4k; §Perf 1)
+    if shard_constraints:
+        from repro.sharding import partition as _part
+
+        def on_e(t, dim):
+            return _part.shard_dim(t, dim, "model")
+    else:
+        def on_e(t, dim):
+            return t
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = on_e(jax.nn.one_hot(ids, e, dtype=jnp.int32), 3)    # (g, tg, k, e)
+    flat = onehot.reshape(g, tg * k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                            # (g, tg*k, e)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(g, tg, k)          # (g, tg, k)
+    keep = pos < cap
+
+    # dispatch[g, t, e, c] in {0,1}; combine carries the gate weight
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype) * keep[..., None]
+    disp = on_e(jnp.einsum("gtke,gtkc->gtec", onehot.astype(x.dtype), pos_oh), 2)
+    comb = on_e(jnp.einsum(
+        "gtke,gtkc->gtec", onehot.astype(jnp.float32), pos_oh.astype(jnp.float32) * gate_vals[..., None]
+    ).astype(x.dtype), 2)
+
+    xe = on_e(jnp.einsum("gtec,gtd->gecd", disp, xt), 1)          # (g, e, cap, d)
+    a = jax.nn.silu if act == "silu" else (lambda t: jax.nn.gelu(t, approximate=True))
+    h = a(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])) * jnp.einsum(
+        "gecd,edf->gecf", xe, params["w_up"]
+    )
+    ye = on_e(jnp.einsum("gecf,efd->gecd", on_e(h, 1), params["w_down"]), 1)
+    y = jnp.einsum("gecd,gtec->gtd", ye, comb).reshape(B, S, d)
+
+    # load-balance aux loss (Switch-style)
+    frac_tokens = jnp.mean(onehot.astype(jnp.float32), axis=(1, 2))  # (g, e)
+    frac_probs = jnp.mean(probs, axis=1)                              # (g, e)
+    aux = e * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    return y, aux * moe_cfg.router_aux_coef

@@ -1,0 +1,227 @@
+"""Generic decoder-only model covering all assigned architectures.
+
+The layer stack is ``n_repeats`` repetitions of a static ``pattern`` of
+sublayers (attn/mamba mixer + dense/moe ffn).  Parameters for each pattern
+position are stacked over repeats, and the stack is applied with
+``jax.lax.scan`` so the lowered HLO is O(pattern) in size — essential for
+compiling 512-device dry-runs of 72-layer models on a CPU host.
+
+Per-layer activation rematerialization (`cfg.remat`) wraps the scan body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba2, moe
+from repro.configs.base import ModelConfig
+
+Array = jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_sublayer(key, cfg: ModelConfig, spec):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+    p["norm"], s["norm"] = L.init_rmsnorm(cfg.d_model)
+    if spec.mixer == "attn":
+        p["mixer"], s["mixer"] = L.init_attention(ks[0], cfg)
+    else:
+        p["mixer"], s["mixer"] = mamba2.init_mamba(ks[0], cfg)
+    if cfg.use_post_norm:
+        p["post_norm"], s["post_norm"] = L.init_rmsnorm(cfg.d_model)
+    if spec.ffn != "none":
+        p["ffn_norm"], s["ffn_norm"] = L.init_rmsnorm(cfg.d_model)
+        if spec.ffn == "dense":
+            p["ffn"], s["ffn"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+        else:
+            p["ffn"], s["ffn"] = moe.init_moe(ks[1], cfg.d_model, cfg.moe)
+        if cfg.use_post_norm:
+            p["ffn_post_norm"], s["ffn_post_norm"] = L.init_rmsnorm(cfg.d_model)
+    return p, s
+
+
+def init(key, cfg: ModelConfig):
+    """Returns (params, specs). Per-position params stacked over repeats."""
+    ks = jax.random.split(key, len(cfg.pattern) + 3)
+    params: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    params["embed"], specs["embed"] = L.init_embedding(
+        ks[0], cfg.padded_vocab, cfg.d_model
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"], specs["lm_head"] = L.init_embedding(
+            ks[1], cfg.padded_vocab, cfg.d_model
+        )
+    params["final_norm"], specs["final_norm"] = L.init_rmsnorm(cfg.d_model)
+
+    blocks, bspecs = [], []
+    for i, spec in enumerate(cfg.pattern):
+        def one(k):
+            return _init_sublayer(k, cfg, spec)[0]
+
+        rep_keys = jax.random.split(ks[i + 3], cfg.n_repeats)
+        stacked = jax.vmap(one)(rep_keys)
+        _, s = _init_sublayer(ks[i + 3], cfg, spec)
+        s = jax.tree.map(
+            lambda ax: ("layers",) + ax,
+            s,
+            is_leaf=lambda t: isinstance(t, tuple) and all(
+                a is None or isinstance(a, str) for a in t
+            ),
+        )
+        blocks.append(stacked)
+        bspecs.append(s)
+    params["blocks"] = blocks
+    specs["blocks"] = bspecs
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+def _apply_sublayer(p, cfg: ModelConfig, spec, x, *, positions, cache, q_chunk):
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps, f32=cfg.norm_f32)
+    if spec.mixer == "attn":
+        h, new_cache = L.attention_apply(
+            p["mixer"], cfg, h,
+            positions=positions, window=spec.window, kv_cache=cache,
+            q_chunk=q_chunk, unroll=cfg.probe_unroll,
+        )
+    else:
+        h, new_cache = mamba2.mamba_apply(p["mixer"], cfg, h, state=cache)
+    if cfg.use_post_norm:
+        h = L.rmsnorm(p["post_norm"], h, cfg.norm_eps, f32=cfg.norm_f32)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn != "none":
+        h = L.rmsnorm(p["ffn_norm"], x, cfg.norm_eps, f32=cfg.norm_f32)
+        if spec.ffn == "dense":
+            h = L.mlp_apply(p["ffn"], h, cfg.act)
+        else:
+            h, aux = moe.moe_apply(
+                p["ffn"], h, cfg.moe, cfg.act,
+                shard_constraints=cfg.moe_shard_constraints,
+            )
+        if cfg.use_post_norm:
+            h = L.rmsnorm(p["ffn_post_norm"], h, cfg.norm_eps, f32=cfg.norm_f32)
+        x = x + h
+    return x, new_cache, aux
+
+
+def _stack_body(carry, xs, *, cfg: ModelConfig, positions, q_chunk):
+    x, aux = carry
+    block_params, caches = xs
+    new_caches = []
+    for i, spec in enumerate(cfg.pattern):
+        cache_i = None if caches is None else caches[i]
+        x, nc, a = _apply_sublayer(
+            block_params[i], cfg, spec, x,
+            positions=positions, cache=cache_i, q_chunk=q_chunk,
+        )
+        aux = aux + a
+        new_caches.append(nc)
+    if caches is None:
+        return (x, aux), None
+    return (x, aux), tuple(new_caches)
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    *,
+    tokens: Optional[Array] = None,      # (B, S) int32
+    embeds: Optional[Array] = None,      # (B, S, d) for audio/vlm stubs
+    positions: Optional[Array] = None,   # (S,)
+    caches=None,                         # pytree stacked over repeats, or None
+    q_chunk: int = 512,
+    last_only: bool = False,             # LM head on the final position only
+):
+    """Returns (logits (B, S, V), new_caches, aux_loss)."""
+    if embeds is None:
+        x = params["embed"]["embedding"][tokens]
+    else:
+        x = embeds
+    if cfg.batch_shard_constraint:
+        from repro.sharding import partition as _part
+        x = _part.batch_shard(x, dim=0)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    S = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)
+
+    body = functools.partial(
+        _stack_body, cfg=cfg, positions=positions, q_chunk=q_chunk
+    )
+    if cfg.remat != "nothing":
+        policy = (
+            jax.checkpoint_policies.nothing_saveable
+            if cfg.remat == "full"
+            else jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = (tuple(params["blocks"]), caches)
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs,
+        unroll=max(cfg.scan_unroll, 1),
+    )
+
+    if last_only:
+        # prefill: only the final position feeds sampling — skipping the
+        # other S-1 rows cuts LM-head flops and the (B, S, V) logits buffer
+        x = x[:, -1:]
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps, f32=cfg.norm_f32)
+    head = params["embed" if cfg.tie_embeddings else "lm_head"]["embedding"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask the table-padding rows; elementwise, so sharding-friendly
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, jnp.asarray(L.NEG_INF, logits.dtype))
+    return logits, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Stacked (over repeats) cache pytree for every pattern position.
+
+    Sliding-window attention layers get a circular cache of ``window`` slots
+    (bounding long-context memory); global layers get ``max_len`` slots.
+    """
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    R = cfg.n_repeats
+    caches = []
+    for spec in cfg.pattern:
+        if spec.mixer == "attn":
+            Sc = min(spec.window, max_len) if spec.window else max_len
+            caches.append({
+                "k": jnp.zeros((R, batch, Sc, kvh, hd), dtype),
+                "v": jnp.zeros((R, batch, Sc, kvh, hd), dtype),
+                "pos": jnp.zeros((R,), jnp.int32),
+            })
+        else:
+            m = cfg.mamba
+            d_in = m.expand * cfg.d_model
+            H = d_in // m.head_dim
+            gn = m.n_groups * m.d_state
+            K = m.conv_width
+            caches.append({
+                "conv_x": jnp.zeros((R, batch, K - 1, d_in), dtype),
+                "conv_B": jnp.zeros((R, batch, K - 1, gn), dtype),
+                "conv_C": jnp.zeros((R, batch, K - 1, gn), dtype),
+                "ssm": jnp.zeros((R, batch, H, m.head_dim, m.d_state), jnp.float32),
+            })
+    return tuple(caches)

@@ -1,0 +1,70 @@
+"""Elastic-restart policy: resume a job on whatever healthy devices remain.
+
+At pod scale, node failure is routine; the recovery path must not require
+the original device count.  The policy here:
+
+1. ``choose_mesh(n_devices)`` — pick the largest (data, model) production
+   mesh that fits the surviving device count, holding the model axis at the
+   largest power-of-two ≤ the target TP width that the arch configs assume
+   (16), shrinking the data axis first (DP/FSDP degree is elastic; TP is
+   not, because parameter head/ff splits assume it).
+2. ``resume(...)`` — restore the latest complete checkpoint with the new
+   mesh's shardings (the checkpoint format is mesh-free: host numpy +
+   manifest), rebuild the step functions, and continue.  The data pipeline
+   is a pure function of (seed, step), so the resumed run replays the exact
+   stream from the restored step.
+
+Straggler/failure model: all collectives are bulk-synchronous, so a slow or
+dead chip stalls its pod; detection (timeout on a heartbeat collective) is
+the runtime layer above this module, and its response is exactly this
+resume path on the reduced mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import checkpointer
+from repro.sharding import partition
+
+TARGET_MODEL_AXIS = 16
+
+
+def choose_mesh(n_devices: Optional[int] = None, *,
+                target_model: int = TARGET_MODEL_AXIS) -> Mesh:
+    """Largest (data, model) mesh fitting the surviving devices."""
+    devs = jax.devices()
+    n = n_devices if n_devices is not None else len(devs)
+    assert n >= 1
+    model = 1
+    while model * 2 <= min(target_model, n):
+        model *= 2
+    data = n // model
+    arr = np.asarray(devs[: data * model]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def state_shardings(cfg, mesh: Mesh, abstract_state: Any, specs: Any):
+    psh = partition.param_shardings(
+        specs["params"], cfg.sharding_profile, mesh, abstract_state["params"]
+    )
+    return {
+        "params": psh,
+        "opt": {"m": psh, "v": psh},
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def resume(cfg, ckpt_dir: str, abstract_state: Any, specs: Any,
+           mesh: Optional[Mesh] = None):
+    """Restore the latest checkpoint onto ``mesh`` (or an auto-chosen one).
+
+    Returns (state, restored_step, mesh); state is None if no checkpoint.
+    """
+    mesh = mesh or choose_mesh()
+    shardings = state_shardings(cfg, mesh, abstract_state, specs)
+    state, step = checkpointer.restore_latest(ckpt_dir, abstract_state, shardings)
+    return state, step, mesh

@@ -1,0 +1,82 @@
+"""Serving steps: batched prefill and single-token decode with caches.
+
+``decode_step`` is what the ``decode_32k`` / ``long_500k`` dry-run shapes
+lower: one new token against a KV/SSM cache of ``seq_len``.  KV caches shard
+over the kv-head dim when it divides the model axis, else over sequence
+(emergent sequence-parallel decode; repro.sharding.partition.cache_pspec).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model, cast_floats
+from repro.sharding import partition
+
+
+def make_prefill_step(cfg: ModelConfig, *, q_chunk: int = 512):
+    model = Model(cfg)
+
+    def prefill_step(params, batch: dict, caches):
+        p = cast_floats(params, jnp.bfloat16)
+        if "embeds" in batch:
+            b = {"embeds": batch["embeds"].astype(jnp.bfloat16)}
+        else:
+            b = {"tokens": batch["tokens"]}
+        logits, caches = model.prefill(p, b, caches, q_chunk=q_chunk)
+        return logits.astype(jnp.float32), caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    model = Model(cfg)
+
+    def decode_step(params, token, caches, pos):
+        p = cast_floats(params, jnp.bfloat16)
+        if token.ndim == 3:
+            token = token.astype(jnp.bfloat16)
+        logits, caches = model.decode_step(p, token, caches, pos)
+        return logits.astype(jnp.float32), caches
+
+    return decode_step
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
+    """NamedSharding tree matching Model.init_caches output."""
+    bspec = partition.batch_pspec(mesh, batch)
+    b = bspec[0] if bspec else None
+    m = mesh.shape.get("model", 1)
+    out = []
+    for spec in cfg.pattern:
+        if spec.mixer == "attn":
+            Sc = min(spec.window, max_len) if spec.window else max_len
+            kv = cfg.n_kv_heads
+            if kv % m == 0:
+                kvspec = P(None, b, None, "model", None)
+            elif Sc % m == 0:
+                kvspec = P(None, b, "model", None, None)
+            else:
+                kvspec = P(None, b, None, None, None)
+            out.append({
+                "k": NamedSharding(mesh, kvspec),
+                "v": NamedSharding(mesh, kvspec),
+                "pos": NamedSharding(mesh, P(None)),
+            })
+        else:
+            mm = cfg.mamba
+            d_in = mm.expand * cfg.d_model
+            H = d_in // mm.head_dim
+            inner = "model" if d_in % m == 0 else None
+            heads = "model" if H % m == 0 else None
+            out.append({
+                "conv_x": NamedSharding(mesh, P(None, b, None, inner)),
+                "conv_B": NamedSharding(mesh, P(None, b, None, None)),
+                "conv_C": NamedSharding(mesh, P(None, b, None, None)),
+                "ssm": NamedSharding(mesh, P(None, b, heads, None, None)),
+            })
+    return tuple(out)

@@ -1,0 +1,114 @@
+"""Train-step factory: loss, grads, AdamW update — pjit-ready.
+
+Mixed precision: fp32 master params (sharded per profile — ZeRO over the
+data axes), bf16 compute copy cast inside the loss, fp32 softmax/loss.
+Optional gradient accumulation (``microbatches > 1``) scans over micro
+slices of the global batch, trading stash memory for steps — how the
+biggest assigned config (jamba-398B) fits v5e HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model, cast_floats
+from repro.optim import adamw
+
+Array = jnp.ndarray
+
+
+def cross_entropy(logits: Array, labels: Array) -> Array:
+    """Gather-free cross entropy.
+
+    ``take_along_axis`` over the vocab dim is a gather along a
+    tensor-sharded axis — GSPMD replies with an all-gather of the full
+    (B, S, V) logits per device (measured: 37 GiB/chip at train_4k).  The
+    masked-sum form is elementwise + reduction, so the vocab shard layout
+    from the LM-head einsum flows straight through the loss.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    onehot_mask = (
+        jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        == labels[..., None]
+    )
+    gold = jnp.sum(jnp.where(onehot_mask, logits, 0.0), axis=-1)
+    return (logz - gold).mean()
+
+
+def make_loss_fn(cfg: ModelConfig, *, q_chunk: int = 512):
+    model = Model(cfg)
+
+    def loss_fn(params, batch):
+        p = cast_floats(params, jnp.bfloat16)
+        if "embeds" in batch:
+            b = {"embeds": batch["embeds"].astype(jnp.bfloat16)}
+        else:
+            b = {"tokens": batch["tokens"]}
+        logits, aux = model.apply(p, b, q_chunk=q_chunk)
+        loss = cross_entropy(logits, batch["labels"])
+        return loss + aux, (loss, aux)
+
+    return loss_fn
+
+
+def init_state(cfg: ModelConfig, key) -> tuple[dict, dict]:
+    """Returns (state, logical spec tree mirroring it)."""
+    model = Model(cfg)
+    params, pspecs = model.init(key)
+    opt = adamw.init(params)
+    state = {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+    specs = {
+        "params": pspecs,
+        "opt": {"m": pspecs, "v": pspecs},
+        "step": (),
+    }
+    return state, specs
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+    *,
+    microbatches: int = 1,
+    q_chunk: int = 512,
+):
+    loss_fn = make_loss_fn(cfg, q_chunk=q_chunk)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: dict, batch: dict) -> tuple[dict, dict]:
+        params = state["params"]
+        if microbatches == 1:
+            (tot, (loss, aux)), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, lsum, asum = carry
+                (tot, (l, a)), g = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l, asum + a), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]),
+                batch,
+            )
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss, aux), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros(()), jnp.zeros(())), mbs
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss, aux = loss / microbatches, aux / microbatches
+
+        new_p, new_opt, metrics = adamw.apply(
+            opt_cfg, params, grads, state["opt"], state["step"]
+        )
+        new_state = {"params": new_p, "opt": new_opt, "step": state["step"] + 1}
+        return new_state, {"loss": loss, "aux": aux, **metrics}
+
+    return train_step

@@ -1,0 +1,39 @@
+"""Test configuration.
+
+Forces a small pool of host devices (8, NOT the dry-run's 512) before the
+first jax import so the shard_map / pjit tests have a real multi-device mesh
+to run on.  Single-device tests are unaffected — they just see 8 CPU
+devices and use the first.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def euclidean_distance_matrix(X: np.ndarray) -> np.ndarray:
+    D = np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1))
+    np.fill_diagonal(D, 0.0)
+    return D
+
+
+@pytest.fixture
+def small_D(rng):
+    """A generic (tie-free w.h.p.) 37-point Euclidean distance matrix."""
+    X = rng.normal(size=(37, 5))
+    return euclidean_distance_matrix(X)
+
+
+@pytest.fixture
+def clustered_D(rng):
+    """Two well-separated clusters of different scales (PaLD's home turf)."""
+    a = rng.normal(size=(12, 3)) * 0.5
+    b = rng.normal(size=(20, 3)) * 3.0 + 40.0
+    return euclidean_distance_matrix(np.vstack([a, b]))

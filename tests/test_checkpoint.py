@@ -1,0 +1,87 @@
+"""Checkpointer behaviour: atomicity, pruning, async, corrupted dirs."""
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpointer as ck
+
+
+def _tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "nested": {"b": jnp.ones((4,), jnp.int32), "c": [jnp.zeros(()), jnp.ones(())]},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    path = ck.save(str(tmp_path), 3, t)
+    assert path.endswith("step_00000003")
+    template = jax.eval_shape(lambda: t)
+    r = ck.restore(path, template)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_latest_ignores_incomplete(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    ck.save(str(tmp_path), 2, t)
+    # a crash mid-save leaves a .tmp dir — must be ignored
+    os.makedirs(tmp_path / "step_00000005.tmp")
+    # a dir without manifest (partial rename) must be ignored too
+    os.makedirs(tmp_path / "step_00000004")
+    template = jax.eval_shape(lambda: t)
+    _, step = ck.restore_latest(str(tmp_path), template)
+    assert step == 2
+
+
+def test_restore_empty_dir(tmp_path):
+    r, step = ck.restore_latest(str(tmp_path), jax.eval_shape(_tree))
+    assert r is None and step == -1
+
+
+def test_prune_keeps_latest(tmp_path):
+    t = _tree()
+    for s in range(6):
+        ck.save(str(tmp_path), s, t)
+    ck.prune(str(tmp_path), keep=2)
+    assert ck.available_steps(str(tmp_path)) == [4, 5]
+
+
+def test_save_overwrites_same_step(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 1, t)
+    t2 = jax.tree.map(lambda x: x + 1, t)
+    ck.save(str(tmp_path), 1, t2)
+    r = ck.restore(os.path.join(str(tmp_path), "step_00000001"),
+                   jax.eval_shape(lambda: t))
+    np.testing.assert_array_equal(np.asarray(r["a"]), np.asarray(t2["a"]))
+
+
+def test_async_checkpointer(tmp_path):
+    t = _tree()
+    ac = ck.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in range(4):
+        ac.save(s, jax.tree.map(lambda x: x + s, t))
+    ac.wait()
+    steps = ck.available_steps(str(tmp_path))
+    assert steps == [2, 3]
+    r = ck.restore(os.path.join(str(tmp_path), "step_00000003"),
+                   jax.eval_shape(lambda: t))
+    np.testing.assert_array_equal(np.asarray(r["a"]), np.asarray(t["a"]) + 3)
+
+
+def test_manifest_contents(tmp_path):
+    path = ck.save(str(tmp_path), 0, _tree())
+    with open(os.path.join(path, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["step"] == 0
+    assert "a" in man["leaves"]
+    assert man["leaves"]["a"]["shape"] == [2, 3]

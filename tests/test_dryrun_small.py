@@ -1,0 +1,67 @@
+"""Miniature dry-run: every (arch x shape-kind) lowers + compiles on the
+8-device test mesh with reduced configs — fast regression guard for the
+512-chip production dry-run."""
+import dataclasses
+
+import pytest
+
+import jax
+
+from repro import configs
+from repro.configs.base import SHAPES, ShapeConfig, reduced, runnable
+from repro.launch import mesh as meshlib, specs
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 host devices"
+)
+
+SMALL_SHAPES = {
+    "train": ShapeConfig("t", 64, 8, "train"),
+    "prefill": ShapeConfig("p", 64, 8, "prefill"),
+    "decode": ShapeConfig("d", 64, 8, "decode"),
+}
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return meshlib.make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+@pytest.mark.parametrize("kind", ["train", "prefill", "decode"])
+def test_cell_compiles(arch, kind, mesh):
+    cfg = reduced(configs.get(arch))
+    shape = SMALL_SHAPES[kind]
+    fn, args = specs.cell_lowerable(cfg, shape, mesh, q_chunk=32)
+    with mesh:
+        compiled = jax.jit(fn).lower(*args).compile()
+    assert compiled.cost_analysis() is not None
+
+
+def test_probe_unroll_variant_compiles(mesh):
+    """The dry-run cost probes (scan + q-chunk unrolled) compile too."""
+    cfg = dataclasses.replace(
+        reduced(configs.get("gemma2-2b")), scan_unroll=2, probe_unroll=True,
+        n_layers=4,
+    )
+    fn, args = specs.cell_lowerable(cfg, SMALL_SHAPES["train"], mesh, q_chunk=32)
+    with mesh:
+        jax.jit(fn).lower(*args).compile()
+
+
+def test_full_config_lowers_on_test_mesh(mesh):
+    """One FULL (non-reduced) config must at least lower abstractly on the
+    small mesh (no allocation happens)."""
+    cfg = configs.get("internvl2-1b")
+    shape = ShapeConfig("t", 256, 8, "train")
+    fn, args = specs.cell_lowerable(cfg, shape, mesh, q_chunk=128)
+    with mesh:
+        jax.jit(fn).lower(*args)
+
+
+def test_runnable_skips_long_context():
+    cfg = configs.get("qwen2.5-14b")
+    ok, why = runnable(cfg, SHAPES["long_500k"])
+    assert not ok and "sub-quadratic" in why
+    ok, _ = runnable(configs.get("mamba2-780m"), SHAPES["long_500k"])
+    assert ok

@@ -1,0 +1,67 @@
+"""Elastic-restart policy: mesh re-selection + resume-with-reshard."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.checkpoint import checkpointer
+from repro.runtime import elastic
+from repro.train import train_step as ts
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 host devices"
+)
+
+
+def test_choose_mesh_shapes():
+    m8 = elastic.choose_mesh(8, target_model=4)
+    assert dict(m8.shape) == {"data": 2, "model": 4}
+    m6 = elastic.choose_mesh(6, target_model=4)
+    # model holds at 4, data shrinks to 1 (2 devices idle)
+    assert dict(m6.shape) == {"data": 1, "model": 4}
+    m3 = elastic.choose_mesh(3, target_model=16)
+    assert dict(m3.shape) == {"data": 1, "model": 2}
+    m1 = elastic.choose_mesh(1)
+    assert dict(m1.shape) == {"data": 1, "model": 1}
+
+
+def test_resume_after_shrink(tmp_path):
+    """Train on 8 devices, 'lose' half the fleet, resume on 4."""
+    cfg = reduced(configs.get("llama3.2-3b"))
+    cap = {}
+
+    def build(k):
+        state, specs = ts.init_state(cfg, k)
+        cap["specs"] = specs
+        return state
+
+    abstract = jax.eval_shape(build, jax.random.PRNGKey(0))
+
+    mesh8 = elastic.choose_mesh(8, target_model=2)
+    with mesh8:
+        sh = elastic.state_shardings(cfg, mesh8, abstract, cap["specs"])
+        state = jax.jit(build, out_shardings=sh)(jax.random.PRNGKey(0))
+        step = jax.jit(ts.make_train_step(cfg))
+        from repro.data.pipeline import SyntheticTokens
+        data = SyntheticTokens(cfg.vocab_size, 32, 4, seed=0)
+        for i in range(3):
+            state, _ = step(state, data.batch_at(i))
+        checkpointer.save(str(tmp_path), 2, state)
+
+    # resume on a 4-device mesh
+    mesh4 = elastic.choose_mesh(4, target_model=2)
+    with mesh4:
+        restored, at, mesh = elastic.resume(
+            cfg, str(tmp_path), abstract, cap["specs"], mesh=mesh4)
+        assert at == 2
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(restored["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # and training continues on the smaller mesh
+        step4 = jax.jit(ts.make_train_step(cfg))
+        from repro.data.pipeline import SyntheticTokens
+        data = SyntheticTokens(cfg.vocab_size, 32, 4, seed=0)
+        restored, metrics = step4(restored, data.batch_at(3))
+        assert np.isfinite(float(metrics["loss"]))

@@ -1,0 +1,34 @@
+"""The shipped examples must actually run (they are the public API demo)."""
+import subprocess
+import sys
+
+import pytest
+
+
+def _run(args, timeout=480):
+    return subprocess.run(
+        [sys.executable] + args, capture_output=True, text=True,
+        timeout=timeout, cwd="/root/repo",
+        env={"PYTHONPATH": "/root/repo/src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+    )
+
+
+def test_quickstart():
+    r = _run(["examples/quickstart.py"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "all four methods agree" in r.stdout
+
+
+def test_serve_lm_smoke():
+    r = _run(["examples/serve_lm.py", "--arch", "llama3.2-3b",
+              "--batch", "2", "--prompt-len", "8", "--gen", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "[serve]" in r.stdout
+
+
+@pytest.mark.slow
+def test_pald_text_analysis_small():
+    r = _run(["examples/pald_text_analysis.py", "--max-tokens", "384"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "strong ties" in r.stdout

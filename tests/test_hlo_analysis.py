@@ -1,0 +1,78 @@
+"""Collective-bytes parser + roofline terms."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import hlo_analysis as H
+from repro.launch import mesh as meshlib
+
+
+def test_shape_bytes():
+    assert H._shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert H._shape_bytes("bf16[8]") == 16
+    assert H._shape_bytes("(f32[2,2]{1,0}, s32[4])") == 16 + 16
+    assert H._shape_bytes("pred[]") == 1  # scalar = 1 element
+
+
+def test_parser_on_synthetic_hlo():
+    txt = """
+  %x = f32[16,64]{1,0} parameter(0)
+  %ag = f32[128,64]{1,0} all-gather(f32[16,64]{1,0} %x), replica_groups={}
+  %ar = f32[128,64]{1,0} all-reduce(%ag), to_apply=%add
+  %rs = f32[16,64]{1,0} reduce-scatter(%ar), dimensions={0}
+  ROOT %out = f32[16,64]{1,0} copy(%rs)
+"""
+    stats = H.collective_stats(txt)
+    assert stats.by_kind["all-gather"][0] == 1
+    assert stats.by_kind["all-gather"][1] == 16 * 64 * 4      # operand size
+    assert stats.by_kind["all-reduce"][1] == 128 * 64 * 4
+    assert stats.by_kind["reduce-scatter"][1] == 128 * 64 * 4
+    assert stats.total_count == 3
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 host devices")
+def test_parser_on_real_compiled_module():
+    """psum of a (8, 32) array over 8 devices => one all-reduce whose operand
+    bytes we can predict exactly."""
+    mesh = meshlib.make_test_mesh((8,), ("data",))
+
+    def f(x):
+        return jax.lax.psum(x, "data")
+
+    sharded = jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P())
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32,
+                             sharding=NamedSharding(mesh, P("data")))
+    compiled = jax.jit(sharded).lower(x).compile()
+    stats = H.collective_stats(compiled.as_text())
+    assert stats.by_kind.get("all-reduce", (0, 0))[0] >= 1
+    # per-device operand is the local (1, 32) f32 shard
+    assert stats.by_kind["all-reduce"][1] == 32 * 4
+
+
+def test_roofline_terms():
+    t = H.roofline_terms(hlo_flops=197e12, hlo_bytes=819e9, coll_bytes=50e9,
+                         chips=1, flops_is_global=False)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(1.0)
+    t2 = H.roofline_terms(hlo_flops=1e15, hlo_bytes=1e9, coll_bytes=0,
+                          chips=1, flops_is_global=False)
+    assert t2["bottleneck"] == "compute"
+
+
+def test_model_flops():
+    from repro import configs
+    from repro.configs.base import SHAPES
+    cfg = configs.get("llama3.2-3b")
+    mf_train = H.model_flops(cfg, SHAPES["train_4k"])
+    _, active = cfg.param_count()
+    assert mf_train == pytest.approx(6 * active * 4096 * 256)
+    mf_dec = H.model_flops(cfg, SHAPES["decode_32k"])
+    assert mf_dec == pytest.approx(2 * active * 128)
+    # MoE uses active (not total) params
+    moe = configs.get("phi3.5-moe-42b-a6.6b")
+    t, a = moe.param_count()
+    assert H.model_flops(moe, SHAPES["train_4k"]) < 6 * t * 4096 * 256 / 3

@@ -1,0 +1,205 @@
+"""Per-architecture smoke tests on reduced same-family configs (CPU-sized)
++ model-level consistency checks (prefill/decode vs full forward)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.models.model import Model
+from repro.train.train_step import init_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_smoke_forward_and_train(arch, key):
+    """One forward + one train step for the reduced config of every assigned
+    architecture: output shapes, no NaNs, finite loss."""
+    cfg = reduced(configs.get(arch))
+    model = Model(cfg)
+    params, _ = model.init(key)
+    B, S = 2, 16
+    if cfg.modality in ("audio", "vlm"):
+        batch = {
+            "embeds": jax.random.normal(key, (B, S, cfg.d_model)) * 0.02,
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        }
+        logits, aux = model.apply(params, {"embeds": batch["embeds"]})
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": toks}
+        logits, aux = model.apply(params, {"tokens": toks})
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert not np.isnan(np.asarray(logits[..., : cfg.vocab_size])).any()
+
+    step = make_train_step(cfg)
+    state, _ = init_state(cfg, key)
+    state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_smoke_serve(arch, key):
+    """Prefill + 3 decode steps for every architecture."""
+    cfg = reduced(configs.get(arch))
+    model = Model(cfg)
+    params, _ = model.init(key)
+    B, S = 2, 8
+    caches = model.init_caches(B, S + 4)
+    if cfg.modality in ("audio", "vlm"):
+        emb = jax.random.normal(key, (B, S, cfg.d_model)) * 0.02
+        logits, caches = model.prefill(params, {"embeds": emb}, caches)
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        logits, caches = model.prefill(params, {"tokens": toks}, caches)
+    assert logits.shape == (B, cfg.padded_vocab)
+    tok = jnp.argmax(logits[..., : cfg.vocab_size], -1)[:, None].astype(jnp.int32)
+    for i in range(3):
+        if cfg.modality in ("audio", "vlm"):
+            step_in = jax.random.normal(key, (B, 1, cfg.d_model)) * 0.02
+        else:
+            step_in = tok
+        logits, caches = model.decode_step(params, step_in, caches,
+                                           jnp.asarray(S + i, jnp.int32))
+        assert not np.isnan(np.asarray(logits[..., : cfg.vocab_size])).any()
+        tok = jnp.argmax(logits[..., : cfg.vocab_size], -1)[:, None].astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "gemma2-2b", "mamba2-780m",
+                                  "jamba-1.5-large-398b"])
+def test_decode_matches_forward(arch, key):
+    """Token-by-token decode must reproduce the full-sequence forward logits
+    (KV-cache / SSM-state correctness)."""
+    cfg = reduced(configs.get(arch))
+    model = Model(cfg)
+    params, _ = model.init(key)
+    B, S = 2, 12
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+
+    full_logits, _ = model.apply(params, {"tokens": toks})  # (B, S, V)
+
+    caches = model.init_caches(B, S, dtype=jnp.float32)
+    step_logits = []
+    for i in range(S):
+        lg, caches = model.decode_step(params, toks[:, i:i+1], caches,
+                                       jnp.asarray(i, jnp.int32))
+        step_logits.append(lg)
+    dec = jnp.stack(step_logits, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full_logits), rtol=2e-2, atol=2e-3
+    )
+
+
+def test_prefill_then_decode_matches_forward(key):
+    cfg = reduced(configs.get("llama3.2-3b"))
+    model = Model(cfg)
+    params, _ = model.init(key)
+    B, S = 2, 10
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    full_logits, _ = model.apply(params, {"tokens": toks})
+
+    caches = model.init_caches(B, S, dtype=jnp.float32)
+    last, caches = model.prefill(params, {"tokens": toks[:, :-1]}, caches)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full_logits[:, -2]), rtol=2e-2, atol=2e-3
+    )
+    lg, _ = model.decode_step(params, toks[:, -1:], caches,
+                              jnp.asarray(S - 1, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full_logits[:, -1]), rtol=2e-2, atol=2e-3
+    )
+
+
+def test_sliding_window_masks_old_tokens(key):
+    """A windowed layer must ignore tokens beyond the window."""
+    base = reduced(configs.get("gemma2-2b"))
+    model = Model(base)
+    params, _ = model.init(key)
+    B, S, W = 1, 16, 4  # reduced gemma pattern: window=4096 >> S, so craft one
+    import dataclasses
+    from repro.configs.base import LayerSpec
+    cfg = dataclasses.replace(
+        base,
+        pattern=(LayerSpec(mixer="attn", ffn="dense", window=W),
+                 LayerSpec(mixer="attn", ffn="dense", window=None)),
+    )
+    model = Model(cfg)
+    params, _ = model.init(key)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    logits, _ = model.apply(params, {"tokens": toks})
+    # perturbing a token further back than every window+global layer can
+    # reach changes nothing ONLY if all layers are windowed; with a global
+    # layer logits do change — sanity-check the mask plumbing by comparing a
+    # pure-windowed stack instead
+    cfg_w = dataclasses.replace(
+        base, n_layers=2,
+        pattern=(LayerSpec(mixer="attn", ffn="dense", window=W),),
+    )
+    model_w = Model(cfg_w)
+    params_w, _ = model_w.init(key)
+    lg1, _ = model_w.apply(params_w, {"tokens": toks})
+    toks2 = toks.at[:, 0].set((toks[:, 0] + 7) % cfg.vocab_size)
+    lg2, _ = model_w.apply(params_w, {"tokens": toks2})
+    # with 2 stacked window-4 layers, position 15 sees back to ~position 9;
+    # position 0 is far outside — its perturbation must not leak
+    np.testing.assert_allclose(
+        np.asarray(lg1[:, -1, : cfg.vocab_size]),
+        np.asarray(lg2[:, -1, : cfg.vocab_size]),
+        rtol=1e-5, atol=1e-6,
+    )
+    # ...but it must leak into nearby positions
+    assert not np.allclose(
+        np.asarray(lg1[:, 1, : cfg.vocab_size]),
+        np.asarray(lg2[:, 1, : cfg.vocab_size]),
+    )
+
+
+def test_moe_load_balance_aux_positive(key):
+    cfg = reduced(configs.get("phi3.5-moe-42b-a6.6b"))
+    model = Model(cfg)
+    params, _ = model.init(key)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab_size)
+    _, aux = model.apply(params, {"tokens": toks})
+    assert float(aux) > 0.0
+
+
+def test_param_counts_match_sizes():
+    expect = {
+        "phi3.5-moe-42b-a6.6b": (41.9e9, 6.6e9),
+        "granite-moe-1b-a400m": (1.3e9, 0.4e9),
+        "mamba2-780m": (0.78e9, 0.78e9),
+        "qwen2.5-14b": (14.8e9, 14.8e9),
+        "llama3.2-3b": (3.2e9, 3.2e9),
+        "gemma2-2b": (2.6e9, 2.6e9),
+        "gemma2-9b": (9.2e9, 9.2e9),
+        "jamba-1.5-large-398b": (398e9, 94e9),
+        "musicgen-medium": (1.8e9, 1.8e9),
+        "internvl2-1b": (0.49e9, 0.49e9),
+    }
+    for arch, (t0, a0) in expect.items():
+        t, a = configs.get(arch).param_count()
+        assert abs(t - t0) / t0 < 0.06, (arch, t, t0)
+        assert abs(a - a0) / a0 < 0.11, (arch, a, a0)
+
+
+def test_runnable_matrix():
+    from repro.configs.base import SHAPES, runnable
+    cells = [(a, s) for a in configs.ARCHS for s in SHAPES]
+    assert len(cells) == 40
+    runnables = [(a, s) for a, s in cells if runnable(configs.get(a), SHAPES[s])[0]]
+    skipped = [(a, s) for a, s in cells if not runnable(configs.get(a), SHAPES[s])[0]]
+    # long_500k skipped exactly for the 6 pure full-attention archs
+    assert len(skipped) == 6
+    assert all(s == "long_500k" for _, s in skipped)
+    assert {a for a, _ in skipped} == {
+        "phi3.5-moe-42b-a6.6b", "granite-moe-1b-a400m", "qwen2.5-14b",
+        "llama3.2-3b", "musicgen-medium", "internvl2-1b",
+    }
+    assert len(runnables) == 34

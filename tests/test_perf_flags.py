@@ -1,0 +1,64 @@
+"""Every §Perf config flag must preserve model numerics (they only change
+sharding/layout/precision-of-accumulation, never the math)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.models.model import Model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(configs.get("phi3.5-moe-42b-a6.6b"))
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    ref, _ = model.apply(params, {"tokens": toks})
+    return cfg, params, toks, np.asarray(ref, np.float32)
+
+
+@pytest.mark.parametrize("flag,value,tol", [
+    ("moe_shard_constraints", True, 1e-6),   # pure sharding hints
+    ("batch_shard_constraint", False, 1e-6), # pure sharding hints
+    ("attn_seq_proj", True, 1e-6),           # sharding hints (no-op w/o mesh)
+    ("attn_out_f32", False, 5e-2),           # bf16 PV accumulation
+    ("norm_f32", False, 5e-2),               # bf16 normalize
+])
+def test_flag_preserves_numerics(setup, flag, value, tol):
+    cfg, params, toks, ref = setup
+    cfg2 = dataclasses.replace(cfg, **{flag: value})
+    out, _ = Model(cfg2).apply(params, {"tokens": toks})
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32)[..., : cfg.vocab_size],
+        ref[..., : cfg.vocab_size], rtol=tol, atol=tol,
+    )
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 host devices")
+def test_flags_match_under_mesh():
+    """Sharding-hint flags are bit-compatible under a real mesh too."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch import mesh as meshlib
+
+    cfg = reduced(configs.get("granite-moe-1b-a400m"))
+    model = Model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, cfg.vocab_size)
+    mesh = meshlib.make_test_mesh((2, 2), ("data", "model"))
+
+    outs = {}
+    for name, ov in [("plain", {}), ("hints", dict(
+            moe_shard_constraints=True, batch_shard_constraint=True))]:
+        cfg2 = dataclasses.replace(cfg, **ov)
+        with mesh:
+            tokens = jax.device_put(toks, NamedSharding(mesh, P("data", None)))
+            out, _ = jax.jit(lambda p, t: Model(cfg2).apply(p, {"tokens": t}))(
+                params, tokens)
+        outs[name] = np.asarray(out, np.float32)
+    np.testing.assert_allclose(outs["plain"], outs["hints"], rtol=2e-5, atol=2e-5)

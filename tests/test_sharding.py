@@ -1,0 +1,91 @@
+"""Logical-axis -> PartitionSpec mapping rules and cache shardings."""
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import mesh as meshlib
+from repro.sharding import partition
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 host devices"
+)
+
+
+@pytest.fixture(scope="module")
+def mesh2d():
+    return meshlib.make_test_mesh((4, 2), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def mesh3d():
+    return meshlib.make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+
+
+def test_tensor_axes_map_to_model(mesh2d):
+    assert partition.spec_to_pspec(("embed", "ff"), "fsdp", mesh2d) == P("data", "model")
+    assert partition.spec_to_pspec(("experts", "embed", None), "fsdp", mesh2d) == \
+        P("model", "data", None)
+    assert partition.spec_to_pspec(("vocab", "embed"), "dp", mesh2d) == P("model", None)
+
+
+def test_head_axes_divisibility(mesh2d):
+    # model axis = 2: 4 heads shard, 3 heads replicate
+    assert partition.spec_to_pspec(("embed", "q_heads", None), "fsdp", mesh2d,
+                                   shape=(32, 4, 8)) == P("data", "model", None)
+    assert partition.spec_to_pspec(("embed", "q_heads", None), "fsdp", mesh2d,
+                                   shape=(32, 3, 8)) == P("data", None, None)
+    assert partition.spec_to_pspec(("embed", "kv_heads", None), "fsdp", mesh2d,
+                                   shape=(32, 1, 8)) == P("data", None, None)
+
+
+def test_zero3_uses_all_data_axes(mesh3d):
+    spec = partition.spec_to_pspec(("embed", "ff"), "zero3", mesh3d)
+    assert spec == P(("pod", "data"), "model")
+    spec = partition.spec_to_pspec(("embed", "ff"), "fsdp", mesh3d)
+    assert spec == P("data", "model")
+    spec = partition.spec_to_pspec(("embed", "ff"), "dp", mesh3d)
+    assert spec == P(None, "model")
+
+
+def test_batch_pspec(mesh3d):
+    assert partition.batch_pspec(mesh3d, 8) == P(("pod", "data"))
+    # batch 3 divides neither axis -> unsharded
+    assert partition.batch_pspec(mesh3d, 3) == P(None)
+    # batch 2 divides pod only
+    assert partition.batch_pspec(mesh3d, 2) == P(("pod",))
+
+
+def test_param_shardings_tree(mesh2d):
+    from repro.models import layers as L
+    import jax.numpy as jnp
+    cfg = configs.reduced(configs.get("llama3.2-3b"))
+    params, specs = L.init_attention(jax.random.PRNGKey(0), cfg)
+    sh = partition.param_shardings(specs, "fsdp", mesh2d, params)
+    # reduced cfg: n_heads=4 divides model=2 -> q_heads sharded
+    assert sh["wq"].spec == P("data", "model", None)
+    # n_kv_heads=2 divides 2 as well
+    assert sh["wk"].spec == P("data", "model", None)
+    assert sh["wo"].spec == P("model", None, "data")
+
+
+def test_seq_shard_constraint(mesh2d):
+    import jax.numpy as jnp
+    x = jnp.zeros((2, 8, 4))
+    with mesh2d:
+        y = jax.jit(lambda t: partition.seq_shard(t, 1))(x)
+    assert y.sharding.spec[1] == "model"
+    # indivisible dim: no-op (no crash)
+    x2 = jnp.zeros((2, 7, 4))
+    with mesh2d:
+        y2 = jax.jit(lambda t: partition.seq_shard(t, 1))(x2)
+
+
+def test_cache_shardings(mesh2d):
+    from repro.train import serve_step
+    cfg = configs.reduced(configs.get("gemma2-2b"))
+    sh = serve_step.cache_shardings(cfg, mesh2d, batch=4, max_len=64)
+    assert len(sh) == len(cfg.pattern)
+    for layer_sh in sh:
+        assert "k" in layer_sh and "v" in layer_sh
