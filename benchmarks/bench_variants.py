@@ -2,6 +2,10 @@
 
 The paper's crossover (pairwise wins small-n, triplet wins large-n thanks to
 ~2x fewer comparisons) shows up here as dense vs block-symmetric.
+
+``run_kernels`` is the kernel-pipeline sibling: the dense (nx, nz, ny) grid
+vs the upper-triangular block schedule (pald_focus_tri + pald_cohesion_tri)
+through ``repro.kernels.ops``, per pass and for the fused pipeline.
 """
 from __future__ import annotations
 
@@ -10,6 +14,8 @@ import functools
 import jax.numpy as jnp
 
 from repro.core import pairwise, triplet
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 from .common import emit, random_distance_matrix, time_fn
 
@@ -30,8 +36,41 @@ def run(ns=(128, 256, 512, 1024, 2048)) -> list[dict]:
     return rows
 
 
+def run_kernels(ns=(256, 512, 1024), impl: str = "jnp",
+                block: int = 128, block_z: int = 512) -> list[dict]:
+    """Dense kernel grid vs tri block schedule, cohesion pass and fused
+    pipeline, on one impl (jnp fallback by default — the dense numbers are
+    what `impl='pallas'` block-streams on TPU)."""
+    rows = []
+    for n in ns:
+        D = jnp.asarray(random_distance_matrix(n))
+        b, bz = min(block, n), min(block_z, n)
+        W = kref.weights_ref(kops.focus(D, block=b, block_z=bz, impl=impl))
+        tc_dense = time_fn(functools.partial(
+            kops.cohesion_from_weights, D, W, block=b, block_z=bz, impl=impl))
+        tc_tri = time_fn(functools.partial(
+            kops.cohesion_from_weights, D, W, block=b, block_z=bz, impl=impl,
+            schedule="tri"))
+        tp_dense = time_fn(functools.partial(
+            kops.pald, D, block=b, block_z=bz, impl=impl))
+        tp_tri = time_fn(functools.partial(
+            kops.pald_tri, D, block=b, block_z=bz, impl=impl))
+        rows.append({
+            "n": n,
+            "impl": impl,
+            "cohesion_dense_s": round(tc_dense, 4),
+            "cohesion_tri_s": round(tc_tri, 4),
+            "cohesion_tri_speedup": round(tc_dense / tc_tri, 3),
+            "pald_dense_s": round(tp_dense, 4),
+            "pald_tri_s": round(tp_tri, 4),
+            "pald_tri_speedup": round(tp_dense / tp_tri, 3),
+        })
+    return rows
+
+
 def main() -> None:
     emit(run(), header="table1: pairwise vs triplet")
+    emit(run_kernels(), header="table1b: dense vs tri kernel schedule (jnp impl)")
 
 
 if __name__ == "__main__":

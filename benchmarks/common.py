@@ -1,32 +1,12 @@
-"""Shared benchmark utilities: timing, CSV emit, distance-matrix makers."""
+"""Shared benchmark utilities: timing, CSV emit, distance-matrix makers.
+
+The timing discipline and synthetic-matrix construction are shared with the
+block-size autotuner so tuner and benchmark numbers stay comparable — both
+live in ``repro.tuning.autotune`` and are re-exported here.
+"""
 from __future__ import annotations
 
-import time
-from typing import Callable
-
-import numpy as np
-
-import jax
-
-
-def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall seconds of fn(*args) with block_until_ready."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
-
-
-def random_distance_matrix(n: int, seed: int = 0, dim: int = 8) -> np.ndarray:
-    rng = np.random.default_rng(seed)
-    X = rng.normal(size=(n, dim)).astype(np.float32)
-    D = np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1)).astype(np.float32)
-    np.fill_diagonal(D, 0.0)
-    return D
+from repro.tuning.autotune import random_distance_matrix, time_fn  # noqa: F401
 
 
 def emit(rows: list[dict], header: str = "") -> None:

@@ -1,18 +1,32 @@
-"""§Perf hillclimb driver: re-dry-run one cell with config overrides and
-print the before/after roofline delta against the recorded baseline JSON.
+"""§Perf hillclimb driver.
 
-    PYTHONPATH=src python -m benchmarks.hillclimb \
+Two kinds of cells can be climbed:
+
+``cell`` (legacy default): re-dry-run one model cell with config overrides
+and print the before/after roofline delta against the recorded baseline
+JSON.  Must run in a fresh process (forces 512 host devices).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb cell \
         --arch phi3.5-moe-42b-a6.6b --shape train_4k --mesh single \
         --set moe_shard_constraints=True [--microbatches 4] [--save NAME]
 
-Must run in a fresh process (forces 512 host devices).
-"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+``blocks``: measure the PaLD kernel block-size candidate grid for one
+(n, pass, impl) cell and PERSIST the winner into the autotuner cache that
+``block="auto"`` reads (repro.tuning) — results used to be printed and
+forgotten; now every climb feeds the dispatcher.
 
+    PYTHONPATH=src python -m benchmarks.hillclimb blocks \
+        --n 1024 --pass cohesion_tri [--impl jnp] \
+        [--blocks 64,128,256] [--block-z 256,512] [--cache PATH]
+
+``methods``: measure the method crossover (dense/pairwise/triplet) across
+n and persist the per-n winner, replacing the hard-coded n<=256 heuristic
+behind ``pald.cohesion(method="auto")``.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb methods --ns 64,256,1024
+"""
 import argparse
-import dataclasses
-import json
+import sys
 
 
 def parse_override(s: str):
@@ -25,19 +39,14 @@ def parse_override(s: str):
         return k, v
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
-    ap.add_argument("--set", action="append", default=[],
-                    help="ModelConfig field override, e.g. moe_shard_constraints=True")
-    ap.add_argument("--microbatches", type=int, default=1)
-    ap.add_argument("--q-chunk", type=int, default=1024)
-    ap.add_argument("--baseline-dir", default="benchmarks/dryrun_out")
-    ap.add_argument("--save", default=None,
-                    help="dump the new cell JSON under this tag in --baseline-dir")
-    args = ap.parse_args()
+def _csv_ints(s: str):
+    return tuple(int(x) for x in s.split(",") if x)
+
+
+def run_cell(args) -> None:
+    import dataclasses
+    import json
+    import os
 
     from repro import configs
     from repro.launch import dryrun
@@ -81,6 +90,90 @@ def main() -> None:
         with open(out, "w") as f:
             json.dump(cell, f, indent=1)
         print(f"saved {out}")
+
+
+def run_blocks(args) -> None:
+    from repro.tuning import autotune
+
+    kw = {}
+    if args.blocks:
+        kw["blocks"] = _csv_ints(args.blocks)
+    if args.block_z:
+        kw["blocks_z"] = _csv_ints(args.block_z)
+    rec = autotune.tune(
+        args.n, getattr(args, "pass"), impl=args.impl, path=args.cache,
+        iters=args.iters, **kw,
+    )
+    cache = autotune.cache_path(args.cache)
+    print(f"# tuned {getattr(args, 'pass')} n={args.n} impl={args.impl or 'default'}")
+    for row in rec["grid"]:
+        mark = " <- best" if (row["block"], row["block_z"]) == (
+            rec["block"], rec["block_z"]) else ""
+        print(f"  block={row['block']:5d} block_z={row['block_z']:5d} "
+              f"{row['seconds']*1e3:10.2f} ms{mark}")
+    print(f"# cached under {cache}")
+
+
+def run_methods(args) -> None:
+    from repro.tuning import autotune
+
+    rows = autotune.tune_methods(ns=_csv_ints(args.ns), path=args.cache,
+                                 iters=args.iters)
+    for r in rows:
+        t = " ".join(f"{m}={s*1e3:.1f}ms" for m, s in r["timings"].items())
+        print(f"  n={r['n']:6d} best={r['method']:9s} {t}")
+    print(f"# cached under {autotune.cache_path(args.cache)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd")
+
+    cell = sub.add_parser("cell", help="dry-run one model cell with overrides")
+    cell.add_argument("--arch", required=True)
+    cell.add_argument("--shape", required=True)
+    cell.add_argument("--mesh", choices=["single", "multi"], default="single")
+    cell.add_argument("--set", action="append", default=[],
+                      help="ModelConfig field override, e.g. moe_shard_constraints=True")
+    cell.add_argument("--microbatches", type=int, default=1)
+    cell.add_argument("--q-chunk", type=int, default=1024)
+    cell.add_argument("--baseline-dir", default="benchmarks/dryrun_out")
+    cell.add_argument("--save", default=None,
+                      help="dump the new cell JSON under this tag in --baseline-dir")
+
+    blocks = sub.add_parser("blocks", help="tune PaLD kernel block sizes into the cache")
+    blocks.add_argument("--n", type=int, required=True)
+    blocks.add_argument("--pass", required=True,
+                        choices=("focus", "cohesion", "focus_tri",
+                                 "cohesion_tri", "pald", "pald_tri"))
+    blocks.add_argument("--impl", default=None,
+                        choices=(None, "jnp", "interpret", "pallas"))
+    blocks.add_argument("--blocks", default=None, help="csv candidate blocks")
+    blocks.add_argument("--block-z", default=None, help="csv candidate z tiles")
+    blocks.add_argument("--iters", type=int, default=3)
+    blocks.add_argument("--cache", default=None, help="tuning cache path")
+
+    methods = sub.add_parser("methods", help="tune the method crossover into the cache")
+    methods.add_argument("--ns", default="64,128,256,512,1024")
+    methods.add_argument("--iters", type=int, default=3)
+    methods.add_argument("--cache", default=None)
+
+    argv = sys.argv[1:]
+    if argv and argv[0] not in ("cell", "blocks", "methods", "-h", "--help"):
+        argv = ["cell"] + argv  # legacy invocation without a subcommand
+    args = ap.parse_args(argv)
+
+    if args.cmd == "cell":
+        # forces 512 host devices; must be set before the first jax import
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        run_cell(args)
+    elif args.cmd == "blocks":
+        run_blocks(args)
+    elif args.cmd == "methods":
+        run_methods(args)
+    else:
+        ap.print_help()
 
 
 if __name__ == "__main__":

@@ -1,50 +1,95 @@
 """Benchmark orchestrator: one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]
 
 Sections:
-    fig3   optimization waterfall        (bench_optimizations)
-    fig4   block-size tuning             (bench_blocksize)
-    table1 pairwise vs triplet           (bench_variants)
-    fig9+  scaling + comm model          (bench_scaling)
-    sec7   text-analysis application     (bench_text_analysis)
-    roofline summary of dry-run JSONs    (roofline), if present
+    fig3    optimization waterfall        (bench_optimizations)
+    fig4    block-size tuning             (bench_blocksize)
+    table1  pairwise vs triplet           (bench_variants)
+    table1b dense vs tri kernel schedule  (bench_variants.run_kernels)
+    fig9+   scaling + comm model          (bench_scaling)
+    sec7    text-analysis application     (bench_text_analysis)
+    roofline summary of dry-run JSONs     (roofline), if present
+
+``--fast`` additionally writes a machine-readable ``BENCH_PR<k>.json``
+(per-section rows + wall timings) next to this file so the perf trajectory
+is tracked across PRs; ``<k>`` comes from $REPRO_PR_INDEX or the next free
+integer.  ``--json PATH`` overrides the output location.
 """
 from __future__ import annotations
 
 import argparse
+import glob
+import json
 import os
 import time
+
+
+def _json_path(explicit: str | None) -> str:
+    here = os.path.dirname(__file__)
+    if explicit:
+        return explicit
+    env = os.environ.get("REPRO_PR_INDEX")
+    if env:
+        return os.path.join(here, f"BENCH_PR{env}.json")
+    taken = set()
+    for p in glob.glob(os.path.join(here, "BENCH_PR*.json")):
+        tag = os.path.basename(p)[len("BENCH_PR"):-len(".json")]
+        if tag.isdigit():
+            taken.add(int(tag))
+    k = max(taken, default=0) + 1
+    return os.path.join(here, f"BENCH_PR{k}.json")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller sizes")
+    ap.add_argument("--json", default=None,
+                    help="write the machine-readable report here "
+                         "(default BENCH_PR<k>.json in --fast mode)")
     args = ap.parse_args()
 
     t0 = time.time()
     from . import (bench_blocksize, bench_optimizations, bench_scaling,
                    bench_text_analysis, bench_variants, common)
 
+    sections: dict[str, dict] = {}
+
+    def section(name: str, header: str, fn) -> None:
+        s0 = time.time()
+        rows = fn()
+        common.emit(rows, header=header)
+        sections[name] = {"rows": rows, "seconds": round(time.time() - s0, 3)}
+
     if args.fast:
-        common.emit(bench_optimizations.run(n=512, n_naive=96),
-                    header="fig3: optimization waterfall (n=512, --fast)")
-        common.emit(bench_blocksize.run(n=512, blocks=(32, 64, 128, 256)),
-                    header="fig4: block-size tuning (n=512, --fast)")
-        common.emit(bench_variants.run(ns=(128, 256, 512)),
-                    header="table1: pairwise vs triplet (--fast)")
+        section("fig3", "fig3: optimization waterfall (n=512, --fast)",
+                lambda: bench_optimizations.run(n=512, n_naive=96))
+        section("fig4", "fig4: block-size tuning (n=512, --fast)",
+                lambda: bench_blocksize.run(n=512, blocks=(32, 64, 128, 256)))
+        section("table1", "table1: pairwise vs triplet (--fast)",
+                lambda: bench_variants.run(ns=(128, 256, 512)))
+        section("table1b",
+                "table1b: dense vs tri kernel schedule (jnp impl, --fast)",
+                lambda: bench_variants.run_kernels(ns=(512, 1024)))
     else:
-        bench_optimizations.main()
-        bench_blocksize.main()
-        bench_variants.main()
-    bench_scaling.main()
-    bench_text_analysis.main()
+        section("fig3", "fig3: optimization waterfall",
+                bench_optimizations.run)
+        section("fig4", "fig4: block-size tuning (n=1024)",
+                bench_blocksize.run)
+        section("table1", "table1: pairwise vs triplet", bench_variants.run)
+        section("table1b", "table1b: dense vs tri kernel schedule (jnp impl)",
+                bench_variants.run_kernels)
+    section("scaling_measured", "fig9: measured scaling",
+            bench_scaling.measured)
+    section("comm_model", "comm model (n=100k analytic)",
+            bench_scaling.comm_model)
+    section("sec7", "sec7: text-analysis application", bench_text_analysis.run)
     from . import bench_graphs
     if args.fast:
-        common.emit(bench_graphs.run(ns=(256,)),
-                    header="appendixC: PaLD on graph APSP (--fast)")
+        section("appendixC", "appendixC: PaLD on graph APSP (--fast)",
+                lambda: bench_graphs.run(ns=(256,)))
     else:
-        bench_graphs.main()
+        section("appendixC", "appendixC: PaLD on graph APSP", bench_graphs.run)
 
     here = os.path.dirname(__file__)
     from . import roofline
@@ -56,13 +101,11 @@ def main() -> None:
             print()
     pald = os.path.join(here, "dryrun_out_pald")
     if os.path.isdir(pald) and os.listdir(pald):
-        import glob as _glob
-        import json as _json
         print("# pald workload dry-run (paper technique at pod scale)")
         print("| workload | strategy | mesh | GiB/dev | coll GiB/chip | compute_s | coll_s | bottleneck |")
         print("|---|---|---|---|---|---|---|---|")
-        for p in sorted(_glob.glob(os.path.join(pald, "*.json"))):
-            c = _json.load(open(p))
+        for p in sorted(glob.glob(os.path.join(pald, "*.json"))):
+            c = json.load(open(p))
             if c.get("status") != "ok":
                 print(f"| {os.path.basename(p)} | — | — | — | — | — | — | ERROR |")
                 continue
@@ -73,7 +116,21 @@ def main() -> None:
                   f"| {gib:.2f} | {c['coll_bytes_per_chip']/2**30:.2f} "
                   f"| {r['compute_s']:.2f} | {r['collective_s']:.3f} | {r['bottleneck']} |")
         print()
-    print(f"# benchmarks done in {time.time()-t0:.1f}s")
+    total = time.time() - t0
+    if args.fast or args.json:
+        import jax
+        out = _json_path(args.json)
+        report = {
+            "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "fast": bool(args.fast),
+            "backend": jax.default_backend(),
+            "total_seconds": round(total, 2),
+            "sections": sections,
+        }
+        with open(out, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {out}")
+    print(f"# benchmarks done in {total:.1f}s")
 
 
 if __name__ == "__main__":

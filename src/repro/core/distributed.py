@@ -40,7 +40,24 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.kernels import ops as kops
 
-__all__ = ["pald_distributed"]
+# jax.shard_map is top-level only from jax>=0.5; fall back to the
+# experimental location on older versions (this container ships 0.4.x).
+try:
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+__all__ = ["pald_distributed", "shard_map_compat"]
+
+
+def shard_map_compat(body, *, mesh, in_specs, out_specs):
+    """shard_map across jax versions: new check_vma kwarg vs old check_rep."""
+    try:
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    except TypeError:  # pre-0.5 jax spells the kwarg check_rep
+        return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
 
 
 def _weights_rows(U_rows: jnp.ndarray, row_offset: jnp.ndarray, n_valid) -> jnp.ndarray:
@@ -57,16 +74,18 @@ def _weights_rows(U_rows: jnp.ndarray, row_offset: jnp.ndarray, n_valid) -> jnp.
 # ---------------------------------------------------------------------------
 # 1-D strategies: D row-sharded over a single (flattened) axis
 # ---------------------------------------------------------------------------
-def _allgather_body(Dloc, *, axis, n_valid, impl):
+def _allgather_body(Dloc, *, axis, n_valid, impl, block="auto", block_z="auto"):
     m = Dloc.shape[0]
     Dall = jax.lax.all_gather(Dloc, axis, tiled=True)          # (n, n)
     off = jax.lax.axis_index(axis) * m
-    U = kops.focus_general(Dloc, Dall, Dloc, impl=impl)        # (m, n)
+    U = kops.focus_general(Dloc, Dall, Dloc, impl=impl,
+                           block=block, block_z=block_z)       # (m, n)
     W = _weights_rows(U, off, n_valid)
-    return kops.cohesion_general(Dloc, Dall, Dloc, W, impl=impl)
+    return kops.cohesion_general(Dloc, Dall, Dloc, W, impl=impl,
+                                 block=block, block_z=block_z)
 
 
-def _ring_body(Dloc, *, axis, p, n_valid, impl):
+def _ring_body(Dloc, *, axis, p, n_valid, impl, block="auto", block_z="auto"):
     m, n = Dloc.shape
     fwd = [(j, (j + 1) % p) for j in range(p)]
     r = jax.lax.axis_index(axis)
@@ -81,7 +100,8 @@ def _ring_body(Dloc, *, axis, p, n_valid, impl):
         nxt = jax.lax.ppermute(blk, axis, fwd)                  # comm ...
         off = owner_cols(s)
         Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
-        Ublk = kops.focus_general(Dloc, blk, Dxy, impl=impl)    # ... overlaps compute
+        Ublk = kops.focus_general(Dloc, blk, Dxy, impl=impl,
+                                  block=block, block_z=block_z)  # ... overlaps compute
         U = jax.lax.dynamic_update_slice(U, Ublk, (0, off))
         return nxt, U
 
@@ -97,7 +117,8 @@ def _ring_body(Dloc, *, axis, p, n_valid, impl):
         off = owner_cols(s)
         Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
         Wxy = jax.lax.dynamic_slice(W, (0, off), (m, m))
-        C = C + kops.cohesion_general(Dloc, blk, Dxy, Wxy, impl=impl)
+        C = C + kops.cohesion_general(Dloc, blk, Dxy, Wxy, impl=impl,
+                                      block=block, block_z=block_z)
         return nxt, C
 
     _, C = jax.lax.fori_loop(
@@ -109,7 +130,8 @@ def _ring_body(Dloc, *, axis, p, n_valid, impl):
 # ---------------------------------------------------------------------------
 # 2-D strategy (comm-optimal), optionally streaming over the pod axis
 # ---------------------------------------------------------------------------
-def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, impl, mesh_shape):
+def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, impl, mesh_shape,
+             block="auto", block_z="auto"):
     mr, mc = Dblk.shape
     gathered_rows = tuple(a for a in row_axes if a != stream_axis)
     # row index offset of this device's X block within the global ordering
@@ -149,7 +171,8 @@ def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, impl, mesh_shape
         nxt = blk if stream_axis is None else jax.lax.ppermute(blk, stream_axis, fwd)
         zoff = slab_row_offset(s)
         dxz = jax.lax.dynamic_slice(Grow, (0, zoff), (mr, slab_rows))
-        U = U + kops.focus_general(dxz, blk.T, Dblk, impl=impl)
+        U = U + kops.focus_general(dxz, blk.T, Dblk, impl=impl,
+                                   block=block, block_z=block_z)
         return nxt, U
 
     _, U = jax.lax.fori_loop(0, nsteps, f_step, (slab, jnp.zeros((mr, mc), jnp.float32)))
@@ -165,7 +188,8 @@ def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, impl, mesh_shape
         yoff = slab_row_offset(s)
         dxy = jax.lax.dynamic_slice(Grow, (0, yoff), (mr, slab_rows))
         w = jax.lax.dynamic_slice(Wrow, (0, yoff), (mr, slab_rows))
-        C = C + kops.cohesion_general(Dblk, blk, dxy, w, impl=impl)
+        C = C + kops.cohesion_general(Dblk, blk, dxy, w, impl=impl,
+                                      block=block, block_z=block_z)
         return nxt, C
 
     _, C = jax.lax.fori_loop(0, nsteps, c_step, (slab, jnp.zeros((mr, mc), jnp.float32)))
@@ -186,11 +210,17 @@ def pald_distributed(
     normalize: bool = True,
     impl: str | None = None,
     comm_dtype=None,
+    block: int | str = "auto",
+    block_z: int | str = "auto",
 ) -> jnp.ndarray:
     """Compute the PaLD cohesion matrix on a device mesh.
 
     D is a host/global array; it is padded to shard evenly, placed according
     to the strategy, processed, and returned unsharded (n, n).
+
+    ``block``/``block_z`` are the per-device kernel tiles; ``"auto"``
+    (default) resolves them from the persistent tuning cache
+    (``repro.tuning``), keyed by the per-device problem size.
 
     ``comm_dtype=jnp.bfloat16`` moves/gathers distances in bf16 (halving
     every collective) and compares in bf16 — PaLD depends only on the
@@ -232,15 +262,29 @@ def pald_distributed(
     Dp = Dp.at[jnp.arange(m), jnp.arange(m)].set(0.0)
     n_valid = n0 if m != n0 else None
 
+    # resolve "auto" tiles once at dispatch (trace) time against the
+    # per-device row extent; `repro.kernels.ops` clamps them to each call's
+    # actual rectangle.
+    if block == "auto" or block_z == "auto":
+        from repro.tuning import autotune as _tuner
+
+        m_dev = m // (p if strategy in ("allgather", "ring") else pr)
+        rb, rbz = _tuner.resolve_blocks(max(m_dev, 1), "cohesion", impl=impl)
+        block = rb if block == "auto" else block
+        block_z = rbz if block_z == "auto" else block_z
+    block, block_z = int(block), int(block_z)
+
     mesh_shape = sizes
     if strategy == "allgather":
         body = functools.partial(
-            _allgather_body, axis=flat_axes, n_valid=n_valid, impl=impl
+            _allgather_body, axis=flat_axes, n_valid=n_valid, impl=impl,
+            block=block, block_z=block_z
         )
         out_spec = P(flat_axes, None)
     elif strategy == "ring":
         body = functools.partial(
-            _ring_body, axis=flat_axes, p=p, n_valid=n_valid, impl=impl
+            _ring_body, axis=flat_axes, p=p, n_valid=n_valid, impl=impl,
+            block=block, block_z=block_z
         )
         out_spec = P(flat_axes, None)
     elif strategy == "2d":
@@ -252,15 +296,15 @@ def pald_distributed(
             n_valid=n_valid,
             impl=impl,
             mesh_shape=mesh_shape,
+            block=block,
+            block_z=block_z,
         )
         out_spec = P(tuple(row_axes), col_axis)
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
 
     fn = jax.jit(
-        jax.shard_map(
-            body, mesh=mesh, in_specs=spec_in, out_specs=out_spec, check_vma=False
-        )
+        shard_map_compat(body, mesh=mesh, in_specs=spec_in, out_specs=out_spec)
     )
     C = fn(Dp)[:n0, :n0]
     if normalize:

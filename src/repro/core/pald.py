@@ -4,18 +4,27 @@
     C = pald.cohesion(D)                      # auto method selection
     C = pald.cohesion(D, method="pairwise")   # blocked pairwise (Fig. 5)
     C = pald.cohesion(D, method="triplet")    # block-symmetric (Alg. 2 analogue)
-    C = pald.cohesion(D, method="kernel")     # Pallas TPU kernels
+    C = pald.cohesion(D, method="kernel")     # Pallas TPU kernels (dense grid)
+    C = pald.cohesion(D, method="kernel",
+                      schedule="tri")         # upper-tri kernel pipeline
     C = pald.cohesion(D, method="dense")      # un-blocked vectorized baseline
 
 Inputs of any size are padded internally to a block multiple with +inf
 distances; padded points land outside every local focus and contribute
 nothing, so the result restricted to the original n x n is exact.
+
+``method="auto"`` consults the persistent tuning cache (measured crossovers
+recorded by ``benchmarks/hillclimb.py methods``) and falls back to the seed
+heuristic on a cold cache.  ``block="auto"`` resolves the tile through the
+same cache (``repro.tuning``).
 """
 from __future__ import annotations
 
 from typing import Literal
 
 import jax.numpy as jnp
+
+from repro.tuning import autotune as _tuner
 
 from . import pairwise as _pairwise
 from . import triplet as _triplet
@@ -46,16 +55,40 @@ def cohesion(
     D: jnp.ndarray,
     *,
     method: Method = "auto",
-    block: int = 128,
+    block: int | str = 128,
+    block_z: int | str | None = None,
+    schedule: str = "dense",
     normalize: bool = True,
     z_chunk: int | None = None,
 ) -> jnp.ndarray:
-    """Compute the PaLD cohesion matrix C from a distance matrix D."""
+    """Compute the PaLD cohesion matrix C from a distance matrix D.
+
+    ``schedule="tri"`` (kernel method only) runs both passes on the
+    upper-triangular block schedule — half the block-pair visits.
+    ``block="auto"`` resolves tiles via the tuning cache.
+    """
     n = D.shape[0]
+    if schedule not in ("dense", "tri"):
+        raise ValueError(f"unknown schedule {schedule!r}")
     if method == "auto":
-        method = "dense" if n <= 256 else "triplet"
+        # an explicit tri request pins the kernel pipeline (the only method
+        # with a tri schedule); otherwise use the measured crossover
+        method = "kernel" if schedule == "tri" else _tuner.method_for(n)
+    if method not in ("dense", "pairwise", "triplet", "kernel"):
+        raise ValueError(f"unknown method {method!r}")
+    if schedule == "tri" and method != "kernel":
+        raise ValueError(
+            f"schedule='tri' is only available for method='kernel', got {method!r}"
+        )
     if method == "dense":
         return _pairwise.pald_dense(D, z_chunk=z_chunk, normalize=normalize)
+    if block == "auto":
+        pass_ = {"pairwise": "pald", "triplet": "pald",
+                 "kernel": "pald_tri" if schedule == "tri" else "pald"}[method]
+        block, bz_auto = _tuner.resolve_blocks(n, pass_)
+        if block_z is None:
+            block_z = bz_auto
+    block = int(block)
     Dp, n0 = pad_distance_matrix(jnp.asarray(D, jnp.float32), block)
     nv = jnp.asarray(n0) if Dp.shape[0] != n0 else None
     # normalization is applied here (not inside the blocked fns) so the padded
@@ -67,7 +100,8 @@ def cohesion(
     elif method == "kernel":
         from repro.kernels import ops as _kops
 
-        C = _kops.pald(Dp, block=block, n_valid=nv)
+        kz = {} if block_z is None else {"block_z": block_z}
+        C = _kops.pald(Dp, block=block, n_valid=nv, schedule=schedule, **kz)
     else:
         raise ValueError(f"unknown method {method!r}")
     C = C[:n0, :n0]

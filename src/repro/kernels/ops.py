@@ -10,6 +10,16 @@ square algorithm and the shard_map distributed algorithms call per device:
 
     focus_general(DXZ, DYZ, DXY)        -> U (mx, my)
     cohesion_general(DXZ, DYZ, DXY, W)  -> C (mx, mz)
+
+The square sequential forms additionally support ``schedule="tri"`` — the
+upper-triangular block schedules (pald_focus_tri / pald_cohesion_tri,
+DESIGN.md §4.3) that halve the block-pair visits of both passes.
+
+Block sizes accept ``"auto"``: resolved through the persistent autotuner
+cache (``repro.tuning``), falling back to size-aware defaults on a miss.
+Dims that don't divide by the chosen tile are padded up to the next tile
+multiple (+inf distances / zero weights, exact by construction) instead of
+silently degrading to tiny divisor blocks.
 """
 from __future__ import annotations
 
@@ -18,13 +28,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.tuning import autotune as _tuner
+
 from .pald_cohesion import cohesion_general_pallas, cohesion_pallas  # noqa: F401
+from .pald_cohesion_tri import cohesion_tri_pallas  # noqa: F401
 from .pald_focus import focus_general_pallas, focus_pallas  # noqa: F401
 from .pald_focus_tri import focus_tri_pallas  # noqa: F401
 from .ref import weights_ref
 
 __all__ = [
     "pald",
+    "pald_tri",
     "focus",
     "cohesion_from_weights",
     "focus_general",
@@ -47,6 +61,37 @@ def _pick_block(m: int, want: int) -> int:
     while m % b:
         b -= 1
     return b
+
+
+def _block_and_pad(m: int, want: int) -> tuple[int, int]:
+    """Tile size and padded extent for one dim.
+
+    Shrinking to a divisor of m is fine when the divisor stays reasonable,
+    but for prime-ish m it collapses to block=1 — a catastrophic grid (m^2
+    steps where there should be (m/want)^2).  In that case pad m up to the
+    next multiple of ``want`` and keep the requested tile.
+    """
+    want = max(min(want, m), 1)
+    b = _pick_block(m, want)
+    if b == m or b >= max(want // 2, 8):
+        return b, m
+    return want, -(-m // want) * want
+
+
+def _pad2(a: jnp.ndarray, mr: int, mc: int, value: float) -> jnp.ndarray:
+    r, c = a.shape
+    if (r, c) == (mr, mc):
+        return a
+    return jnp.pad(a, ((0, mr - r), (0, mc - c)), constant_values=value)
+
+
+def _resolve_blocks(n: int, pass_: str, block, block_z, impl: str) -> tuple[int, int]:
+    """Turn "auto" block requests into concrete tiles via the tuning cache."""
+    if block == "auto" or block_z == "auto":
+        rb, rbz = _tuner.resolve_blocks(n, pass_, impl=impl)
+        block = rb if block == "auto" else block
+        block_z = rbz if block_z == "auto" else block_z
+    return int(block), int(block_z)
 
 
 # --------------------------------------------------------------------------
@@ -104,70 +149,248 @@ def _cohesion_general_jnp(DXZ, DYZ, DXY, W, *, chunk: int = 128):
 
 
 # --------------------------------------------------------------------------
+# jnp fallbacks for the upper-triangular block schedules (square case).
+# Same tie semantics as the tri kernels: the y-role reuses the x-role
+# comparison through its complement, i.e. ties='ignore' (support goes to y).
+# --------------------------------------------------------------------------
+def _tri_pairs(nb: int):
+    import numpy as np
+    xs, ys = np.triu_indices(nb)
+    return jnp.asarray(xs, jnp.int32), jnp.asarray(ys, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _focus_tri_jnp(D, *, block: int = 128):
+    n = D.shape[0]
+    nb = n // block
+    xs, ys = _tri_pairs(nb)
+
+    def body(i, U):
+        xb, yb = xs[i], ys[i]
+        Dx = jax.lax.dynamic_slice(D, (xb * block, 0), (block, n))
+        Dy = jax.lax.dynamic_slice(D, (yb * block, 0), (block, n))
+        Dxy = jax.lax.dynamic_slice_in_dim(Dx, yb * block, block, axis=1)
+        m = (Dx[:, None, :] < Dxy[:, :, None]) | (Dy[None, :, :] < Dxy[:, :, None])
+        blk = jnp.sum(m, axis=-1, dtype=jnp.float32)
+        U = jax.lax.dynamic_update_slice(U, blk, (xb * block, yb * block))
+        return jax.lax.dynamic_update_slice(U, blk.T, (yb * block, xb * block))
+
+    npairs = int(xs.shape[0])
+    return jax.lax.fori_loop(0, npairs, body, jnp.zeros((n, n), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _cohesion_tri_jnp(D, W, *, block: int = 128):
+    """Both role updates per upper-triangular block pair.
+
+    The y-role is expressed in the same row-major orientation as the x-role
+    (roles swapped through the symmetry of D and W), so both einsums reduce
+    over the middle axis — the matmul-friendly layout XLA lowers best.  The
+    y-role's ``<=`` is the complement of the x-role's ``<`` (ties -> y,
+    ``ties='ignore'``), matching the tri kernel.  Diagonal blocks skip the
+    y-role computation entirely (lax.cond): the one-sided x-role already
+    covers both orders of every in-block pair.
+    """
+    n = D.shape[0]
+    nb = n // block
+    xs, ys = _tri_pairs(nb)
+
+    def body(i, C):
+        xb, yb = xs[i], ys[i]
+        Dx = jax.lax.dynamic_slice(D, (xb * block, 0), (block, n))
+        Dy = jax.lax.dynamic_slice(D, (yb * block, 0), (block, n))
+        Dxy = jax.lax.dynamic_slice_in_dim(Dx, yb * block, block, axis=1)
+        Wxy = jax.lax.dynamic_slice(W, (xb * block, yb * block), (block, block))
+        gx = (Dx[:, None, :] < Dy[None, :, :]) & (Dx[:, None, :] < Dxy[:, :, None])
+        add_x = jnp.einsum("xyz,xy->xz", gx.astype(jnp.float32), Wxy)
+
+        def y_role(_):
+            gy = (Dy[:, None, :] <= Dx[None, :, :]) & (
+                Dy[:, None, :] < Dxy.T[:, :, None]
+            )
+            return jnp.einsum("yxz,yx->yz", gy.astype(jnp.float32), Wxy.T)
+
+        add_y = jax.lax.cond(
+            xb == yb, lambda _: jnp.zeros((block, n), jnp.float32), y_role, None
+        )
+        rx = jax.lax.dynamic_slice(C, (xb * block, 0), (block, n))
+        C = jax.lax.dynamic_update_slice(C, rx + add_x, (xb * block, 0))
+        ry = jax.lax.dynamic_slice(C, (yb * block, 0), (block, n))
+        return jax.lax.dynamic_update_slice(C, ry + add_y, (yb * block, 0))
+
+    npairs = int(xs.shape[0])
+    return jax.lax.fori_loop(0, npairs, body, jnp.zeros((n, n), jnp.float32))
+
+
+def _pad_square_tri(D, W, q: int):
+    """Pad square inputs to a multiple of the tile quantum q (inf distances,
+    zero weights: padded points never contribute to real entries)."""
+    n = D.shape[0]
+    m = -(-n // q) * q
+    if m == n:
+        return D, W, n
+    Dp = _pad2(D.astype(jnp.float32), m, m, jnp.inf)
+    Dp = Dp.at[jnp.arange(n, m), jnp.arange(n, m)].set(0.0)
+    Wp = None if W is None else _pad2(W.astype(jnp.float32), m, m, 0.0)
+    return Dp, Wp, n
+
+
+# --------------------------------------------------------------------------
 # public entry points
 # --------------------------------------------------------------------------
-def focus_general(DXZ, DYZ, DXY, *, block: int = 128, block_z: int = 512, impl: str | None = None):
+def focus_general(DXZ, DYZ, DXY, *, block=128, block_z=512, impl: str | None = None):
     impl = impl or _default_impl()
+    block, block_z = _resolve_blocks(max(DXZ.shape), "focus", block, block_z, impl)
     if impl == "jnp":
         return _focus_general_jnp(DXZ, DYZ, DXY, chunk=block_z)
-    bx = _pick_block(DXZ.shape[0], block)
-    by = _pick_block(DYZ.shape[0], block)
-    bz = _pick_block(DXZ.shape[1], block_z)
-    return focus_general_pallas(
-        DXZ, DYZ, DXY, block_x=bx, block_y=by, block_z=bz, interpret=impl == "interpret"
+    (mx, mz), my = DXZ.shape, DYZ.shape[0]
+    bx, mxp = _block_and_pad(mx, block)
+    by, myp = _block_and_pad(my, block)
+    bz, mzp = _block_and_pad(mz, block_z)
+    U = focus_general_pallas(
+        _pad2(DXZ, mxp, mzp, jnp.inf),
+        _pad2(DYZ, myp, mzp, jnp.inf),
+        _pad2(DXY, mxp, myp, jnp.inf),
+        block_x=bx, block_y=by, block_z=bz, interpret=impl == "interpret",
     )
+    return U[:mx, :my]
 
 
-def cohesion_general(DXZ, DYZ, DXY, W, *, block: int = 128, block_z: int = 512, impl: str | None = None):
+def cohesion_general(DXZ, DYZ, DXY, W, *, block=128, block_z=512, impl: str | None = None):
     impl = impl or _default_impl()
+    block, block_z = _resolve_blocks(max(DXZ.shape), "cohesion", block, block_z, impl)
     if impl == "jnp":
         return _cohesion_general_jnp(DXZ, DYZ, DXY, W, chunk=block)
-    bx = _pick_block(DXZ.shape[0], block)
-    by = _pick_block(DYZ.shape[0], block)
-    bz = _pick_block(DXZ.shape[1], block_z)
-    return cohesion_general_pallas(
-        DXZ, DYZ, DXY, W, block_x=bx, block_y=by, block_z=bz, interpret=impl == "interpret"
+    (mx, mz), my = DXZ.shape, DYZ.shape[0]
+    bx, mxp = _block_and_pad(mx, block)
+    by, myp = _block_and_pad(my, block)
+    bz, mzp = _block_and_pad(mz, block_z)
+    C = cohesion_general_pallas(
+        _pad2(DXZ, mxp, mzp, jnp.inf),
+        _pad2(DYZ, myp, mzp, jnp.inf),
+        _pad2(DXY, mxp, myp, jnp.inf),
+        _pad2(W, mxp, myp, 0.0),
+        block_x=bx, block_z=bz, block_y=by, interpret=impl == "interpret",
     )
+    return C[:mx, :mz]
 
 
-def focus(D, *, block: int = 128, block_z: int = 512, impl: str | None = None,
+def focus(D, *, block=128, block_z=512, impl: str | None = None,
           schedule: str = "dense"):
     """schedule='tri' uses the upper-triangular scalar-prefetch kernel
     (pald_focus_tri): ~half the comparisons of the dense grid, same
     result.  Only meaningful for the square (sequential) case."""
     if schedule == "tri":
-        impl = impl or ("pallas" if on_tpu() else "interpret")
-        if impl in ("pallas", "interpret"):
-            b = _pick_block(D.shape[0], block)
-            bz = _pick_block(D.shape[0], block_z)
-            return focus_tri_pallas(
-                D, block=b, block_z=bz, interpret=impl == "interpret"
-            )
+        impl = impl or ("pallas" if on_tpu() else "jnp")
+        n = D.shape[0]
+        block, block_z = _resolve_blocks(n, "focus_tri", block, block_z, impl)
+        block, block_z = min(block, n), min(block_z, n)
+        if impl == "jnp":
+            Dp, _, n0 = _pad_square_tri(D, None, block)
+            return _focus_tri_jnp(Dp, block=block)[:n0, :n0]
+        # pad to the largest tile, then shrink tiles to divisors of the
+        # padded size (keeps the quantum bounded — never an lcm blow-up)
+        Dp, _, n0 = _pad_square_tri(D, None, max(block, block_z))
+        m = Dp.shape[0]
+        block, block_z = _pick_block(m, block), _pick_block(m, block_z)
+        U = focus_tri_pallas(
+            Dp, block=block, block_z=block_z, interpret=impl == "interpret"
+        )
+        return U[:n0, :n0]
     return focus_general(D, D, D, block=block, block_z=block_z, impl=impl)
 
 
-def cohesion_from_weights(D, W, *, block: int = 128, block_z: int = 512, impl: str | None = None):
+def cohesion_from_weights(D, W, *, block=128, block_z=512, impl: str | None = None,
+                          schedule: str = "dense"):
+    """Pass 2 from precomputed reciprocal weights W = 1/U.
+
+    schedule='tri' enumerates only the upper-triangular block pairs and
+    applies both role updates per visit (pald_cohesion_tri)."""
+    if schedule == "tri":
+        impl = impl or ("pallas" if on_tpu() else "jnp")
+        n = D.shape[0]
+        block, block_z = _resolve_blocks(n, "cohesion_tri", block, block_z, impl)
+        block, block_z = min(block, n), min(block_z, n)
+        if impl == "jnp":
+            Dp, Wp, n0 = _pad_square_tri(D, W, block)
+            return _cohesion_tri_jnp(Dp, Wp, block=block)[:n0, :n0]
+        Dp, Wp, n0 = _pad_square_tri(D, W, max(block, block_z))
+        m = Dp.shape[0]
+        block, block_z = _pick_block(m, block), _pick_block(m, block_z)
+        C = cohesion_tri_pallas(
+            Dp, Wp, block=block, block_z=block_z, interpret=impl == "interpret"
+        )
+        return C[:n0, :n0]
     return cohesion_general(D, D, D, W, block=block, block_z=block_z, impl=impl)
 
 
 def pald(
     D,
     *,
-    block: int = 128,
-    block_z: int = 512,
+    block=128,
+    block_z=512,
     normalize: bool = False,
     n_valid=None,
     impl: str | None = None,
+    schedule: str = "dense",
 ):
-    """Full PaLD via the kernel pipeline (input padded to block multiples).
+    """Full PaLD via the kernel pipeline (inputs padded internally as needed).
 
     impl: 'pallas' (TPU), 'interpret' (CPU bit-faithful kernel execution),
     'jnp' (vectorized fallback), or None for backend default.
+    schedule: 'dense' runs the full rectangular grids; 'tri' dispatches to
+    the fused upper-triangular pipeline (``pald_tri``).
     """
+    if schedule == "tri":
+        return pald_tri(D, block=block, block_z=block_z, normalize=normalize,
+                        n_valid=n_valid, impl=impl)
     impl = impl or ("pallas" if on_tpu() else "interpret")
     U = focus(D, block=block, block_z=block_z, impl=impl)
     W = weights_ref(U, n_valid)
     C = cohesion_from_weights(D, W, block=block, block_z=block_z, impl=impl)
     if normalize:
         C = C / (D.shape[0] - 1)
+    return C
+
+
+def pald_tri(
+    D,
+    *,
+    block=128,
+    block_z=512,
+    normalize: bool = False,
+    n_valid=None,
+    impl: str | None = None,
+):
+    """Fused tri-schedule pipeline: tri-focus -> precomputed-reciprocal
+    weights -> tri-cohesion.  Both passes visit only the nb(nb+1)/2
+    upper-triangular block pairs (paper Algorithm 2 at block granularity,
+    DESIGN.md §4.3); padding to the tile multiple happens once here.
+    """
+    impl = impl or ("pallas" if on_tpu() else "interpret")
+    n_in = D.shape[0]
+    bf, bzf = _resolve_blocks(n_in, "focus_tri", block, block_z, impl)
+    bc, bzc = _resolve_blocks(n_in, "cohesion_tri", block, block_z, impl)
+    bf, bzf = min(bf, n_in), min(bzf, n_in)
+    bc, bzc = min(bc, n_in), min(bzc, n_in)
+    # one pipeline-level pad to the largest requested tile, then shrink each
+    # tile to a divisor of the padded size (bounded quantum, no lcm blow-up)
+    tiles = (bf, bc) if impl == "jnp" else (bf, bc, bzf, bzc)
+    Dp, _, _ = _pad_square_tri(D, None, max(tiles))
+    m = Dp.shape[0]
+    bf, bc = _pick_block(m, bf), _pick_block(m, bc)
+    bzf, bzc = _pick_block(m, bzf), _pick_block(m, bzc)
+    nv = n_valid if n_valid is not None else (n_in if Dp.shape[0] != n_in else None)
+    if impl == "jnp":
+        U = _focus_tri_jnp(Dp, block=bf)
+        W = weights_ref(U, nv)
+        C = _cohesion_tri_jnp(Dp, W, block=bc)
+    else:
+        interp = impl == "interpret"
+        U = focus_tri_pallas(Dp, block=bf, block_z=bzf, interpret=interp)
+        W = weights_ref(U, nv)
+        C = cohesion_tri_pallas(Dp, W, block=bc, block_z=bzc, interpret=interp)
+    C = C[:n_in, :n_in]
+    if normalize:
+        C = C / (n_in - 1)
     return C

@@ -1,0 +1,160 @@
+"""Triangular-schedule Pallas kernel for PaLD pass 2 (block-symmetric).
+
+The dense cohesion kernel (pald_cohesion) runs the full (nx, nz, ny) grid:
+every ordered (X, Y) block pair is visited and only the x-role update
+
+    C[x, z] += (d_xz < d_yz) & (d_xz < d_xy) * W[x, y]
+
+is applied.  Cohesion support is a property of the *unordered* pair, so half
+of those visits redo comparisons whose outcome is determined by the mirrored
+visit.  This variant is the pass-2 counterpart of ``pald_focus_tri``
+(DESIGN.md §4.3): only the nb(nb+1)/2 upper-triangular (X, Y) block pairs are
+enumerated — scalar-prefetched (xb, yb) index arrays via
+``pltpu.PrefetchScalarGridSpec`` — and each off-diagonal visit performs BOTH
+role updates:
+
+    x-role:  C[x, z] +=  (d_xz < d_yz)            & (d_xz < d_xy) * W[x, y]
+    y-role:  C[y, z] += !(d_xz < d_yz)            & (d_yz < d_xy) * W[x, y]
+
+The y-role reuses the x-role's comparison cube through its complement, which
+is the paper's Algorithm-2 branch ("whichever of x, y is closer to z gets the
+support") translated to branch-free vector form.  On an exact tie
+d_xz == d_yz the support goes to y — precisely the ``ties='ignore'``
+semantics of ``reference.pald_pairwise_reference`` (the dense path's two
+strict masks implement ``ties='drop'``; the schedules agree on tie-free
+input, which is what every optimized path targets).
+
+Accumulation layout (grid = (nz, npairs), pairs innermost, x-major order):
+
+* x-role → ``Cx`` (n, n): output block (block, block_z) at (xs[t], k).  With
+  pairs sorted x-major, all visits to one Cx block are consecutive grid
+  steps, so the block stays resident in VMEM and is accumulated in-kernel
+  (same discipline as the dense kernel's innermost y axis).
+* y-role → ``Cy`` (n, block_z * nz = n): output block (n, block_z) at
+  (0, k) — the full column slab for the current z-chunk.  Its index map is
+  constant in t, so it too is revisited only consecutively; rows ys[t] are
+  updated in place with a dynamic-slice store.  VMEM cost n * block_z
+  floats, which bounds block_z for large n (the autotuner's job).
+
+Diagonal blocks (xb == yb) apply the dense one-sided x-role over the full
+(block, block) pair square — that already covers both orders of every
+in-block pair — and skip the y-role.
+
+C = Cx + Cy is one O(n^2) merge outside the kernel.  Comparison count drops
+from 2 n^3 (dense ordered grid) to ~1.5 n^3 with half the D/W block traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["cohesion_tri_pallas"]
+
+
+def _cohesion_tri_kernel(xs_ref, ys_ref, dxz_ref, dyz_ref, dxy_ref, w_ref,
+                         cx_ref, cy_ref):
+    t = pl.program_id(1)
+    xb = xs_ref[t]
+    yb = ys_ref[t]
+    xprev = xs_ref[jnp.maximum(t - 1, 0)]
+
+    @pl.when((t == 0) | (xb != xprev))
+    def _init_cx():
+        cx_ref[...] = jnp.zeros_like(cx_ref)
+
+    @pl.when(t == 0)
+    def _init_cy():
+        cy_ref[...] = jnp.zeros_like(cy_ref)
+
+    dxz = dxz_ref[...]  # (b, bz)  D[X, z-chunk]
+    dyz = dyz_ref[...]  # (b, bz)  D[Y, z-chunk]
+    dxy = dxy_ref[...]  # (b, b)   D[X, Y]
+    w = w_ref[...]      # (b, b)   W[X, Y]
+    b = dxy.shape[1]
+    is_diag = xb == yb
+
+    def body(y, accs):
+        acc_x, acc_y = accs
+        row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)   # (1, bz) d_yz
+        thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)   # (b, 1)  d_xy
+        wy = jax.lax.dynamic_slice_in_dim(w, y, 1, axis=1)      # (b, 1)
+        cmp = dxz < row                                         # (b, bz)
+        gx = cmp & (dxz < thr)
+        acc_x = acc_x + gx.astype(jnp.float32) * wy
+        # y-role: complement of cmp, one output row, reduced over the x axis
+        gy = jnp.logical_not(cmp) & (row < thr)                 # (b, bz)
+        ry = jnp.sum(gy.astype(jnp.float32) * wy, axis=0, keepdims=True)
+        acc_y = jax.lax.dynamic_update_slice_in_dim(acc_y, ry, y, axis=0)
+        return acc_x, acc_y
+
+    bx, bz = dxz.shape
+    add_x, add_y = jax.lax.fori_loop(
+        0, b, body,
+        (jnp.zeros((bx, bz), jnp.float32), jnp.zeros((b, bz), jnp.float32)),
+    )
+    cx_ref[...] += add_x
+
+    @pl.when(jnp.logical_not(is_diag))
+    def _update_cy():
+        start = yb * b
+        cy_ref[pl.ds(start, b), :] += add_y
+
+
+@functools.partial(jax.jit, static_argnames=("block", "block_z", "interpret"))
+def cohesion_tri_pallas(
+    D: jnp.ndarray,
+    W: jnp.ndarray,
+    *,
+    block: int = 128,
+    block_z: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """C (n, n) via the upper-triangular block schedule (square case only)."""
+    n = D.shape[0]
+    assert W.shape == (n, n)
+    assert n % block == 0 and n % block_z == 0
+    nb = n // block
+    xs_np, ys_np = np.triu_indices(nb)   # row-major: xs non-decreasing
+    npairs = xs_np.shape[0]
+    xs = jnp.asarray(xs_np, jnp.int32)
+    ys = jnp.asarray(ys_np, jnp.int32)
+    D = D.astype(jnp.float32)
+    W = W.astype(jnp.float32)
+
+    grid = (n // block_z, npairs)        # z-chunk outer, pairs inner
+    spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            # D[X, z-chunk]
+            pl.BlockSpec((block, block_z), lambda k, t, xs, ys: (xs[t], k)),
+            # D[Y, z-chunk]
+            pl.BlockSpec((block, block_z), lambda k, t, xs, ys: (ys[t], k)),
+            # D[X, Y]
+            pl.BlockSpec((block, block), lambda k, t, xs, ys: (xs[t], ys[t])),
+            # W[X, Y]
+            pl.BlockSpec((block, block), lambda k, t, xs, ys: (xs[t], ys[t])),
+        ],
+        out_specs=[
+            # x-role: row block of Cx, consecutive revisits within an x-run
+            pl.BlockSpec((block, block_z), lambda k, t, xs, ys: (xs[t], k)),
+            # y-role: whole column slab of Cy, resident across the k-th sweep
+            pl.BlockSpec((n, block_z), lambda k, t, xs, ys: (0, k)),
+        ],
+    )
+    Cx, Cy = pl.pallas_call(
+        _cohesion_tri_kernel,
+        grid_spec=spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+            jax.ShapeDtypeStruct((n, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xs, ys, D, D, D, W)
+    return Cx + Cy

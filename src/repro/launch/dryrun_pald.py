@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import distributed
+from repro.core.distributed import shard_map_compat
 from repro.launch import hlo_analysis, mesh as meshlib
 
 # v5e VPU: 8 lanes x 128 sublanes x 4 ALUs x ~0.94 GHz ~= 3.85e12 op/s fp32.
@@ -68,8 +69,8 @@ def run_cell(n: int, multi_pod: bool, strategy: str, *, dtype=jnp.float32,
         )
         out_spec = spec_in
 
-    fn = jax.jit(jax.shard_map(
-        body, mesh=mesh, in_specs=spec_in, out_specs=out_spec, check_vma=False
+    fn = jax.jit(shard_map_compat(
+        body, mesh=mesh, in_specs=spec_in, out_specs=out_spec
     ))
     D = jax.ShapeDtypeStruct((n, n), dtype,
                              sharding=NamedSharding(mesh, spec_in))

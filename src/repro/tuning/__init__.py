@@ -1,0 +1,14 @@
+"""Persistent block-size autotuning for the PaLD kernel pipeline."""
+from .autotune import (  # noqa: F401
+    cache_path,
+    load_cache,
+    lookup,
+    lookup_nearest,
+    method_for,
+    random_distance_matrix,
+    resolve_blocks,
+    save_entry,
+    time_fn,
+    tune,
+    tune_methods,
+)

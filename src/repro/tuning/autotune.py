@@ -1,0 +1,299 @@
+"""Candidate-grid block-size autotuner with a persistent JSON cache.
+
+The paper's headline constant factors come from cache blocking with *tuned*
+block sizes, and the optimum moves with n, the pass, and the backend — yet
+every kernel entry point used to hard-code ``block=128, block_z=512``.  This
+module is the single source of truth instead (DESIGN.md §Tuning):
+
+* a JSON on-disk cache keyed by ``(backend, impl, n, pass)`` holding the
+  measured-best ``(block, block_z)`` plus the full timing grid;
+* ``resolve_blocks`` — the cheap consumer behind ``block="auto"`` in
+  ``core.pald``, ``kernels.ops`` and ``core.distributed``: exact cache hit,
+  else nearest-n hit (log-space) for the same key prefix, else a size-aware
+  heuristic.  Never measures; always fast enough to call at trace time.
+* ``tune`` — the producer: times a candidate grid for one ``(n, pass, impl)``
+  cell and records the winner.  Driven by ``benchmarks/hillclimb.py blocks``
+  so tuning results persist instead of being printed and forgotten.
+* ``tune_methods`` / ``method_for`` — the same pattern one level up:
+  measured method crossovers (dense vs triplet vs kernel) replacing the old
+  hard-coded ``n <= 256`` heuristic in ``pald.cohesion(method="auto")``.
+
+Cache location: ``$REPRO_TUNE_CACHE`` or ``~/.cache/repro_pald/blocktune.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Iterable, Sequence
+
+import numpy as np
+
+_CACHE_ENV = "REPRO_TUNE_CACHE"
+_MEM: dict[str, tuple[float, dict]] = {}  # abspath -> (mtime, data)
+
+# passes understood by `tune`; each maps to one kernel-pipeline entry point
+PASSES = ("focus", "cohesion", "focus_tri", "cohesion_tri", "pald", "pald_tri")
+
+
+def cache_path(path: str | None = None) -> str:
+    if path:
+        return path
+    env = os.environ.get(_CACHE_ENV)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro_pald",
+                        "blocktune.json")
+
+
+def _key(backend: str, impl: str, n: int, pass_: str) -> str:
+    return f"{backend}|{impl}|{int(n)}|{pass_}"
+
+
+def _split_key(key: str) -> tuple[str, str, int, str]:
+    backend, impl, n, pass_ = key.split("|")
+    return backend, impl, int(n), pass_
+
+
+def load_cache(path: str | None = None) -> dict:
+    p = os.path.abspath(cache_path(path))
+    try:
+        mtime = os.path.getmtime(p)
+    except OSError:
+        return {}
+    hit = _MEM.get(p)
+    if hit and hit[0] == mtime:
+        return hit[1]
+    try:
+        with open(p) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    _MEM[p] = (mtime, data)
+    return data
+
+
+def save_entry(backend: str, impl: str, n: int, pass_: str, record: dict,
+               path: str | None = None) -> str:
+    """Merge one record into the cache (atomic write); returns the key."""
+    p = os.path.abspath(cache_path(path))
+    data = dict(load_cache(path))
+    key = _key(backend, impl, n, pass_)
+    data[key] = record
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    tmp = p + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, p)
+    _MEM[p] = (os.path.getmtime(p), data)
+    return key
+
+
+def lookup(backend: str, impl: str, n: int, pass_: str,
+           path: str | None = None) -> dict | None:
+    return load_cache(path).get(_key(backend, impl, n, pass_))
+
+
+def lookup_nearest(backend: str, impl: str, n: int, pass_: str,
+                   path: str | None = None) -> tuple[int, dict] | None:
+    """Nearest-n cache entry (log-space) for the same (backend, impl, pass)."""
+    best = None
+    for key, rec in load_cache(path).items():
+        try:
+            b, i, kn, kp = _split_key(key)
+        except ValueError:
+            continue
+        if (b, i, kp) != (backend, impl, pass_) or kn <= 0:
+            continue
+        dist = abs(np.log(kn) - np.log(max(n, 1)))
+        if best is None or dist < best[0]:
+            best = (dist, kn, rec)
+    if best is None:
+        return None
+    return best[1], best[2]
+
+
+def _default_backend() -> str:
+    import jax
+    return jax.default_backend()
+
+
+def _default_impl(backend: str) -> str:
+    return "pallas" if backend == "tpu" else "jnp"
+
+
+def _default_blocks(n: int, pass_: str) -> tuple[int, int]:
+    """Size-aware fallback when nothing is cached (the old constants,
+    clamped).  cohesion_tri keeps its whole (n, block_z) column slab in
+    VMEM, so its z tile shrinks as n grows (~6 MiB budget)."""
+    block = min(128, n)
+    block_z = min(512, n)
+    if pass_ == "cohesion_tri" and n > 0:
+        block_z = min(block_z, max((6 << 20) // (4 * n), 8))
+    return max(block, 1), max(block_z, 1)
+
+
+def resolve_blocks(
+    n: int,
+    pass_: str,
+    *,
+    impl: str | None = None,
+    backend: str | None = None,
+    path: str | None = None,
+) -> tuple[int, int]:
+    """(block, block_z) for one pass at size n: cached, nearest, or default."""
+    backend = backend or _default_backend()
+    impl = impl or _default_impl(backend)
+    rec = lookup(backend, impl, n, pass_, path)
+    if rec is None:
+        near = lookup_nearest(backend, impl, n, pass_, path)
+        rec = near[1] if near else None
+    if rec and "block" in rec:
+        return (max(min(int(rec["block"]), n), 1),
+                max(min(int(rec.get("block_z", rec["block"])), n), 1))
+    return _default_blocks(n, pass_)
+
+
+# ---------------------------------------------------------------------------
+# measurement (producer side)
+# ---------------------------------------------------------------------------
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) with block_until_ready.
+
+    The single timing discipline shared by the tuner and the benchmark
+    suite (``benchmarks.common`` re-exports this)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def random_distance_matrix(n: int, seed: int = 0, dim: int = 8) -> np.ndarray:
+    """Euclidean distances of gaussian points (tie-free w.h.p.)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, dim)).astype(np.float32)
+    D = np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1)).astype(np.float32)
+    np.fill_diagonal(D, 0.0)
+    return D
+
+
+def _synthetic_inputs(n: int, seed: int = 0, with_weights: bool = False):
+    """(D, W) measurement inputs; W only when the pass consumes it (built
+    with the chunked kernel pipeline, never the O(n^3)-memory reference)."""
+    import jax.numpy as jnp
+    D = jnp.asarray(random_distance_matrix(n, seed), jnp.float32)
+    W = None
+    if with_weights:
+        from repro.kernels import ops, ref
+        W = ref.weights_ref(ops.focus(D, impl=None if ops.on_tpu() else "jnp"))
+    return D, W
+
+
+def _runner(pass_: str, D, W, block: int, block_z: int, impl: str):
+    from repro.kernels import ops
+    if pass_ == "focus":
+        return ops.focus_general(D, D, D, block=block, block_z=block_z, impl=impl)
+    if pass_ == "focus_tri":
+        return ops.focus(D, block=block, block_z=block_z, impl=impl, schedule="tri")
+    if pass_ == "cohesion":
+        return ops.cohesion_from_weights(D, W, block=block, block_z=block_z, impl=impl)
+    if pass_ == "cohesion_tri":
+        return ops.cohesion_from_weights(D, W, block=block, block_z=block_z,
+                                         impl=impl, schedule="tri")
+    if pass_ == "pald":
+        return ops.pald(D, block=block, block_z=block_z, impl=impl)
+    if pass_ == "pald_tri":
+        return ops.pald_tri(D, block=block, block_z=block_z, impl=impl)
+    raise ValueError(f"unknown pass {pass_!r} (expected one of {PASSES})")
+
+
+def tune(
+    n: int,
+    pass_: str,
+    *,
+    impl: str | None = None,
+    backend: str | None = None,
+    blocks: Iterable[int] = (32, 64, 128, 256, 512),
+    blocks_z: Iterable[int] = (128, 256, 512, 1024),
+    path: str | None = None,
+    save: bool = True,
+    seed: int = 0,
+    iters: int = 3,
+) -> dict:
+    """Measure the candidate grid for one (n, pass, impl) cell and record the
+    argmin.  Returns the record that was (or would be) cached."""
+    backend = backend or _default_backend()
+    impl = impl or _default_impl(backend)
+    D, W = _synthetic_inputs(n, seed,
+                             with_weights=pass_ in ("cohesion", "cohesion_tri"))
+    rows = []
+    for b in sorted({min(b, n) for b in blocks}):
+        for bz in sorted({min(z, n) for z in blocks_z}):
+            t = time_fn(lambda: _runner(pass_, D, W, b, bz, impl), iters=iters)
+            rows.append({"block": b, "block_z": bz, "seconds": round(t, 6)})
+    best = min(rows, key=lambda r: r["seconds"])
+    record = {
+        "block": best["block"],
+        "block_z": best["block_z"],
+        "seconds": best["seconds"],
+        "grid": rows,
+        "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+    if save:
+        save_entry(backend, impl, n, pass_, record, path)
+    return record
+
+
+# ---------------------------------------------------------------------------
+# method crossovers (dense / pairwise / triplet / kernel schedules)
+# ---------------------------------------------------------------------------
+_METHOD_IMPL = "-"  # methods span impls; keyed under a fixed placeholder
+
+
+def tune_methods(
+    ns: Sequence[int] = (64, 128, 256, 512, 1024),
+    methods: Sequence[str] = ("dense", "pairwise", "triplet"),
+    *,
+    backend: str | None = None,
+    path: str | None = None,
+    save: bool = True,
+    iters: int = 3,
+) -> list[dict]:
+    """Measure pald.cohesion per method across n; record the per-n winner so
+    method="auto" uses observed crossovers instead of a magic constant."""
+    from repro.core import pald
+    backend = backend or _default_backend()
+    out = []
+    for n in ns:
+        D, _ = _synthetic_inputs(n)
+        timings = {}
+        for m in methods:
+            timings[m] = round(
+                time_fn(lambda: pald.cohesion(D, method=m), iters=iters), 6
+            )
+        best = min(timings, key=timings.get)
+        record = {"method": best, "timings": timings,
+                  "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S")}
+        if save:
+            save_entry(backend, _METHOD_IMPL, n, "method", record, path)
+        out.append({"n": n, **record})
+    return out
+
+
+def method_for(n: int, *, backend: str | None = None,
+               path: str | None = None) -> str:
+    """Best cohesion method at size n: measured crossover if available,
+    else the seed heuristic (dense small, triplet large)."""
+    backend = backend or _default_backend()
+    rec = lookup(backend, _METHOD_IMPL, n, "method", path)
+    if rec is None:
+        near = lookup_nearest(backend, _METHOD_IMPL, n, "method", path)
+        rec = near[1] if near else None
+    if rec and rec.get("method"):
+        return str(rec["method"])
+    return "dense" if n <= 256 else "triplet"

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.distributed import shard_map_compat
 from repro.launch import hlo_analysis as H
 from repro.launch import mesh as meshlib
 
@@ -42,7 +43,7 @@ def test_parser_on_real_compiled_module():
     def f(x):
         return jax.lax.psum(x, "data")
 
-    sharded = jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P())
+    sharded = shard_map_compat(f, mesh=mesh, in_specs=P("data"), out_specs=P())
     x = jax.ShapeDtypeStruct((8, 32), jnp.float32,
                              sharding=NamedSharding(mesh, P("data")))
     compiled = jax.jit(sharded).lower(x).compile()

@@ -5,6 +5,9 @@ order* of distances — these tests pin that down mechanically, plus mass
 conservation and symmetry-group equivariance.
 """
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import assume, given, settings, strategies as st
 
 import jax.numpy as jnp

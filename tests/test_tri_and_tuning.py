@@ -1,0 +1,156 @@
+"""Tri-schedule cohesion kernel + block-size autotuner tests.
+
+Covers this PR's acceptance criteria: the upper-triangular pass-2 schedule
+matches the entry-wise ties='ignore' reference (interpret mode, padded and
+non-block-multiple n), the jnp fallback matches the kernel, prime-ish dims
+pad instead of degrading to block=1 grids, and the tuning cache round-trips.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import pald, reference
+from repro.kernels import ops, ref
+from repro.kernels.pald_cohesion_tri import cohesion_tri_pallas
+from repro.tuning import autotune
+
+from conftest import euclidean_distance_matrix
+
+
+def _D(rng, n, dtype=np.float32):
+    X = rng.normal(size=(n, 4))
+    return euclidean_distance_matrix(X).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# tri cohesion kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,blk,blkz", [
+    (32, 8, 8), (32, 16, 32), (64, 16, 16), (64, 32, 64), (96, 32, 96),
+])
+def test_cohesion_tri_kernel_sweep(rng, n, blk, blkz):
+    D = jnp.asarray(_D(rng, n))
+    W = ref.weights_ref(ref.focus_ref(D))
+    C = cohesion_tri_pallas(D, W, block=blk, block_z=blkz, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(C), np.asarray(ref.cohesion_ref(D, W)), rtol=1e-6, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("n", [37, 40, 100])
+def test_cohesion_tri_via_ops_nonmultiple(rng, n):
+    """ops pads non-block-multiple n internally; result stays exact."""
+    D = jnp.asarray(_D(rng, n))
+    W = ref.weights_ref(ref.focus_ref(D))
+    Cref = ref.cohesion_ref(D, W)
+    for impl in ("interpret", "jnp"):
+        C = ops.cohesion_from_weights(D, W, block=16, block_z=16, impl=impl,
+                                      schedule="tri")
+        np.testing.assert_allclose(np.asarray(C), np.asarray(Cref),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_tri_jnp_matches_interpret(rng):
+    D = jnp.asarray(_D(rng, 64))
+    Ci = ops.pald_tri(D, block=16, block_z=32, impl="interpret")
+    Cj = ops.pald_tri(D, block=16, block_z=32, impl="jnp")
+    np.testing.assert_allclose(np.asarray(Ci), np.asarray(Cj),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [37, 64])
+def test_api_tri_schedule_matches_reference(rng, n):
+    """pald.cohesion(method='kernel', schedule='tri') vs Algorithm 1 with
+    ties='ignore' — the tri schedule's complement trick implements exactly
+    those tie semantics; on tie-free input every path agrees."""
+    D = _D(rng, n, np.float64)
+    Cr = reference.pald_pairwise_reference(D, ties="ignore", normalize=True)
+    C = pald.cohesion(jnp.asarray(D), method="kernel", schedule="tri", block=16)
+    np.testing.assert_allclose(np.asarray(C), Cr, rtol=1e-4, atol=1e-6)
+
+
+def test_pald_tri_equals_dense_kernel_pipeline(rng):
+    D = jnp.asarray(_D(rng, 64))
+    Cd = ops.pald(D, block=16, block_z=32, impl="interpret")
+    Ct = ops.pald(D, block=16, block_z=32, impl="interpret", schedule="tri")
+    np.testing.assert_allclose(np.asarray(Ct), np.asarray(Cd),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# prime-ish dims: pad, don't degrade (regression for the block=1 grid)
+# ---------------------------------------------------------------------------
+def test_block_and_pad_prime_dims():
+    b, m = ops._block_and_pad(97, 32)
+    assert (b, m) == (32, 128)          # padded, not block=1
+    b, m = ops._block_and_pad(194, 32)  # 2 * 97: best divisor is 2
+    assert (b, m) == (32, 224)
+    b, m = ops._block_and_pad(96, 50)   # benign shrink to a divisor stays
+    assert (b, m) == (48, 96)
+    b, m = ops._block_and_pad(7, 32)    # single block, no grid to degrade
+    assert (b, m) == (7, 7)
+
+
+def test_prime_n_kernels_exact(rng):
+    n = 97
+    D = jnp.asarray(_D(rng, n))
+    U = ops.focus_general(D, D, D, block=32, block_z=32, impl="interpret")
+    np.testing.assert_allclose(np.asarray(U), np.asarray(ref.focus_ref(D)))
+    W = ref.weights_ref(ref.focus_ref(D))
+    C = ops.cohesion_general(D, D, D, W, block=32, block_z=32, impl="interpret")
+    np.testing.assert_allclose(np.asarray(C), np.asarray(ref.cohesion_ref(D, W)),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# autotuner cache
+# ---------------------------------------------------------------------------
+def test_cache_roundtrip(tmp_path):
+    cache = str(tmp_path / "tune.json")
+    autotune.save_entry("cpu", "jnp", 1024, "cohesion_tri",
+                        {"block": 64, "block_z": 256, "seconds": 0.5},
+                        path=cache)
+    # write -> reload -> same block choice
+    assert autotune.resolve_blocks(1024, "cohesion_tri", impl="jnp",
+                                   backend="cpu", path=cache) == (64, 256)
+    # nearest-n fallback (log-space): 2048 resolves to the 1024 entry
+    assert autotune.resolve_blocks(2048, "cohesion_tri", impl="jnp",
+                                   backend="cpu", path=cache) == (64, 256)
+    # a different pass misses the cache and takes the size-aware default
+    blk, bz = autotune.resolve_blocks(1024, "focus", impl="jnp",
+                                      backend="cpu", path=cache)
+    assert (blk, bz) == (128, 512)
+
+
+def test_tune_writes_cache_and_resolves(tmp_path):
+    cache = str(tmp_path / "tune.json")
+    rec = autotune.tune(32, "cohesion_tri", impl="jnp",
+                        blocks=(8, 16), blocks_z=(16,), path=cache, iters=1)
+    assert {"block", "block_z", "seconds", "grid"} <= set(rec)
+    got = autotune.resolve_blocks(32, "cohesion_tri", impl="jnp", path=cache)
+    assert got == (rec["block"], rec["block_z"])
+
+
+def test_method_crossover_cache(tmp_path):
+    cache = str(tmp_path / "tune.json")
+    # cold cache: seed heuristic
+    assert autotune.method_for(64, backend="cpu", path=cache) == "dense"
+    assert autotune.method_for(1024, backend="cpu", path=cache) == "triplet"
+    # measured crossover wins over the heuristic
+    autotune.save_entry("cpu", "-", 1024, "method",
+                        {"method": "pairwise", "timings": {}}, path=cache)
+    assert autotune.method_for(1024, backend="cpu", path=cache) == "pairwise"
+    assert autotune.method_for(900, backend="cpu", path=cache) == "pairwise"
+
+
+def test_block_auto_paths(tmp_path, rng, monkeypatch):
+    """block='auto' flows end to end through ops and the public API."""
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune.json"))
+    D = jnp.asarray(_D(rng, 48))
+    U = ops.focus(D, block="auto", block_z="auto", impl="jnp")
+    np.testing.assert_allclose(np.asarray(U), np.asarray(ref.focus_ref(D)))
+    C = pald.cohesion(D, method="kernel", schedule="tri", block="auto")
+    Cd = pald.cohesion(D, method="dense")
+    np.testing.assert_allclose(np.asarray(C), np.asarray(Cd),
+                               rtol=1e-5, atol=1e-6)
