@@ -11,9 +11,11 @@ from __future__ import annotations
 
 import functools
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import pairwise, triplet
+from repro.core import features, pairwise, triplet
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -68,9 +70,43 @@ def run_kernels(ns=(256, 512, 1024), impl: str = "jnp",
     return rows
 
 
+def run_fused(ns=(256, 1024), d: int = 8, metric: str = "sqeuclidean",
+              impl: str = "jnp", block: int = 128, block_z: int = 512) -> list[dict]:
+    """Fused features→cohesion vs materialize-then-kernel (ISSUE 2 acceptance).
+
+    Both sides are one jit'd function of the same (n, d) feature matrix:
+    the materialized side builds the full D with ``cdist_reference`` and
+    runs the kernel pipeline on it; the fused side computes distance tiles
+    inside the block loops and never holds D.
+    """
+    rows = []
+    for n in ns:
+        X = jnp.asarray(np.random.default_rng(0).normal(size=(n, d)),
+                        jnp.float32)
+        b, bz = min(block, n), min(block_z, n)
+        fused = jax.jit(functools.partial(
+            kops.pald_fused, metric=metric, block=b, block_z=bz, impl=impl))
+        mat = jax.jit(lambda X: kops.pald(
+            features.cdist_reference(X, metric=metric),
+            block=b, block_z=bz, impl=impl))
+        t_fused = time_fn(fused, X)
+        t_mat = time_fn(mat, X)
+        rows.append({
+            "n": n,
+            "d": d,
+            "metric": metric,
+            "impl": impl,
+            "fused_s": round(t_fused, 4),
+            "materialized_s": round(t_mat, 4),
+            "fused_speedup": round(t_mat / t_fused, 3),
+        })
+    return rows
+
+
 def main() -> None:
     emit(run(), header="table1: pairwise vs triplet")
     emit(run_kernels(), header="table1b: dense vs tri kernel schedule (jnp impl)")
+    emit(run_fused(), header="table1c: fused features vs materialize-then-kernel")
 
 
 if __name__ == "__main__":

@@ -100,6 +100,8 @@ def run_blocks(args) -> None:
         kw["blocks"] = _csv_ints(args.blocks)
     if args.block_z:
         kw["blocks_z"] = _csv_ints(args.block_z)
+    if getattr(args, "pass") == "pald_fused":
+        kw["d"] = args.d
     rec = autotune.tune(
         args.n, getattr(args, "pass"), impl=args.impl, path=args.cache,
         iters=args.iters, **kw,
@@ -145,9 +147,12 @@ def main() -> None:
     blocks.add_argument("--n", type=int, required=True)
     blocks.add_argument("--pass", required=True,
                         choices=("focus", "cohesion", "focus_tri",
-                                 "cohesion_tri", "pald", "pald_tri"))
+                                 "cohesion_tri", "pald", "pald_tri",
+                                 "pald_fused"))
     blocks.add_argument("--impl", default=None,
                         choices=(None, "jnp", "interpret", "pallas"))
+    blocks.add_argument("--d", type=int, default=8,
+                        help="feature dim (pald_fused cells key on it)")
     blocks.add_argument("--blocks", default=None, help="csv candidate blocks")
     blocks.add_argument("--block-z", default=None, help="csv candidate z tiles")
     blocks.add_argument("--iters", type=int, default=3)

@@ -7,6 +7,7 @@ Sections:
     fig4    block-size tuning             (bench_blocksize)
     table1  pairwise vs triplet           (bench_variants)
     table1b dense vs tri kernel schedule  (bench_variants.run_kernels)
+    table1c fused features vs materialize (bench_variants.run_fused)
     fig9+   scaling + comm model          (bench_scaling)
     sec7    text-analysis application     (bench_text_analysis)
     roofline summary of dry-run JSONs     (roofline), if present
@@ -71,6 +72,9 @@ def main() -> None:
         section("table1b",
                 "table1b: dense vs tri kernel schedule (jnp impl, --fast)",
                 lambda: bench_variants.run_kernels(ns=(512, 1024)))
+        section("fused",
+                "table1c: fused features vs materialize-then-kernel (--fast)",
+                lambda: bench_variants.run_fused(ns=(256, 1024)))
     else:
         section("fig3", "fig3: optimization waterfall",
                 bench_optimizations.run)
@@ -79,6 +83,9 @@ def main() -> None:
         section("table1", "table1: pairwise vs triplet", bench_variants.run)
         section("table1b", "table1b: dense vs tri kernel schedule (jnp impl)",
                 bench_variants.run_kernels)
+        section("fused",
+                "table1c: fused features vs materialize-then-kernel",
+                bench_variants.run_fused)
     section("scaling_measured", "fig9: measured scaling",
             bench_scaling.measured)
     section("comm_model", "comm model (n=100k analytic)",

@@ -36,6 +36,19 @@ def main() -> None:
         assert np.allclose(np.asarray(Cm), np.asarray(C), atol=1e-5)
     print("all four methods agree ✓")
 
+    # --- straight from features (no D matrix) -----------------------------
+    # the fused pipeline computes distance tiles in-register from feature
+    # tiles: D never hits HBM.  metrics: sqeuclidean / euclidean / cosine /
+    # manhattan
+    Cf = pald.from_features(jnp.asarray(X), metric="euclidean")
+    assert np.allclose(np.asarray(Cf), np.asarray(C), atol=1e-5)
+    print("fused from-features path agrees ✓")
+
+    # batched workloads vmap for free: (B, n, d) -> (B, n, n)
+    Xb = jnp.stack([jnp.asarray(X)] * 3)
+    Cb = pald.from_features(Xb, metric="euclidean", batch=2)
+    print(f"batched from_features: {Xb.shape} -> {Cb.shape}")
+
     # strongest ties of point 0 (inside the tight community)
     print("top ties of point 0:", analysis.top_ties(np.asarray(C), 0, k=3))
 

@@ -52,7 +52,16 @@ def communities(C: np.ndarray, threshold: float | None = None) -> list[list[int]
 
 
 def top_ties(C: np.ndarray, x: int, k: int = 10) -> list[tuple[int, float]]:
-    """Strongest symmetric ties of point x (paper §7 word-cloud analogue)."""
+    """Strongest symmetric ties of point x (paper §7 word-cloud analogue).
+
+    ``k`` is clamped to the n-1 real partners: a point has no tie to itself,
+    so asking for more must not pad the list with the -inf self-sentinel.
+    """
+    C = np.asarray(C)
+    n = C.shape[0]
+    k = min(k, n - 1)
+    if k <= 0:
+        return []
     S = np.minimum(C, C.T)
     row = S[x].copy()
     row[x] = -np.inf

@@ -47,7 +47,8 @@ try:
 except AttributeError:  # pragma: no cover - version-dependent
     from jax.experimental.shard_map import shard_map as _shard_map
 
-__all__ = ["pald_distributed", "shard_map_compat"]
+__all__ = ["pald_distributed", "pald_distributed_from_features",
+           "shard_map_compat"]
 
 
 def shard_map_compat(body, *, mesh, in_specs, out_specs):
@@ -123,6 +124,89 @@ def _ring_body(Dloc, *, axis, p, n_valid, impl, block="auto", block_z="auto"):
 
     _, C = jax.lax.fori_loop(
         0, p, c_step, (Dloc, jnp.zeros((m, n), jnp.float32))
+    )
+    return C
+
+
+# ---------------------------------------------------------------------------
+# feature-sharded 1-D strategies: X row-sharded, distances computed on-device
+#
+# Communicating the (n, d) feature matrix instead of the (n, n) distance
+# matrix shrinks every collective by a factor of n/d: the all-gather moves
+# n*d words (vs n^2) and the ring rotates (m, d) feature blocks (vs (m, n)
+# distance rows).  Each device re-imposes the +inf/zero-diag padding contract
+# locally via ``features.masked_dist_tile`` — padded feature rows are zeros,
+# which every metric maps to a finite distance, so masking by global index
+# is what keeps padded points out of real foci.
+# ---------------------------------------------------------------------------
+def _feat_allgather_body(Xloc, *, axis, metric, n_valid, impl,
+                         block="auto", block_z="auto"):
+    from .features import masked_dist_tile
+
+    m = Xloc.shape[0]
+    nv = n_valid
+    Xall = jax.lax.all_gather(Xloc, axis, tiled=True)            # (n, d)
+    n = Xall.shape[0]
+    if nv is None:
+        nv = n
+    off = jax.lax.axis_index(axis) * m
+    Dall = masked_dist_tile(Xall, Xall, metric, 0, 0, nv)        # (n, n) local
+    Dloc = jax.lax.dynamic_slice(Dall, (off, 0), (m, n))         # own rows
+    U = kops.focus_general(Dloc, Dall, Dloc, impl=impl,
+                           block=block, block_z=block_z)
+    W = _weights_rows(U, off, n_valid)
+    return kops.cohesion_general(Dloc, Dall, Dloc, W, impl=impl,
+                                 block=block, block_z=block_z)
+
+
+def _feat_ring_body(Xloc, *, axis, p, metric, n_valid, impl,
+                    block="auto", block_z="auto"):
+    from .features import masked_dist_tile
+
+    m = Xloc.shape[0]
+    fwd = [(j, (j + 1) % p) for j in range(p)]
+    r = jax.lax.axis_index(axis)
+    # the z axis of both passes needs every point's features; gathering X is
+    # the one O(n d) collective (the ring itself only moves (m, d) blocks)
+    Xall = jax.lax.all_gather(Xloc, axis, tiled=True)            # (n, d)
+    n = Xall.shape[0]
+    nv = n if n_valid is None else n_valid
+    Dloc = masked_dist_tile(Xloc, Xall, metric, r * m, 0, nv)    # (m, n)
+
+    def owner_off(s):
+        return ((r - s) % p) * m
+
+    # ---- pass 1: local-focus rows -----------------------------------------
+    def f_step(s, carry):
+        xblk, U = carry
+        nxt = jax.lax.ppermute(xblk, axis, fwd)                  # (m, d) comm
+        off = owner_off(s)
+        Dblk = masked_dist_tile(xblk, Xall, metric, off, 0, nv)  # recomputed
+        Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
+        Ublk = kops.focus_general(Dloc, Dblk, Dxy, impl=impl,
+                                  block=block, block_z=block_z)
+        U = jax.lax.dynamic_update_slice(U, Ublk, (0, off))
+        return nxt, U
+
+    _, U = jax.lax.fori_loop(
+        0, p, f_step, (Xloc, jnp.zeros((m, n), jnp.float32))
+    )
+    W = _weights_rows(U, r * m, n_valid)
+
+    # ---- pass 2: cohesion rows --------------------------------------------
+    def c_step(s, carry):
+        xblk, C = carry
+        nxt = jax.lax.ppermute(xblk, axis, fwd)
+        off = owner_off(s)
+        Dblk = masked_dist_tile(xblk, Xall, metric, off, 0, nv)
+        Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
+        Wxy = jax.lax.dynamic_slice(W, (0, off), (m, m))
+        C = C + kops.cohesion_general(Dloc, Dblk, Dxy, Wxy, impl=impl,
+                                      block=block, block_z=block_z)
+        return nxt, C
+
+    _, C = jax.lax.fori_loop(
+        0, p, c_step, (Xloc, jnp.zeros((m, n), jnp.float32))
     )
     return C
 
@@ -308,5 +392,76 @@ def pald_distributed(
     )
     C = fn(Dp)[:n0, :n0]
     if normalize:
-        C = C / (n0 - 1)
+        C = C / max(n0 - 1, 1)
+    return C
+
+
+def pald_distributed_from_features(
+    X: jnp.ndarray,
+    mesh: Mesh,
+    *,
+    metric: str = "euclidean",
+    strategy: str = "auto",
+    normalize: bool = True,
+    impl: str | None = None,
+    block: int | str = "auto",
+    block_z: int | str = "auto",
+) -> jnp.ndarray:
+    """Distributed PaLD straight from row-sharded feature vectors.
+
+    X (n, d) is zero-padded to shard evenly over the flattened mesh, row-
+    sharded, and each device computes its distance rows locally — the only
+    O(n)-scaled communication is feature movement (n*d words), an n/d-fold
+    reduction over the distance-sharded strategies.  Strategies:
+
+    allgather   one all-gather of X; each device holds (n, d) features and
+                the (n, n) distances it derives — memory n^2/device, like
+                the distance allgather, but comm drops from n^2 to n*d.
+    ring        X blocks rotate via ppermute; distance row slabs are
+                recomputed per step from the (m, d) block in flight —
+                memory O(n^2/P), comm 2 n*d words total.
+
+    The full distance matrix is never communicated; ``allgather`` is the
+    only strategy that materializes it (per device, by construction).
+    """
+    if strategy == "auto":
+        strategy = "ring"
+    if strategy not in ("allgather", "ring"):
+        raise ValueError(
+            f"unknown feature strategy {strategy!r} "
+            "(expected 'allgather' or 'ring')"
+        )
+    axis_names = tuple(mesh.axis_names)
+    p = mesh.size
+    X = jnp.asarray(X, jnp.float32)  # explicit boundary cast
+    n0, d = X.shape
+    m = -(-n0 // p) * p
+    Xp = jnp.pad(X, ((0, m - n0), (0, 0)))
+    n_valid = n0 if m != n0 else None
+
+    if block == "auto" or block_z == "auto":
+        from repro.tuning import autotune as _tuner
+
+        rb, rbz = _tuner.resolve_blocks(max(m // p, 1), "cohesion", impl=impl)
+        block = rb if block == "auto" else block
+        block_z = rbz if block_z == "auto" else block_z
+    block, block_z = int(block), int(block_z)
+
+    if strategy == "allgather":
+        body = functools.partial(
+            _feat_allgather_body, axis=axis_names, metric=metric,
+            n_valid=n_valid, impl=impl, block=block, block_z=block_z,
+        )
+    else:
+        body = functools.partial(
+            _feat_ring_body, axis=axis_names, p=p, metric=metric,
+            n_valid=n_valid, impl=impl, block=block, block_z=block_z,
+        )
+    fn = jax.jit(
+        shard_map_compat(body, mesh=mesh, in_specs=P(axis_names, None),
+                         out_specs=P(axis_names, None))
+    )
+    C = fn(Xp)[:n0, :n0]
+    if normalize:
+        C = C / max(n0 - 1, 1)
     return C

@@ -1,0 +1,249 @@
+"""Feature-space PaLD: distances from vectors, fused or materialized.
+
+Every real workload starts from feature vectors, not a distance matrix —
+yet the classic pipeline materializes the full O(n^2) ``D`` in HBM before
+pass 1, exactly the kind of avoidable data movement the paper's blocking
+analysis (W = Theta(n^3/sqrt(M))) warns about.  This module is the feature
+front-end:
+
+``cdist_reference(X, Y=None, metric=...)``
+    Plain-jnp pairwise distances for the supported metrics.  The oracle the
+    fused kernels are tested against, and the "materialize-then-PaLD" path.
+
+``from_features(X, metric=..., method=..., batch=...)``
+    The public entry point.  ``method="fused"`` (the default resolution of
+    ``method="auto"``) computes each distance *tile* on the fly from
+    ``(block, d)`` feature tiles inside the kernel, so ``D`` never hits HBM
+    (DESIGN.md §10).  Any other method materializes ``D`` once via
+    ``cdist_reference`` and delegates to ``pald.cohesion``.
+
+    A 3-D input ``X: (B, n, d)`` is treated as a batch and mapped with
+    ``jax.vmap`` to ``C: (B, n, n)``; ``batch=`` bounds how many batch
+    elements are vmapped per compiled call.
+
+Supported metrics (see ``METRICS``): ``sqeuclidean``, ``euclidean``,
+``cosine``, ``manhattan``.  All distance computation is float32; inputs of
+any float dtype are cast exactly once at this API boundary (float64 inputs
+are explicitly, not silently, downcast).
+
+Tile-level building blocks (``dist_tile``, ``masked_dist_tile``) are shared
+by the Pallas kernels (``repro.kernels.pald_fused``), the jnp fused
+fallback (``repro.kernels.ops``), and the feature-sharded distributed
+strategies (``repro.core.distributed``), so every path computes bit-wise
+comparable distances.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+METRICS = ("sqeuclidean", "euclidean", "cosine", "manhattan")
+
+Metric = Literal["sqeuclidean", "euclidean", "cosine", "manhattan"]
+
+_NORM_EPS = 1e-30  # cosine guard: zero vectors get distance 1, not nan
+
+__all__ = [
+    "METRICS",
+    "cdist_reference",
+    "dist_tile",
+    "masked_dist_tile",
+    "from_features",
+    "pad_features",
+]
+
+
+# ---------------------------------------------------------------------------
+# tile-level distance computation (usable inside Pallas kernel bodies)
+# ---------------------------------------------------------------------------
+def dist_tile(XA: jnp.ndarray, XB: jnp.ndarray, metric: str,
+              *, loop_d: bool = False) -> jnp.ndarray:
+    """(ma, d) x (mb, d) -> (ma, mb) distances, float32.
+
+    ``loop_d=True`` streams the feature axis with a fori_loop instead of
+    materializing the (ma, mb, d) broadcast cube — the manhattan form the
+    Pallas kernels use so VMEM stays at tile size.  Zero-padded feature
+    columns are exact no-ops for every metric (they add 0 to dots, norms
+    and absolute differences), which is what lets the kernels pad d up to
+    the TPU lane quantum.
+    """
+    if metric not in METRICS:
+        raise ValueError(f"unknown metric {metric!r} (expected one of {METRICS})")
+    XA = XA.astype(jnp.float32)
+    XB = XB.astype(jnp.float32)
+    if metric in ("sqeuclidean", "euclidean"):
+        na = jnp.sum(XA * XA, axis=1, keepdims=True)            # (ma, 1)
+        nb = jnp.sum(XB * XB, axis=1, keepdims=True)            # (mb, 1)
+        dot = jax.lax.dot_general(
+            XA, XB, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        d2 = jnp.maximum(na + nb.T - 2.0 * dot, 0.0)
+        return jnp.sqrt(d2) if metric == "euclidean" else d2
+    if metric == "cosine":
+        na = jnp.sqrt(jnp.maximum(jnp.sum(XA * XA, axis=1, keepdims=True),
+                                  _NORM_EPS))
+        nb = jnp.sqrt(jnp.maximum(jnp.sum(XB * XB, axis=1, keepdims=True),
+                                  _NORM_EPS))
+        dot = jax.lax.dot_general(
+            XA, XB, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return 1.0 - dot / (na * nb.T)
+    # manhattan
+    if loop_d:
+        d = XA.shape[1]
+
+        def body(j, acc):
+            ca = jax.lax.dynamic_slice_in_dim(XA, j, 1, axis=1)  # (ma, 1)
+            cb = jax.lax.dynamic_slice_in_dim(XB, j, 1, axis=1)  # (mb, 1)
+            return acc + jnp.abs(ca - cb.T)
+
+        return jax.lax.fori_loop(
+            0, d, body, jnp.zeros((XA.shape[0], XB.shape[0]), jnp.float32)
+        )
+    return jnp.sum(jnp.abs(XA[:, None, :] - XB[None, :, :]), axis=-1)
+
+
+def masked_dist_tile(XA: jnp.ndarray, XB: jnp.ndarray, metric: str,
+                     row_off, col_off, n_valid: int,
+                     *, loop_d: bool = False) -> jnp.ndarray:
+    """Distance tile with the padding contract of ``pad_distance_matrix``
+    applied in-register: rows/cols at global index >= n_valid are +inf
+    (padded points are infinitely far from everything) and the exact global
+    diagonal is 0 (fp noise in ``d(x, x)`` must not break the "x is always
+    in its own focus" invariant)."""
+    D = dist_tile(XA, XB, metric, loop_d=loop_d)
+    ma, mb = D.shape
+    rows = row_off + jax.lax.broadcasted_iota(jnp.int32, (ma, mb), 0)
+    cols = col_off + jax.lax.broadcasted_iota(jnp.int32, (ma, mb), 1)
+    D = jnp.where((rows >= n_valid) | (cols >= n_valid), jnp.inf, D)
+    return jnp.where(rows == cols, 0.0, D)
+
+
+# ---------------------------------------------------------------------------
+# materialized reference distances
+# ---------------------------------------------------------------------------
+def cdist_reference(X: jnp.ndarray, Y: jnp.ndarray | None = None,
+                    *, metric: Metric = "euclidean") -> jnp.ndarray:
+    """Pairwise distances in plain jnp, float32.
+
+    With ``Y=None`` the square form zeroes its diagonal exactly (the
+    dot-product formulation of d(x, x) is only zero up to fp noise), so it
+    composes with ``pald.cohesion`` without spurious self-distances.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    square = Y is None
+    Y = X if square else jnp.asarray(Y, jnp.float32)
+    D = dist_tile(X, Y, metric)
+    if square:
+        n = X.shape[0]
+        D = D.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    return D
+
+
+def pad_features(X: jnp.ndarray, quantum: int) -> tuple[jnp.ndarray, int]:
+    """Pad rows of X up to a multiple of ``quantum`` with zero vectors.
+
+    Unlike distance-matrix padding, the +inf semantics can't be expressed in
+    feature space; the fused kernels re-impose them per tile via
+    ``masked_dist_tile(n_valid=...)``.  Returns (padded X, original n).
+    """
+    n = X.shape[0]
+    m = -(-n // quantum) * quantum
+    if m == n:
+        return X, n
+    return jnp.pad(X, ((0, m - n), (0, 0))), n
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
+def _from_features_single(
+    X: jnp.ndarray,
+    *,
+    metric: Metric,
+    method: str,
+    block,
+    block_z,
+    schedule: str,
+    normalize: bool,
+    impl: str | None,
+) -> jnp.ndarray:
+    from . import pald as _pald  # deferred: pald re-exports from_features
+
+    if method == "auto":
+        method = "fused"
+    if method == "fused":
+        from repro.kernels import ops as _kops
+
+        return _kops.pald_fused(
+            X, metric=metric, block=block, block_z=block_z,
+            normalize=normalize, impl=impl,
+        )
+    if impl is not None:
+        # pald.cohesion picks impl per backend itself; silently dropping an
+        # explicit request would let a test believe it exercised a path it
+        # didn't
+        raise ValueError(
+            f"impl={impl!r} is only configurable for method='fused'; "
+            f"method={method!r} delegates to pald.cohesion")
+    # materialize-then-PaLD: one cdist, then the requested cohesion path
+    D = cdist_reference(X, metric=metric)
+    kz = {} if block_z is None else {"block_z": block_z}
+    return _pald.cohesion(D, method=method, block=block, schedule=schedule,
+                          normalize=normalize, **kz)
+
+
+def from_features(
+    X: jnp.ndarray,
+    *,
+    metric: Metric = "euclidean",
+    method: str = "auto",
+    batch: int | None = None,
+    block: int | str = "auto",
+    block_z: int | str | None = None,
+    schedule: str = "dense",
+    normalize: bool = True,
+    impl: str | None = None,
+) -> jnp.ndarray:
+    """PaLD cohesion straight from feature vectors.
+
+    X: (n, d) -> C: (n, n), or batched (B, n, d) -> (B, n, n).
+
+    method:  "fused" (default via "auto") runs the fused kernel pipeline —
+             distance tiles are computed in-register from feature tiles and
+             the full D matrix is never materialized in HBM;
+             "dense" / "pairwise" / "triplet" / "kernel" materialize D once
+             (``cdist_reference``) and delegate to ``pald.cohesion``.
+    metric:  one of ``METRICS`` (sqeuclidean, euclidean, cosine, manhattan).
+    batch:   for 3-D X, how many batch elements to vmap per compiled call
+             (None = the whole batch at once); bounds peak memory at
+             ``batch * n^2`` floats.
+    block:   kernel tile; "auto" consults the tuning cache under the
+             ``pald_fused`` pass, keyed by (n, d).
+
+    Inputs of any float dtype are cast to float32 here, at the API
+    boundary — float64 feature matrices are downcast explicitly (PaLD only
+    consumes the *order* of distances, which f32 preserves for any
+    non-pathological data) and the result dtype is always float32.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    if X.ndim not in (2, 3):
+        raise ValueError(f"X must be (n, d) or (B, n, d), got shape {X.shape}")
+    single = functools.partial(
+        _from_features_single, metric=metric, method=method, block=block,
+        block_z=block_z, schedule=schedule, normalize=normalize, impl=impl,
+    )
+    if X.ndim == 2:
+        return single(X)
+    B = X.shape[0]
+    if batch is None or batch >= B:
+        return jax.vmap(single)(X)
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    chunks = [jax.vmap(single)(X[s:s + batch]) for s in range(0, B, batch)]
+    return jnp.concatenate(chunks, axis=0)

@@ -8,6 +8,7 @@
     C = pald.cohesion(D, method="kernel",
                       schedule="tri")         # upper-tri kernel pipeline
     C = pald.cohesion(D, method="dense")      # un-blocked vectorized baseline
+    C = pald.from_features(X, metric="cosine")  # fused, from feature vectors
 
 Inputs of any size are padded internally to a block multiple with +inf
 distances; padded points land outside every local focus and contribute
@@ -17,6 +18,11 @@ nothing, so the result restricted to the original n x n is exact.
 recorded by ``benchmarks/hillclimb.py methods``) and falls back to the seed
 heuristic on a cold cache.  ``block="auto"`` resolves the tile through the
 same cache (``repro.tuning``).
+
+Dtype contract: every entry point casts its input to float32 exactly once,
+here at the API boundary (float64 inputs are downcast explicitly — PaLD
+depends only on the order of distances, which f32 preserves away from ulp
+collisions) and always returns float32.
 """
 from __future__ import annotations
 
@@ -31,16 +37,23 @@ from . import triplet as _triplet
 
 Method = Literal["auto", "dense", "pairwise", "triplet", "kernel"]
 
-__all__ = ["cohesion", "local_depths", "pad_distance_matrix"]
+__all__ = ["cohesion", "from_features", "local_depths", "pad_distance_matrix"]
 
 
-def pad_distance_matrix(D: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
+def pad_distance_matrix(
+    D: jnp.ndarray, block: int, *, dtype=jnp.float32
+) -> tuple[jnp.ndarray, int]:
     """Pad D to a multiple of ``block`` with +inf off-diagonal, 0 diagonal.
 
     Padded points are infinitely far from everything: they never enter a real
     pair's local focus (inf < d is false) and every real z is inside a padded
     pair's focus but contributes to padded rows of C only.
+
+    The input is cast to ``dtype`` (float32 by default) *here*, before any
+    blocked arithmetic — this is the pipeline's one explicit downcast point;
+    nothing downstream changes precision again.
     """
+    D = jnp.asarray(D, dtype)
     n = D.shape[0]
     m = -(-n // block) * block
     if m == n:
@@ -63,8 +76,12 @@ def cohesion(
 ) -> jnp.ndarray:
     """Compute the PaLD cohesion matrix C from a distance matrix D.
 
-    ``schedule="tri"`` (kernel method only) runs both passes on the
-    upper-triangular block schedule — half the block-pair visits.
+    Methods: "dense" (un-blocked vectorized), "pairwise" (blocked Fig. 5),
+    "triplet" (block-symmetric), "kernel" (Pallas pipeline; with
+    ``schedule="tri"`` both passes run the upper-triangular block schedule
+    — half the block-pair visits), or "auto" (measured crossover).  Feature
+    input (no D yet) goes through ``pald.from_features`` instead, whose
+    fused method never materializes D at all.
     ``block="auto"`` resolves tiles via the tuning cache.
     """
     n = D.shape[0]
@@ -81,7 +98,9 @@ def cohesion(
             f"schedule='tri' is only available for method='kernel', got {method!r}"
         )
     if method == "dense":
-        return _pairwise.pald_dense(D, z_chunk=z_chunk, normalize=normalize)
+        D = jnp.asarray(D, jnp.float32)  # explicit boundary cast (see module doc)
+        C = _pairwise.pald_dense(D, z_chunk=z_chunk, normalize=False)
+        return C / max(n - 1, 1) if normalize else C
     if block == "auto":
         pass_ = {"pairwise": "pald", "triplet": "pald",
                  "kernel": "pald_tri" if schedule == "tri" else "pald"}[method]
@@ -89,7 +108,7 @@ def cohesion(
         if block_z is None:
             block_z = bz_auto
     block = int(block)
-    Dp, n0 = pad_distance_matrix(jnp.asarray(D, jnp.float32), block)
+    Dp, n0 = pad_distance_matrix(D, block)  # casts to f32 (boundary cast)
     nv = jnp.asarray(n0) if Dp.shape[0] != n0 else None
     # normalization is applied here (not inside the blocked fns) so the padded
     # size never leaks into the 1/(n-1) factor.
@@ -106,10 +125,18 @@ def cohesion(
         raise ValueError(f"unknown method {method!r}")
     C = C[:n0, :n0]
     if normalize:
-        C = C / (n0 - 1)
+        # max(., 1): n=1 has no pairs and an all-zero C; dividing by zero
+        # would turn that into nan
+        C = C / max(n0 - 1, 1)
     return C
 
 
 def local_depths(C: jnp.ndarray) -> jnp.ndarray:
     """l_x = sum_z c_xz (cohesion is *partitioned* local depth)."""
     return jnp.sum(C, axis=1)
+
+
+# feature-space entry point (fused kernels; see core/features.py).  Imported
+# last: features defers its own pald import to call time, so the cycle is
+# never executed at module-load time.
+from .features import from_features  # noqa: E402,F401

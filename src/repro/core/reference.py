@@ -83,7 +83,7 @@ def pald_pairwise_reference(
                 else:
                     C[y, z] += w
     if normalize:
-        C /= n - 1
+        C /= max(n - 1, 1)  # n=1: no pairs, C stays zero (not nan)
     return C
 
 
@@ -137,5 +137,5 @@ def pald_triplet_reference(D: np.ndarray, *, normalize: bool = False) -> np.ndar
                 else:
                     C[y, z] += 1.0 / U[x, y]
     if normalize:
-        C /= n - 1
+        C /= max(n - 1, 1)
     return C

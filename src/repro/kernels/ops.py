@@ -34,11 +34,13 @@ from .pald_cohesion import cohesion_general_pallas, cohesion_pallas  # noqa: F40
 from .pald_cohesion_tri import cohesion_tri_pallas  # noqa: F401
 from .pald_focus import focus_general_pallas, focus_pallas  # noqa: F401
 from .pald_focus_tri import focus_tri_pallas  # noqa: F401
+from .pald_fused import cohesion_fused_pallas, focus_fused_pallas  # noqa: F401
 from .ref import weights_ref
 
 __all__ = [
     "pald",
     "pald_tri",
+    "pald_fused",
     "focus",
     "cohesion_from_weights",
     "focus_general",
@@ -236,6 +238,90 @@ def _pad_square_tri(D, W, q: int):
 
 
 # --------------------------------------------------------------------------
+# jnp fallback for the fused features->cohesion pipeline.  Per (xb, yb) block
+# pair, the (block, m) distance row slabs are recomputed from (block, d)
+# feature slices — O(d/block) relative overhead — so the full (m, m) D matrix
+# never exists as a value; only (block, m) slabs are live inside the loops.
+# --------------------------------------------------------------------------
+def _dist_slab(X, off, block, metric, n_valid):
+    """Masked (block, m) distance rows starting at global row ``off``."""
+    from repro.core.features import masked_dist_tile
+
+    Xa = jax.lax.dynamic_slice(X, (off, 0), (block, X.shape[1]))
+    return masked_dist_tile(Xa, X, metric, off, 0, n_valid)
+
+
+def _fused_z_chunk(m: int, block: int, block_z: int) -> int:
+    """z-chunk of the fused comparison cubes: the requested block_z, shrunk
+    to the same 512 MiB cube budget the general jnp fallbacks honor, and to
+    a divisor of m (slabs tile exactly)."""
+    cap = max(_CUBE_BUDGET // max(block * block, 1), 8)
+    return _pick_block(m, max(min(block_z, cap), 1))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "block", "block_z", "n_valid"))
+def _focus_fused_jnp(X, *, metric: str, block: int, block_z: int, n_valid: int):
+    m = X.shape[0]
+    nb = m // block
+    cz = _fused_z_chunk(m, block, block_z)
+
+    def outer(xb, U):
+        Dx = _dist_slab(X, xb * block, block, metric, n_valid)
+
+        def inner(yb, U):
+            Dy = _dist_slab(X, yb * block, block, metric, n_valid)
+            Dxy = jax.lax.dynamic_slice(Dx, (0, yb * block), (block, block))
+
+            def zstep(zb, acc):
+                dxc = jax.lax.dynamic_slice(Dx, (0, zb * cz), (block, cz))
+                dyc = jax.lax.dynamic_slice(Dy, (0, zb * cz), (block, cz))
+                msk = (dxc[:, None, :] < Dxy[:, :, None]) | (dyc[None, :, :] < Dxy[:, :, None])
+                return acc + jnp.sum(msk, axis=-1, dtype=jnp.float32)
+
+            blk = jax.lax.fori_loop(0, m // cz, zstep,
+                                    jnp.zeros((block, block), jnp.float32))
+            return jax.lax.dynamic_update_slice(U, blk, (xb * block, yb * block))
+
+        return jax.lax.fori_loop(0, nb, inner, U)
+
+    return jax.lax.fori_loop(0, nb, outer, jnp.zeros((m, m), jnp.float32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "block", "block_z", "n_valid"))
+def _cohesion_fused_jnp(X, W, *, metric: str, block: int, block_z: int,
+                        n_valid: int):
+    m = X.shape[0]
+    nb = m // block
+    cz = _fused_z_chunk(m, block, block_z)
+
+    def outer(xb, C):
+        Dx = _dist_slab(X, xb * block, block, metric, n_valid)
+
+        def inner(yb, acc):
+            Dy = _dist_slab(X, yb * block, block, metric, n_valid)
+            Dxy = jax.lax.dynamic_slice(Dx, (0, yb * block), (block, block))
+            Wxy = jax.lax.dynamic_slice(W, (xb * block, yb * block), (block, block))
+
+            def zstep(zb, acc):
+                dxc = jax.lax.dynamic_slice(Dx, (0, zb * cz), (block, cz))
+                dyc = jax.lax.dynamic_slice(Dy, (0, zb * cz), (block, cz))
+                g = (dxc[:, None, :] < dyc[None, :, :]) & (dxc[:, None, :] < Dxy[:, :, None])
+                addc = jnp.einsum("xyz,xy->xz", g.astype(jnp.float32), Wxy)
+                acc_c = jax.lax.dynamic_slice(acc, (0, zb * cz), (block, cz))
+                return jax.lax.dynamic_update_slice(acc, acc_c + addc, (0, zb * cz))
+
+            return jax.lax.fori_loop(0, m // cz, zstep, acc)
+
+        add = jax.lax.fori_loop(0, nb, inner, jnp.zeros((block, m), jnp.float32))
+        row = jax.lax.dynamic_slice(C, (xb * block, 0), (block, m))
+        return jax.lax.dynamic_update_slice(C, row + add, (xb * block, 0))
+
+    return jax.lax.fori_loop(0, nb, outer, jnp.zeros((m, m), jnp.float32))
+
+
+# --------------------------------------------------------------------------
 # public entry points
 # --------------------------------------------------------------------------
 def focus_general(DXZ, DYZ, DXY, *, block=128, block_z=512, impl: str | None = None):
@@ -350,6 +436,69 @@ def pald(
     C = cohesion_from_weights(D, W, block=block, block_z=block_z, impl=impl)
     if normalize:
         C = C / (D.shape[0] - 1)
+    return C
+
+
+def pald_fused(
+    X,
+    *,
+    metric: str = "euclidean",
+    block=128,
+    block_z=512,
+    normalize: bool = False,
+    impl: str | None = None,
+):
+    """Fused features→cohesion pipeline: X (n, d) -> C (n, n).
+
+    Distance tiles are computed on the fly from (block, d) feature tiles —
+    inside the Pallas kernels on TPU (``pald_fused.py``), inside the block
+    loops of the jnp fallback on CPU — so the full (n, n) distance matrix is
+    never materialized.  Feature rows are zero-padded to the tile quantum;
+    the +inf/zero-diagonal padding contract is re-imposed per tile from the
+    static ``n_valid``.
+
+    ``block="auto"`` resolves tiles through the tuning cache under the
+    ``pald_fused`` pass, keyed by (n, d).
+    """
+    from repro.core.features import pad_features
+
+    impl = impl or ("pallas" if on_tpu() else "jnp")
+    X = jnp.asarray(X, jnp.float32)
+    n, d = X.shape
+    if block_z is None:
+        block_z = "auto" if block == "auto" else 512
+    if block == "auto" or block_z == "auto":
+        rb, rbz = _tuner.resolve_blocks(n, "pald_fused", impl=impl, d=d)
+        block = rb if block == "auto" else block
+        block_z = rbz if block_z == "auto" else block_z
+    block, block_z = min(int(block), n), min(int(block_z), n)
+    if impl == "jnp":
+        Xp, n0 = pad_features(X, block)
+        U = _focus_fused_jnp(Xp, metric=metric, block=block, block_z=block_z,
+                             n_valid=n0)
+        W = weights_ref(U, n0 if Xp.shape[0] != n0 else None)
+        C = _cohesion_fused_jnp(Xp, W, metric=metric, block=block,
+                                block_z=block_z, n_valid=n0)
+    else:
+        from .pald_fused import cohesion_fused_pallas, focus_fused_pallas
+
+        Xp, n0 = pad_features(X, max(block, block_z))
+        m = Xp.shape[0]
+        block, block_z = _pick_block(m, block), _pick_block(m, block_z)
+        if impl == "pallas" and d % 128:
+            # zero feature columns are exact no-ops for every metric; pad d
+            # to the lane quantum so Mosaic gets aligned (block, d) tiles
+            Xp = jnp.pad(Xp, ((0, 0), (0, 128 - d % 128)))
+        interp = impl == "interpret"
+        U = focus_fused_pallas(Xp, metric=metric, n_valid=n0, block=block,
+                               block_z=block_z, interpret=interp)
+        W = weights_ref(U, n0 if m != n0 else None)
+        C = cohesion_fused_pallas(Xp, W, metric=metric, n_valid=n0,
+                                  block=block, block_z=block_z,
+                                  interpret=interp)
+    C = C[:n, :n]
+    if normalize:
+        C = C / max(n - 1, 1)
     return C
 
 

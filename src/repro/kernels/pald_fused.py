@@ -1,0 +1,170 @@
+"""Fused features→PaLD Pallas kernels: distance tiles computed in-register.
+
+The dense kernels (``pald_focus`` / ``pald_cohesion``) consume a
+materialized distance matrix — O(n^2) HBM traffic before pass 1 even
+starts.  These variants take the (n, d) feature matrix instead: each grid
+step loads the (block, d) feature tiles it needs, computes the
+(block, block) / (block, block_z) distance tiles in VMEM via
+``features.dist_tile`` (matmul-backed for sqeuclidean / euclidean / cosine,
+d-streamed for manhattan), and then runs the *same* focus / cohesion tile
+bodies as the dense kernels.  ``D`` never exists in HBM.
+
+Grid shapes and the accumulator-residency discipline are identical to the
+dense kernels (DESIGN.md §4.1); the only new cost is recomputing distance
+tiles on revisit, an O(d/block) relative overhead that is far cheaper than
+streaming them from HBM for any d << n.
+
+Padding contract: feature rows are zero-padded (``features.pad_features``);
+the +inf-off-diagonal / zero-diagonal semantics of ``pad_distance_matrix``
+are re-imposed per tile by ``features.masked_dist_tile`` using the static
+``n_valid`` and each tile's global row/col offsets — so padded points land
+outside every real focus exactly as in the materialized paths.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.features import masked_dist_tile
+
+__all__ = ["focus_fused_pallas", "cohesion_fused_pallas"]
+
+
+def _focus_fused_kernel(xi_ref, xj_ref, xk_ref, u_ref, *, metric, n_valid,
+                        block, block_y, block_z):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    xoff = pl.program_id(0) * block
+    yoff = pl.program_id(1) * block_y
+    zoff = k * block_z
+    dxz = masked_dist_tile(xi_ref[...], xk_ref[...], metric, xoff, zoff,
+                           n_valid, loop_d=True)   # (bx, bz)
+    dyz = masked_dist_tile(xj_ref[...], xk_ref[...], metric, yoff, zoff,
+                           n_valid, loop_d=True)   # (by, bz)
+    dxy = masked_dist_tile(xi_ref[...], xj_ref[...], metric, xoff, yoff,
+                           n_valid, loop_d=True)   # (bx, by)
+    by = dxy.shape[1]
+
+    # identical tile body to pald_focus._focus_kernel
+    def body(y, acc):
+        thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)      # (bx, 1)
+        row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)      # (1, bz)
+        m = (dxz < thr) | (row < thr)
+        col = jnp.sum(m.astype(jnp.float32), axis=1, keepdims=True)
+        return jax.lax.dynamic_update_slice_in_dim(acc, col, y, axis=1)
+
+    add = jax.lax.fori_loop(0, by, body, jnp.zeros_like(u_ref))
+    u_ref[...] += add
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "n_valid", "block", "block_y", "block_z", "interpret"))
+def focus_fused_pallas(
+    X: jnp.ndarray,            # (m, d) zero-padded features
+    *,
+    metric: str = "euclidean",
+    n_valid: int,
+    block: int = 128,
+    block_y: int | None = None,
+    block_z: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """U (m, m) local-focus sizes computed straight from feature tiles."""
+    m, d = X.shape
+    block_y = block_y or block
+    assert m % block == 0 and m % block_y == 0 and m % block_z == 0
+    grid = (m // block, m // block_y, m // block_z)
+    kernel = functools.partial(
+        _focus_fused_kernel, metric=metric, n_valid=n_valid,
+        block=block, block_y=block_y, block_z=block_z,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i, j, k: (i, 0)),     # X rows (x)
+            pl.BlockSpec((block_y, d), lambda i, j, k: (j, 0)),   # X rows (y)
+            pl.BlockSpec((block_z, d), lambda i, j, k: (k, 0)),   # X rows (z)
+        ],
+        out_specs=pl.BlockSpec((block, block_y), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=interpret,
+    )(X.astype(jnp.float32), X.astype(jnp.float32), X.astype(jnp.float32))
+
+
+def _cohesion_fused_kernel(xi_ref, xj_ref, xk_ref, w_ref, c_ref, *, metric,
+                           n_valid, block, block_y, block_z):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    xoff = pl.program_id(0) * block
+    zoff = pl.program_id(1) * block_z
+    yoff = k * block_y
+    dxz = masked_dist_tile(xi_ref[...], xj_ref[...], metric, xoff, zoff,
+                           n_valid, loop_d=True)   # (bx, bz)
+    dyz = masked_dist_tile(xk_ref[...], xj_ref[...], metric, yoff, zoff,
+                           n_valid, loop_d=True)   # (by, bz)
+    dxy = masked_dist_tile(xi_ref[...], xk_ref[...], metric, xoff, yoff,
+                           n_valid, loop_d=True)   # (bx, by)
+    w = w_ref[...]                                 # (bx, by)
+    by = dxy.shape[1]
+
+    # identical tile body to pald_cohesion._cohesion_kernel
+    def body(y, acc):
+        row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)   # (1, bz)
+        thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)   # (bx, 1)
+        wy = jax.lax.dynamic_slice_in_dim(w, y, 1, axis=1)      # (bx, 1)
+        g = (dxz < row) & (dxz < thr)
+        return acc + g.astype(jnp.float32) * wy
+
+    add = jax.lax.fori_loop(0, by, body, jnp.zeros_like(c_ref))
+    c_ref[...] += add
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "n_valid", "block", "block_y", "block_z", "interpret"))
+def cohesion_fused_pallas(
+    X: jnp.ndarray,            # (m, d) zero-padded features
+    W: jnp.ndarray,            # (m, m) reciprocal weights
+    *,
+    metric: str = "euclidean",
+    n_valid: int,
+    block: int = 128,
+    block_y: int | None = None,
+    block_z: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """C (m, m) cohesion from feature tiles + precomputed weights."""
+    m, d = X.shape
+    block_y = block_y or block
+    assert W.shape == (m, m)
+    assert m % block == 0 and m % block_y == 0 and m % block_z == 0
+    grid = (m // block, m // block_z, m // block_y)
+    kernel = functools.partial(
+        _cohesion_fused_kernel, metric=metric, n_valid=n_valid,
+        block=block, block_y=block_y, block_z=block_z,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i, j, k: (i, 0)),     # X rows (x)
+            pl.BlockSpec((block_z, d), lambda i, j, k: (j, 0)),   # X rows (z)
+            pl.BlockSpec((block_y, d), lambda i, j, k: (k, 0)),   # X rows (y)
+            pl.BlockSpec((block, block_y), lambda i, j, k: (i, k)),  # W[X, Y]
+        ],
+        out_specs=pl.BlockSpec((block, block_z), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=interpret,
+    )(X.astype(jnp.float32), X.astype(jnp.float32), X.astype(jnp.float32),
+      W.astype(jnp.float32))

@@ -33,7 +33,15 @@ _CACHE_ENV = "REPRO_TUNE_CACHE"
 _MEM: dict[str, tuple[float, dict]] = {}  # abspath -> (mtime, data)
 
 # passes understood by `tune`; each maps to one kernel-pipeline entry point
-PASSES = ("focus", "cohesion", "focus_tri", "cohesion_tri", "pald", "pald_tri")
+PASSES = ("focus", "cohesion", "focus_tri", "cohesion_tri", "pald",
+          "pald_tri", "pald_fused")
+
+
+def _pass_key(pass_: str, d: int | None) -> str:
+    """Feature-fused cells depend on the feature dimension too: the optimal
+    tile moves with d (the in-register distance compute scales with it), so
+    d joins the cache key as a ``:d<d>`` suffix on the pass name."""
+    return pass_ if d is None else f"{pass_}:d{int(d)}"
 
 
 def cache_path(path: str | None = None) -> str:
@@ -140,10 +148,15 @@ def resolve_blocks(
     impl: str | None = None,
     backend: str | None = None,
     path: str | None = None,
+    d: int | None = None,
 ) -> tuple[int, int]:
-    """(block, block_z) for one pass at size n: cached, nearest, or default."""
+    """(block, block_z) for one pass at size n: cached, nearest, or default.
+
+    ``d`` (feature dimension) extends the key for the fused pass — tiles
+    tuned at one d are not reused for another."""
     backend = backend or _default_backend()
     impl = impl or _default_impl(backend)
+    pass_ = _pass_key(pass_, d)
     rec = lookup(backend, impl, n, pass_, path)
     if rec is None:
         near = lookup_nearest(backend, impl, n, pass_, path)
@@ -182,19 +195,31 @@ def random_distance_matrix(n: int, seed: int = 0, dim: int = 8) -> np.ndarray:
     return D
 
 
-def _synthetic_inputs(n: int, seed: int = 0, with_weights: bool = False):
-    """(D, W) measurement inputs; W only when the pass consumes it (built
-    with the chunked kernel pipeline, never the O(n^3)-memory reference)."""
+def random_features(n: int, d: int = 8, seed: int = 0) -> np.ndarray:
+    """Gaussian feature matrix (the fused pass's measurement input)."""
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, d)).astype(np.float32)
+
+
+def _synthetic_inputs(n: int, seed: int = 0, with_weights: bool = False,
+                      d: int = 8, with_distances: bool = True):
+    """(D, W, X) measurement inputs; W only when the pass consumes it (built
+    with the chunked kernel pipeline, never the O(n^3)-memory reference).
+    ``with_distances=False`` (the fused pass) skips the O(n^2) D entirely —
+    materializing it is exactly what that pass exists to avoid."""
     import jax.numpy as jnp
-    D = jnp.asarray(random_distance_matrix(n, seed), jnp.float32)
+    X = jnp.asarray(random_features(n, d, seed))
+    if not with_distances:
+        return None, None, X
+    D = jnp.asarray(random_distance_matrix(n, seed, dim=d), jnp.float32)
     W = None
     if with_weights:
         from repro.kernels import ops, ref
         W = ref.weights_ref(ops.focus(D, impl=None if ops.on_tpu() else "jnp"))
-    return D, W
+    return D, W, X
 
 
-def _runner(pass_: str, D, W, block: int, block_z: int, impl: str):
+def _runner(pass_: str, D, W, X, block: int, block_z: int, impl: str):
     from repro.kernels import ops
     if pass_ == "focus":
         return ops.focus_general(D, D, D, block=block, block_z=block_z, impl=impl)
@@ -209,6 +234,8 @@ def _runner(pass_: str, D, W, block: int, block_z: int, impl: str):
         return ops.pald(D, block=block, block_z=block_z, impl=impl)
     if pass_ == "pald_tri":
         return ops.pald_tri(D, block=block, block_z=block_z, impl=impl)
+    if pass_ == "pald_fused":
+        return ops.pald_fused(X, block=block, block_z=block_z, impl=impl)
     raise ValueError(f"unknown pass {pass_!r} (expected one of {PASSES})")
 
 
@@ -224,17 +251,26 @@ def tune(
     save: bool = True,
     seed: int = 0,
     iters: int = 3,
+    d: int | None = None,
 ) -> dict:
     """Measure the candidate grid for one (n, pass, impl) cell and record the
-    argmin.  Returns the record that was (or would be) cached."""
+    argmin.  Returns the record that was (or would be) cached.
+
+    For ``pass_="pald_fused"`` the feature dimension ``d`` (default 8) joins
+    the cache key — the fused tiles trade in-register distance compute
+    against revisit traffic, and that tradeoff moves with d."""
     backend = backend or _default_backend()
     impl = impl or _default_impl(backend)
-    D, W = _synthetic_inputs(n, seed,
-                             with_weights=pass_ in ("cohesion", "cohesion_tri"))
+    if pass_ == "pald_fused" and d is None:
+        d = 8
+    D, W, X = _synthetic_inputs(
+        n, seed, with_weights=pass_ in ("cohesion", "cohesion_tri"),
+        d=d if d is not None else 8, with_distances=pass_ != "pald_fused",
+    )
     rows = []
     for b in sorted({min(b, n) for b in blocks}):
         for bz in sorted({min(z, n) for z in blocks_z}):
-            t = time_fn(lambda: _runner(pass_, D, W, b, bz, impl), iters=iters)
+            t = time_fn(lambda: _runner(pass_, D, W, X, b, bz, impl), iters=iters)
             rows.append({"block": b, "block_z": bz, "seconds": round(t, 6)})
     best = min(rows, key=lambda r: r["seconds"])
     record = {
@@ -245,7 +281,8 @@ def tune(
         "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     if save:
-        save_entry(backend, impl, n, pass_, record, path)
+        save_entry(backend, impl, n, _pass_key(pass_, d if pass_ == "pald_fused" else None),
+                   record, path)
     return record
 
 
@@ -270,7 +307,7 @@ def tune_methods(
     backend = backend or _default_backend()
     out = []
     for n in ns:
-        D, _ = _synthetic_inputs(n)
+        D, _, _X = _synthetic_inputs(n)
         timings = {}
         for m in methods:
             timings[m] = round(

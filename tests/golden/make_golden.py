@@ -1,0 +1,40 @@
+"""Regenerate the golden PaLD fixture (run from the repo root).
+
+    python tests/golden/make_golden.py
+
+Writes ``pald_golden.npz``: a small fixed dataset plus its exact cohesion
+matrix computed once with the O(n^3) entry-wise reference in float64.  The
+fixture is committed; ``test_golden.py`` asserts every optimized path still
+reproduces it at float32 tolerance — the silent-drift canary that property
+tests can't provide.  Only rerun this script if the *semantics* change on
+purpose (and say so in the PR).
+"""
+import os
+
+import numpy as np
+
+N, D_FEAT, SEED = 24, 3, 2023
+
+
+def main() -> None:
+    rng = np.random.default_rng(SEED)
+    # two planted communities at different scales — generic PaLD input with
+    # comfortable distance gaps (no near-ties to make f32 paths flip)
+    a = rng.normal(size=(10, D_FEAT)) * 0.6
+    b = rng.normal(size=(14, D_FEAT)) * 2.0 + 8.0
+    X = np.vstack([a, b]).astype(np.float64)
+    D = np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1))
+    np.fill_diagonal(D, 0.0)
+
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+    from repro.core import reference
+
+    C = reference.pald_pairwise_reference(D, ties="ignore", normalize=True)
+    out = os.path.join(os.path.dirname(__file__), "pald_golden.npz")
+    np.savez_compressed(out, X=X, D=D, C=C, seed=SEED)
+    print(f"wrote {out}: n={len(X)}, sum(C)={C.sum():.6f} (= n/2 = {len(X)/2})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Direct edge-case coverage for core/analysis.py.
+
+The community-extraction helpers were previously only exercised through
+end-to-end cluster tests; this file pins their behavior on the degenerate
+inputs a serving path will eventually see: a single point, a graph with no
+strong ties at all, and a fully-connected strong-tie graph — plus the
+``top_ties`` k-clamp fix (k > n-1 used to return padded garbage rows).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import analysis, pald
+
+
+def _C(D):
+    return np.asarray(pald.cohesion(jnp.asarray(D), method="dense"))
+
+
+@pytest.fixture
+def two_cluster_C(rng):
+    a = rng.normal(size=(6, 3)) * 0.5
+    b = rng.normal(size=(6, 3)) * 0.5 + 30.0
+    X = np.vstack([a, b])
+    D = np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1))
+    np.fill_diagonal(D, 0.0)
+    return _C(D)
+
+
+# ---------------------------------------------------------------------------
+# n=1
+# ---------------------------------------------------------------------------
+def test_n1_threshold_ties_communities():
+    C = np.zeros((1, 1))
+    assert analysis.universal_threshold(C) == 0.0
+    S = analysis.strong_ties(C)
+    assert S.shape == (1, 1) and S[0, 0] == 0.0
+    assert analysis.communities(C) == [[0]]
+    assert analysis.top_ties(C, 0, k=5) == []
+
+
+# ---------------------------------------------------------------------------
+# all-weak ties: nothing exceeds the threshold -> all singletons
+# ---------------------------------------------------------------------------
+def test_all_weak_ties_gives_singletons():
+    n = 6
+    C = np.full((n, n), 0.01)
+    np.fill_diagonal(C, 1.0)  # tau = 0.5 >> every off-diagonal entry
+    S = analysis.strong_ties(C)
+    assert (S == 0).all()
+    comms = analysis.communities(C)
+    assert len(comms) == n
+    assert all(len(c) == 1 for c in comms)
+    assert sorted(i for c in comms for i in c) == list(range(n))
+
+
+# ---------------------------------------------------------------------------
+# fully connected: everything exceeds the threshold -> one community
+# ---------------------------------------------------------------------------
+def test_fully_connected_single_community():
+    n = 5
+    C = np.full((n, n), 0.9)
+    np.fill_diagonal(C, 0.2)  # tau = 0.1 << every off-diagonal entry
+    S = analysis.strong_ties(C)
+    off = ~np.eye(n, dtype=bool)
+    assert (S[off] == 0.9).all() and (np.diag(S) == 0).all()
+    comms = analysis.communities(C)
+    assert comms == [list(range(n))]
+
+
+def test_strong_ties_explicit_threshold_overrides_universal():
+    C = np.full((3, 3), 0.5)
+    np.fill_diagonal(C, 1.0)
+    assert (analysis.strong_ties(C, threshold=0.6) == 0).all()
+    S = analysis.strong_ties(C, threshold=0.4)
+    assert (S[~np.eye(3, dtype=bool)] == 0.5).all()
+
+
+# ---------------------------------------------------------------------------
+# top_ties k-clamp: k > n-1 must not emit the -inf self-sentinel
+# ---------------------------------------------------------------------------
+def test_top_ties_clamps_k(two_cluster_C):
+    C = two_cluster_C
+    n = C.shape[0]
+    ties = analysis.top_ties(C, 0, k=n + 25)
+    assert len(ties) == n - 1                       # clamped, not padded
+    idxs = [i for i, _ in ties]
+    assert 0 not in idxs                            # never ties to itself
+    assert sorted(idxs) == [i for i in range(n) if i != 0]
+    assert all(np.isfinite(v) for _, v in ties)     # no -inf garbage
+    vals = [v for _, v in ties]
+    assert vals == sorted(vals, reverse=True)
+
+
+def test_top_ties_k_zero_and_negative(two_cluster_C):
+    assert analysis.top_ties(two_cluster_C, 3, k=0) == []
+    assert analysis.top_ties(two_cluster_C, 3, k=-2) == []

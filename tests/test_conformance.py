@@ -1,0 +1,159 @@
+"""Cross-method conformance matrix: every PaLD path vs the entry-wise oracle.
+
+One parametrized suite runs every (method, schedule, block, metric, n)
+combination against ``core/reference.py`` — replacing the previous ad-hoc
+per-method agreement tests and covering the fused features path from day
+one.  The n grid deliberately includes the degenerate (n=1), minimal
+(n=2), sub-block (n=7), non-multiple (n=33) and multi-block non-multiple
+(n=130) regimes, so every padding / tiling branch is exercised.
+
+The oracle is ``pald_pairwise_reference(ties="ignore", normalize=True)``
+computed in float64; all optimized paths agree with it on tie-free data
+regardless of their internal tie convention (DESIGN.md §9).
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import features, pald, reference
+
+NS = (1, 2, 7, 33, 130)
+BLOCKS = (16, 64)
+
+# (method, schedule) cells of pald.cohesion; dense ignores block entirely so
+# it gets a single row rather than one per block
+BLOCKED_PATHS = [
+    ("pairwise", "dense"),
+    ("triplet", "dense"),
+    ("kernel", "dense"),
+    ("kernel", "tri"),
+]
+
+
+@functools.lru_cache(maxsize=None)
+def _case(n: int):
+    """(X, D, C_reference) for one n — shared across the whole matrix."""
+    rng = np.random.default_rng(100 + n)
+    X = rng.normal(size=(n, 4))
+    D = np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1))
+    np.fill_diagonal(D, 0.0)
+    Cref = reference.pald_pairwise_reference(D, ties="ignore", normalize=True)
+    return X.astype(np.float32), D, Cref
+
+
+@pytest.mark.parametrize("n", NS)
+def test_dense_matches_reference(n):
+    _, D, Cref = _case(n)
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method="dense"))
+    assert C.dtype == np.float32
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("block", BLOCKS)
+@pytest.mark.parametrize("method,schedule", BLOCKED_PATHS)
+def test_blocked_paths_match_reference(method, schedule, block, n):
+    _, D, Cref = _case(n)
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method=method,
+                                 schedule=schedule, block=block))
+    assert C.dtype == np.float32
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused features path: ISSUE 2 acceptance — from_features(X, metric=m) must
+# match cohesion(cdist_reference(X, m)) within 1e-5 for all four metrics,
+# for both the jnp fused fallback and the bit-faithful interpret kernels
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("metric", features.METRICS)
+@pytest.mark.parametrize("impl", ["jnp", "interpret"])
+def test_fused_matches_materialized(metric, impl, n):
+    X, _, _ = _case(n)
+    Cmat = np.asarray(pald.cohesion(
+        features.cdist_reference(X, metric=metric), method="dense"))
+    C = np.asarray(pald.from_features(
+        jnp.asarray(X), metric=metric, block=16, block_z=16, impl=impl))
+    assert C.dtype == np.float32
+    np.testing.assert_allclose(C, Cmat, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("metric", features.METRICS)
+def test_fused_matches_entrywise_reference(metric):
+    """End to end vs the O(n^3) oracle on the metric's own distances."""
+    X, _, _ = _case(33)
+    D = np.asarray(features.cdist_reference(X, metric=metric), np.float64)
+    Cref = reference.pald_pairwise_reference(D, ties="ignore", normalize=True)
+    C = np.asarray(pald.from_features(jnp.asarray(X), metric=metric,
+                                      block=16, block_z=16))
+    np.testing.assert_allclose(C, Cref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("metric", features.METRICS)
+def test_materialized_methods_from_features(metric):
+    """from_features with a non-fused method materializes D and must agree
+    with the fused result (same metric, same data)."""
+    X, _, _ = _case(33)
+    Cf = np.asarray(pald.from_features(jnp.asarray(X), metric=metric,
+                                       block=16, block_z=16))
+    for method in ("dense", "pairwise", "triplet", "kernel"):
+        Cm = np.asarray(pald.from_features(jnp.asarray(X), metric=metric,
+                                           method=method, block=16))
+        np.testing.assert_allclose(Cm, Cf, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# batched API: (B, n, d) -> (B, n, n) under vmap, chunked or not
+# ---------------------------------------------------------------------------
+def test_batched_matches_loop():
+    rng = np.random.default_rng(7)
+    Xb = rng.normal(size=(4, 21, 3)).astype(np.float32)
+    Cb = np.asarray(pald.from_features(jnp.asarray(Xb), metric="euclidean",
+                                       block=16, block_z=16))
+    assert Cb.shape == (4, 21, 21) and Cb.dtype == np.float32
+    for i in range(4):
+        Ci = np.asarray(pald.from_features(jnp.asarray(Xb[i]),
+                                           metric="euclidean",
+                                           block=16, block_z=16))
+        np.testing.assert_allclose(Cb[i], Ci, rtol=1e-6, atol=1e-7)
+    # micro-batched execution is a pure chunking of the same computation
+    Cb2 = np.asarray(pald.from_features(jnp.asarray(Xb), metric="euclidean",
+                                        block=16, block_z=16, batch=3))
+    np.testing.assert_allclose(Cb, Cb2, rtol=0, atol=0)
+
+
+def test_batched_rejects_bad_rank_and_batch():
+    X = jnp.zeros((2, 3, 4, 5))
+    with pytest.raises(ValueError):
+        pald.from_features(X)
+    with pytest.raises(ValueError):
+        pald.from_features(jnp.zeros((4, 8, 2)), batch=0)
+
+
+def test_unknown_metric_rejected():
+    with pytest.raises(ValueError):
+        features.cdist_reference(jnp.zeros((4, 2)), metric="chebyshev")
+
+
+def test_impl_only_configurable_for_fused():
+    # silently dropping an explicit impl would let a test believe it
+    # exercised a path it didn't; materialized methods must reject it
+    with pytest.raises(ValueError):
+        pald.from_features(jnp.zeros((8, 2)), method="dense", impl="interpret")
+
+
+# ---------------------------------------------------------------------------
+# n=1 is a fixed point of every path: no pairs, all-zero C, never nan
+# ---------------------------------------------------------------------------
+def test_n1_all_paths_zero_not_nan():
+    D = jnp.zeros((1, 1))
+    for method in ("dense", "pairwise", "triplet", "kernel"):
+        C = np.asarray(pald.cohesion(D, method=method, block=16))
+        assert C.shape == (1, 1) and np.all(C == 0.0), method
+    C = np.asarray(pald.from_features(jnp.ones((1, 3)), block=16, block_z=16))
+    assert C.shape == (1, 1) and np.all(C == 0.0)
+    Cr = reference.pald_pairwise_reference(np.zeros((1, 1)), normalize=True)
+    assert np.all(Cr == 0.0) and not np.isnan(Cr).any()

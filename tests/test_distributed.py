@@ -97,3 +97,43 @@ def test_auto_strategy(D48):
     for mesh in (mesh1, mesh2):
         C = np.asarray(distributed.pald_distributed(D48, mesh, impl="jnp"))
         np.testing.assert_allclose(C, _ref(D48), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# feature-sharded strategies: X row-sharded, distances derived on-device
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def X50():
+    rng = np.random.default_rng(9)
+    return rng.normal(size=(50, 4)).astype(np.float32)  # 50: padding path
+
+
+@pytest.mark.parametrize("strategy", ["allgather", "ring"])
+@pytest.mark.parametrize("metric", ["euclidean", "cosine"])
+def test_from_features_strategies(X50, strategy, metric):
+    from repro.core import features, pald
+
+    mesh = meshlib.make_test_mesh((8,), ("data",))
+    Cref = np.asarray(pald.cohesion(
+        features.cdist_reference(X50, metric=metric), method="dense"))
+    C = np.asarray(distributed.pald_distributed_from_features(
+        jnp.asarray(X50), mesh, metric=metric, strategy=strategy, impl="jnp"))
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+def test_from_features_multi_axis_mesh_flattens(X50):
+    from repro.core import features, pald
+
+    mesh = meshlib.make_test_mesh((4, 2), ("data", "model"))
+    Cref = np.asarray(pald.cohesion(
+        features.cdist_reference(X50, metric="euclidean"), method="dense"))
+    C = np.asarray(distributed.pald_distributed_from_features(
+        jnp.asarray(X50), mesh, impl="jnp"))
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+def test_from_features_rejects_unknown_strategy(X50):
+    mesh = meshlib.make_test_mesh((8,), ("data",))
+    with pytest.raises(ValueError):
+        distributed.pald_distributed_from_features(
+            jnp.asarray(X50), mesh, strategy="2d")

@@ -1,0 +1,64 @@
+"""Dtype contract of the public API boundary.
+
+float64 / bfloat16 inputs used to be downcast silently somewhere mid-
+pipeline (wherever the first ``.astype(jnp.float32)`` happened to live);
+the cast is now explicit at the API boundary — ``pad_distance_matrix``,
+``pald.cohesion`` and ``features.from_features`` — and the output dtype is
+always float32, asserted here for every entry point.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import features, pald
+
+from conftest import euclidean_distance_matrix
+
+
+@pytest.fixture
+def D64(rng):
+    X = rng.normal(size=(21, 4))
+    return euclidean_distance_matrix(X)  # float64 numpy
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("method", ["dense", "pairwise", "triplet", "kernel"])
+def test_cohesion_output_dtype(D64, dtype, method):
+    D = jnp.asarray(D64).astype(dtype)
+    C = pald.cohesion(D, method=method, block=16)
+    assert C.dtype == jnp.float32
+    # the downcast must happen before blocking, not mid-pipeline: a bf16
+    # input gives the same result as pre-casting it to f32 by hand
+    C2 = pald.cohesion(jnp.asarray(D, jnp.float32), method=method, block=16)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(C2),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.float32, jnp.bfloat16])
+def test_from_features_output_dtype(rng, dtype):
+    X = jnp.asarray(rng.normal(size=(19, 3))).astype(dtype)
+    C = pald.from_features(X, metric="euclidean", block=16, block_z=16)
+    assert C.dtype == jnp.float32
+    D = features.cdist_reference(X, metric="sqeuclidean")
+    assert D.dtype == jnp.float32
+
+
+def test_pad_distance_matrix_casts_explicitly(D64):
+    # f64 numpy in -> f32 padded out, diag zero, +inf fill
+    P, n0 = pald.pad_distance_matrix(D64, 16)
+    assert P.dtype == jnp.float32
+    assert n0 == 21 and P.shape == (32, 32)
+    assert np.isinf(np.asarray(P)[0, -1])
+    assert (np.diag(np.asarray(P)) == 0).all()
+    # exact-multiple inputs are cast too (no pad branch shortcut)
+    P2, _ = pald.pad_distance_matrix(D64[:16, :16], 16)
+    assert P2.dtype == jnp.float32
+
+
+def test_normalized_and_unnormalized_consistent(D64):
+    n = D64.shape[0]
+    Cn = np.asarray(pald.cohesion(jnp.asarray(D64), method="dense"))
+    Cu = np.asarray(pald.cohesion(jnp.asarray(D64), method="dense",
+                                  normalize=False))
+    np.testing.assert_allclose(Cu / (n - 1), Cn, rtol=1e-6, atol=1e-7)

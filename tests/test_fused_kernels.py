@@ -1,0 +1,133 @@
+"""Fused features→PaLD kernel sweeps (interpret mode) vs the jnp oracles.
+
+The fused kernels recompute distance tiles in-register from feature tiles;
+these tests pin them against materialize-then-oracle per pass, across
+blocks, metrics, and padded shapes — plus the tile-level distance helpers
+themselves against scipy-style numpy formulas.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import features
+from repro.kernels import ops, ref
+from repro.kernels.pald_fused import cohesion_fused_pallas, focus_fused_pallas
+
+
+def _X(rng, n, d=4):
+    return jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+
+def _np_cdist(X, metric):
+    X = np.asarray(X, np.float64)
+    diff = X[:, None, :] - X[None, :, :]
+    if metric == "sqeuclidean":
+        D = (diff ** 2).sum(-1)
+    elif metric == "euclidean":
+        D = np.sqrt((diff ** 2).sum(-1))
+    elif metric == "manhattan":
+        D = np.abs(diff).sum(-1)
+    else:  # cosine
+        norm = np.linalg.norm(X, axis=1)
+        D = 1.0 - (X @ X.T) / np.outer(norm, norm)
+    np.fill_diagonal(D, 0.0)
+    return D
+
+
+@pytest.mark.parametrize("metric", features.METRICS)
+def test_cdist_reference_matches_numpy(rng, metric):
+    X = _X(rng, 23, 5)
+    D = np.asarray(features.cdist_reference(X, metric=metric))
+    np.testing.assert_allclose(D, _np_cdist(X, metric), rtol=1e-4, atol=1e-5)
+    assert (np.diag(D) == 0).all()
+    # loop_d manhattan (the kernel form) agrees with the broadcast cube form
+    if metric == "manhattan":
+        Dl = np.asarray(features.dist_tile(X, X, metric, loop_d=True))
+        np.testing.assert_allclose(
+            Dl, np.asarray(features.dist_tile(X, X, metric)),
+            rtol=1e-6, atol=1e-6)
+
+
+def test_masked_dist_tile_padding_contract(rng):
+    X = _X(rng, 8, 3)
+    Xp = jnp.pad(X, ((0, 4), (0, 0)))       # 4 zero-padded rows
+    D = np.asarray(features.masked_dist_tile(Xp, Xp, "euclidean", 0, 0, 8))
+    assert np.isinf(D[8:, :8]).all() and np.isinf(D[:8, 8:]).all()
+    assert (np.diag(D) == 0).all()           # incl. the padded diagonal
+    assert np.isfinite(D[:8, :8]).all()
+
+
+@pytest.mark.parametrize("n,blk,blkz", [(32, 8, 8), (64, 16, 32), (96, 32, 96)])
+@pytest.mark.parametrize("metric", ["sqeuclidean", "manhattan"])
+def test_focus_fused_kernel_sweep(rng, n, blk, blkz, metric):
+    X = _X(rng, n)
+    D = features.cdist_reference(X, metric=metric)
+    U = focus_fused_pallas(X, metric=metric, n_valid=n, block=blk,
+                           block_z=blkz, interpret=True)
+    np.testing.assert_allclose(np.asarray(U), np.asarray(ref.focus_ref(D)))
+
+
+@pytest.mark.parametrize("n,blk,blkz", [(32, 8, 8), (64, 16, 32), (96, 32, 96)])
+@pytest.mark.parametrize("metric", ["euclidean", "cosine"])
+def test_cohesion_fused_kernel_sweep(rng, n, blk, blkz, metric):
+    X = _X(rng, n)
+    D = features.cdist_reference(X, metric=metric)
+    W = ref.weights_ref(ref.focus_ref(D))
+    C = cohesion_fused_pallas(X, W, metric=metric, n_valid=n, block=blk,
+                              block_z=blkz, interpret=True)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(ref.cohesion_ref(D, W)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [37, 100])
+@pytest.mark.parametrize("impl", ["jnp", "interpret"])
+def test_pald_fused_nonmultiple_sizes(rng, n, impl):
+    """ops.pald_fused zero-pads feature rows and re-imposes the +inf
+    contract per tile; any n must come out exact."""
+    X = _X(rng, n)
+    D = features.cdist_reference(X, metric="euclidean")
+    W = ref.weights_ref(ref.focus_ref(D))
+    Cref = np.asarray(ref.cohesion_ref(D, W))
+    C = np.asarray(ops.pald_fused(X, metric="euclidean", block=16,
+                                  block_z=16, impl=impl))
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-5)
+
+
+def test_pald_fused_jnp_matches_interpret(rng):
+    X = _X(rng, 64)
+    Cj = ops.pald_fused(X, metric="cosine", block=16, block_z=32, impl="jnp")
+    Ci = ops.pald_fused(X, metric="cosine", block=16, block_z=32,
+                        impl="interpret")
+    np.testing.assert_allclose(np.asarray(Cj), np.asarray(Ci),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_pald_fused_block_auto_and_tuning_key(tmp_path, rng, monkeypatch):
+    """block='auto' resolves through the pald_fused pass keyed by (n, d)."""
+    from repro.tuning import autotune
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tune.json"))
+    X = _X(rng, 48, 4)
+    C = ops.pald_fused(X, metric="euclidean", block="auto", impl="jnp")
+    D = features.cdist_reference(X, metric="euclidean")
+    W = ref.weights_ref(ref.focus_ref(D))
+    np.testing.assert_allclose(np.asarray(C), np.asarray(ref.cohesion_ref(D, W)),
+                               rtol=1e-5, atol=1e-5)
+    # a tuned (n, d) cell is honored; a different d misses it
+    autotune.save_entry("cpu", "jnp", 48, "pald_fused:d4",
+                        {"block": 24, "block_z": 48, "seconds": 0.1})
+    assert autotune.resolve_blocks(48, "pald_fused", impl="jnp",
+                                   backend="cpu", d=4) == (24, 48)
+    assert autotune.lookup("cpu", "jnp", 48, "pald_fused:d32") is None
+
+
+def test_tune_pald_fused_roundtrip(tmp_path):
+    from repro.tuning import autotune
+
+    cache = str(tmp_path / "tune.json")
+    rec = autotune.tune(32, "pald_fused", impl="jnp", blocks=(8, 16),
+                        blocks_z=(16,), path=cache, iters=1, d=4)
+    assert {"block", "block_z", "seconds", "grid"} <= set(rec)
+    got = autotune.resolve_blocks(32, "pald_fused", impl="jnp", path=cache, d=4)
+    assert got == (rec["block"], rec["block_z"])
