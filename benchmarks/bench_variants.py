@@ -103,10 +103,43 @@ def run_fused(ns=(256, 1024), d: int = 8, metric: str = "sqeuclidean",
     return rows
 
 
+def run_ties(ns=(128, 256, 512, 1024), impl: str = "jnp",
+             block: int = 128, block_z: int = 512,
+             repeats: int = 3) -> list[dict]:
+    """Tie-mode tile-body cost on the table1 rows (ISSUE 3 acceptance):
+    'split' adds two equality masks per tile and 'ignore' an index tiebreak;
+    both must stay within ~10% of the strict 'drop' bodies.  Timed on the
+    full two-pass kernel pipeline (jnp impl — the same bodies the Pallas
+    kernels run on TPU).  Each cell takes the MIN over ``repeats``
+    interleaved median-of-3 measurements: wall-clock on shared boxes swings
+    2x, and interleaving the modes keeps a load spike from landing entirely
+    on one of them."""
+    rows = []
+    for n in ns:
+        D = jnp.asarray(random_distance_matrix(n))
+        b, bz = min(block, n), min(block_z, n)
+        t = {ties: float("inf") for ties in ("drop", "split", "ignore")}
+        for _ in range(repeats):
+            for ties in t:
+                t[ties] = min(t[ties], time_fn(functools.partial(
+                    kops.pald, D, block=b, block_z=bz, impl=impl, ties=ties)))
+        rows.append({
+            "n": n,
+            "impl": impl,
+            "drop_s": round(t["drop"], 4),
+            "split_s": round(t["split"], 4),
+            "ignore_s": round(t["ignore"], 4),
+            "split_overhead": round(t["split"] / t["drop"] - 1.0, 3),
+            "ignore_overhead": round(t["ignore"] / t["drop"] - 1.0, 3),
+        })
+    return rows
+
+
 def main() -> None:
     emit(run(), header="table1: pairwise vs triplet")
     emit(run_kernels(), header="table1b: dense vs tri kernel schedule (jnp impl)")
     emit(run_fused(), header="table1c: fused features vs materialize-then-kernel")
+    emit(run_ties(), header="ties: split/ignore tile-body overhead vs strict drop")
 
 
 if __name__ == "__main__":

@@ -104,10 +104,11 @@ def run_blocks(args) -> None:
         kw["d"] = args.d
     rec = autotune.tune(
         args.n, getattr(args, "pass"), impl=args.impl, path=args.cache,
-        iters=args.iters, **kw,
+        iters=args.iters, ties=args.ties, **kw,
     )
     cache = autotune.cache_path(args.cache)
-    print(f"# tuned {getattr(args, 'pass')} n={args.n} impl={args.impl or 'default'}")
+    print(f"# tuned {getattr(args, 'pass')} n={args.n} "
+          f"impl={args.impl or 'default'} ties={args.ties}")
     for row in rec["grid"]:
         mark = " <- best" if (row["block"], row["block_z"]) == (
             rec["block"], rec["block_z"]) else ""
@@ -153,6 +154,9 @@ def main() -> None:
                         choices=(None, "jnp", "interpret", "pallas"))
     blocks.add_argument("--d", type=int, default=8,
                         help="feature dim (pald_fused cells key on it)")
+    blocks.add_argument("--ties", default="drop",
+                        choices=("drop", "split", "ignore"),
+                        help="tie mode (non-default modes get their own cells)")
     blocks.add_argument("--blocks", default=None, help="csv candidate blocks")
     blocks.add_argument("--block-z", default=None, help="csv candidate z tiles")
     blocks.add_argument("--iters", type=int, default=3)

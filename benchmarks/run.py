@@ -75,6 +75,9 @@ def main() -> None:
         section("fused",
                 "table1c: fused features vs materialize-then-kernel (--fast)",
                 lambda: bench_variants.run_fused(ns=(256, 1024)))
+        section("ties",
+                "ties: split/ignore tile-body overhead vs strict drop (--fast)",
+                lambda: bench_variants.run_ties(ns=(256, 512, 1024)))
     else:
         section("fig3", "fig3: optimization waterfall",
                 bench_optimizations.run)
@@ -86,6 +89,9 @@ def main() -> None:
         section("fused",
                 "table1c: fused features vs materialize-then-kernel",
                 bench_variants.run_fused)
+        section("ties",
+                "ties: split/ignore tile-body overhead vs strict drop",
+                bench_variants.run_ties)
     section("scaling_measured", "fig9: measured scaling",
             bench_scaling.measured)
     section("comm_model", "comm model (n=100k analytic)",

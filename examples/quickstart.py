@@ -49,6 +49,25 @@ def main() -> None:
     Cb = pald.from_features(Xb, metric="euclidean", batch=2)
     print(f"batched from_features: {Xb.shape} -> {Cb.shape}")
 
+    # --- tie handling (integer / quantized / duplicated data) -------------
+    # exact distance ties get ONE semantic across every method and backend,
+    # chosen by ties=:
+    #   'drop'   (default) tied support goes to neither point — strict
+    #            comparisons, cheapest, the paper's optimized convention
+    #   'split'  ties split 0.5/0.5 (theoretical PaLD; conserves total
+    #            cohesion mass exactly even on heavily tied data)
+    #   'ignore' Algorithm 1's sequential tie-goes-to-y branch
+    # On tie-free data (like X above) all three agree; on quantized data
+    # they differ and 'split' is the principled choice.
+    Xq = np.round(X)                       # quantized features -> exact ties
+    Cq = {t: pald.from_features(jnp.asarray(Xq), ties=t)
+          for t in ("drop", "split", "ignore")}
+    spread = max(float(jnp.abs(Cq[a] - Cq[b]).max())
+                 for a in Cq for b in Cq)
+    mass = float(Cq["split"].sum()) * (len(Xq) - 1)
+    print(f"tie modes on quantized data: max spread {spread:.4f}, "
+          f"split mass {mass:.1f} (= n(n-1)/2 exactly)")
+
     # strongest ties of point 0 (inside the tight community)
     print("top ties of point 0:", analysis.top_ties(np.asarray(C), 0, k=3))
 

@@ -40,6 +40,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.kernels import ops as kops
 
+from .ties import DEFAULT_TIES, index_xwins as _xwins_rows, validate_ties
+
 # jax.shard_map is top-level only from jax>=0.5; fall back to the
 # experimental location on older versions (this container ships 0.4.x).
 try:
@@ -75,18 +77,21 @@ def _weights_rows(U_rows: jnp.ndarray, row_offset: jnp.ndarray, n_valid) -> jnp.
 # ---------------------------------------------------------------------------
 # 1-D strategies: D row-sharded over a single (flattened) axis
 # ---------------------------------------------------------------------------
-def _allgather_body(Dloc, *, axis, n_valid, impl, block="auto", block_z="auto"):
+def _allgather_body(Dloc, *, axis, n_valid, impl, ties=DEFAULT_TIES,
+                    block="auto", block_z="auto"):
     m = Dloc.shape[0]
     Dall = jax.lax.all_gather(Dloc, axis, tiled=True)          # (n, n)
     off = jax.lax.axis_index(axis) * m
-    U = kops.focus_general(Dloc, Dall, Dloc, impl=impl,
+    U = kops.focus_general(Dloc, Dall, Dloc, impl=impl, ties=ties,
                            block=block, block_z=block_z)       # (m, n)
     W = _weights_rows(U, off, n_valid)
-    return kops.cohesion_general(Dloc, Dall, Dloc, W, impl=impl,
-                                 block=block, block_z=block_z)
+    xw = _xwins_rows(off, m, 0, Dall.shape[0]) if ties == "ignore" else None
+    return kops.cohesion_general(Dloc, Dall, Dloc, W, impl=impl, ties=ties,
+                                 xwins=xw, block=block, block_z=block_z)
 
 
-def _ring_body(Dloc, *, axis, p, n_valid, impl, block="auto", block_z="auto"):
+def _ring_body(Dloc, *, axis, p, n_valid, impl, ties=DEFAULT_TIES,
+               block="auto", block_z="auto"):
     m, n = Dloc.shape
     fwd = [(j, (j + 1) % p) for j in range(p)]
     r = jax.lax.axis_index(axis)
@@ -101,7 +106,7 @@ def _ring_body(Dloc, *, axis, p, n_valid, impl, block="auto", block_z="auto"):
         nxt = jax.lax.ppermute(blk, axis, fwd)                  # comm ...
         off = owner_cols(s)
         Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
-        Ublk = kops.focus_general(Dloc, blk, Dxy, impl=impl,
+        Ublk = kops.focus_general(Dloc, blk, Dxy, impl=impl, ties=ties,
                                   block=block, block_z=block_z)  # ... overlaps compute
         U = jax.lax.dynamic_update_slice(U, Ublk, (0, off))
         return nxt, U
@@ -118,7 +123,9 @@ def _ring_body(Dloc, *, axis, p, n_valid, impl, block="auto", block_z="auto"):
         off = owner_cols(s)
         Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
         Wxy = jax.lax.dynamic_slice(W, (0, off), (m, m))
+        xw = _xwins_rows(r * m, m, off, m) if ties == "ignore" else None
         C = C + kops.cohesion_general(Dloc, blk, Dxy, Wxy, impl=impl,
+                                      ties=ties, xwins=xw,
                                       block=block, block_z=block_z)
         return nxt, C
 
@@ -140,7 +147,7 @@ def _ring_body(Dloc, *, axis, p, n_valid, impl, block="auto", block_z="auto"):
 # is what keeps padded points out of real foci.
 # ---------------------------------------------------------------------------
 def _feat_allgather_body(Xloc, *, axis, metric, n_valid, impl,
-                         block="auto", block_z="auto"):
+                         ties=DEFAULT_TIES, block="auto", block_z="auto"):
     from .features import masked_dist_tile
 
     m = Xloc.shape[0]
@@ -152,15 +159,16 @@ def _feat_allgather_body(Xloc, *, axis, metric, n_valid, impl,
     off = jax.lax.axis_index(axis) * m
     Dall = masked_dist_tile(Xall, Xall, metric, 0, 0, nv)        # (n, n) local
     Dloc = jax.lax.dynamic_slice(Dall, (off, 0), (m, n))         # own rows
-    U = kops.focus_general(Dloc, Dall, Dloc, impl=impl,
+    U = kops.focus_general(Dloc, Dall, Dloc, impl=impl, ties=ties,
                            block=block, block_z=block_z)
     W = _weights_rows(U, off, n_valid)
-    return kops.cohesion_general(Dloc, Dall, Dloc, W, impl=impl,
-                                 block=block, block_z=block_z)
+    xw = _xwins_rows(off, m, 0, n) if ties == "ignore" else None
+    return kops.cohesion_general(Dloc, Dall, Dloc, W, impl=impl, ties=ties,
+                                 xwins=xw, block=block, block_z=block_z)
 
 
 def _feat_ring_body(Xloc, *, axis, p, metric, n_valid, impl,
-                    block="auto", block_z="auto"):
+                    ties=DEFAULT_TIES, block="auto", block_z="auto"):
     from .features import masked_dist_tile
 
     m = Xloc.shape[0]
@@ -183,7 +191,7 @@ def _feat_ring_body(Xloc, *, axis, p, metric, n_valid, impl,
         off = owner_off(s)
         Dblk = masked_dist_tile(xblk, Xall, metric, off, 0, nv)  # recomputed
         Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
-        Ublk = kops.focus_general(Dloc, Dblk, Dxy, impl=impl,
+        Ublk = kops.focus_general(Dloc, Dblk, Dxy, impl=impl, ties=ties,
                                   block=block, block_z=block_z)
         U = jax.lax.dynamic_update_slice(U, Ublk, (0, off))
         return nxt, U
@@ -201,7 +209,9 @@ def _feat_ring_body(Xloc, *, axis, p, metric, n_valid, impl,
         Dblk = masked_dist_tile(xblk, Xall, metric, off, 0, nv)
         Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
         Wxy = jax.lax.dynamic_slice(W, (0, off), (m, m))
+        xw = _xwins_rows(r * m, m, off, m) if ties == "ignore" else None
         C = C + kops.cohesion_general(Dloc, Dblk, Dxy, Wxy, impl=impl,
+                                      ties=ties, xwins=xw,
                                       block=block, block_z=block_z)
         return nxt, C
 
@@ -215,7 +225,7 @@ def _feat_ring_body(Xloc, *, axis, p, metric, n_valid, impl,
 # 2-D strategy (comm-optimal), optionally streaming over the pod axis
 # ---------------------------------------------------------------------------
 def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, impl, mesh_shape,
-             block="auto", block_z="auto"):
+             ties=DEFAULT_TIES, block="auto", block_z="auto"):
     mr, mc = Dblk.shape
     gathered_rows = tuple(a for a in row_axes if a != stream_axis)
     # row index offset of this device's X block within the global ordering
@@ -255,7 +265,7 @@ def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, impl, mesh_shape
         nxt = blk if stream_axis is None else jax.lax.ppermute(blk, stream_axis, fwd)
         zoff = slab_row_offset(s)
         dxz = jax.lax.dynamic_slice(Grow, (0, zoff), (mr, slab_rows))
-        U = U + kops.focus_general(dxz, blk.T, Dblk, impl=impl,
+        U = U + kops.focus_general(dxz, blk.T, Dblk, impl=impl, ties=ties,
                                    block=block, block_z=block_z)
         return nxt, U
 
@@ -272,7 +282,10 @@ def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, impl, mesh_shape
         yoff = slab_row_offset(s)
         dxy = jax.lax.dynamic_slice(Grow, (0, yoff), (mr, slab_rows))
         w = jax.lax.dynamic_slice(Wrow, (0, yoff), (mr, slab_rows))
+        xw = (_xwins_rows(roff, mr, yoff, slab_rows)
+              if ties == "ignore" else None)
         C = C + kops.cohesion_general(Dblk, blk, dxy, w, impl=impl,
+                                      ties=ties, xwins=xw,
                                       block=block, block_z=block_z)
         return nxt, C
 
@@ -296,6 +309,7 @@ def pald_distributed(
     comm_dtype=None,
     block: int | str = "auto",
     block_z: int | str = "auto",
+    ties: str = DEFAULT_TIES,
 ) -> jnp.ndarray:
     """Compute the PaLD cohesion matrix on a device mesh.
 
@@ -306,12 +320,20 @@ def pald_distributed(
     (default) resolves them from the persistent tuning cache
     (``repro.tuning``), keyed by the per-device problem size.
 
+    ``ties`` fixes the tie-handling mode on every shard body (see
+    ``pald.cohesion``); the result equals single-device
+    ``pald.cohesion(D, ties=ties)`` for any strategy.
+
     ``comm_dtype=jnp.bfloat16`` moves/gathers distances in bf16 (halving
     every collective) and compares in bf16 — PaLD depends only on the
     ORDER of distances, so this is exact whenever no two distances fall in
-    the same bf16 ulp; distances that collide round to an exact tie, which
-    the optimized paths drop (the paper's own tie semantics).  §Perf 3.
+    the same bf16 ulp.  Distances that collide round to an exact TIE, so
+    the explicit ``ties`` mode governs them: the bf16 result equals
+    single-device PaLD on the bf16-cast matrix under the same ``ties``
+    (tests/test_ties.py), instead of silently depending on which kernel the
+    shard body dispatches to.  §Perf 3.
     """
+    validate_ties(ties)
     axis_names = list(mesh.axis_names)
     if row_axes is None:
         row_axes = tuple(a for a in axis_names if a != axis_names[-1])
@@ -362,13 +384,13 @@ def pald_distributed(
     if strategy == "allgather":
         body = functools.partial(
             _allgather_body, axis=flat_axes, n_valid=n_valid, impl=impl,
-            block=block, block_z=block_z
+            ties=ties, block=block, block_z=block_z
         )
         out_spec = P(flat_axes, None)
     elif strategy == "ring":
         body = functools.partial(
             _ring_body, axis=flat_axes, p=p, n_valid=n_valid, impl=impl,
-            block=block, block_z=block_z
+            ties=ties, block=block, block_z=block_z
         )
         out_spec = P(flat_axes, None)
     elif strategy == "2d":
@@ -380,6 +402,7 @@ def pald_distributed(
             n_valid=n_valid,
             impl=impl,
             mesh_shape=mesh_shape,
+            ties=ties,
             block=block,
             block_z=block_z,
         )
@@ -406,6 +429,7 @@ def pald_distributed_from_features(
     impl: str | None = None,
     block: int | str = "auto",
     block_z: int | str = "auto",
+    ties: str = DEFAULT_TIES,
 ) -> jnp.ndarray:
     """Distributed PaLD straight from row-sharded feature vectors.
 
@@ -423,7 +447,9 @@ def pald_distributed_from_features(
 
     The full distance matrix is never communicated; ``allgather`` is the
     only strategy that materializes it (per device, by construction).
+    ``ties`` behaves exactly as in ``pald.from_features``.
     """
+    validate_ties(ties)
     if strategy == "auto":
         strategy = "ring"
     if strategy not in ("allgather", "ring"):
@@ -450,12 +476,14 @@ def pald_distributed_from_features(
     if strategy == "allgather":
         body = functools.partial(
             _feat_allgather_body, axis=axis_names, metric=metric,
-            n_valid=n_valid, impl=impl, block=block, block_z=block_z,
+            n_valid=n_valid, impl=impl, ties=ties,
+            block=block, block_z=block_z,
         )
     else:
         body = functools.partial(
             _feat_ring_body, axis=axis_names, p=p, metric=metric,
-            n_valid=n_valid, impl=impl, block=block, block_z=block_z,
+            n_valid=n_valid, impl=impl, ties=ties,
+            block=block, block_z=block_z,
         )
     fn = jax.jit(
         shard_map_compat(body, mesh=mesh, in_specs=P(axis_names, None),

@@ -40,6 +40,8 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from .ties import DEFAULT_TIES, validate_ties
+
 METRICS = ("sqeuclidean", "euclidean", "cosine", "manhattan")
 
 Metric = Literal["sqeuclidean", "euclidean", "cosine", "manhattan"]
@@ -172,6 +174,7 @@ def _from_features_single(
     schedule: str,
     normalize: bool,
     impl: str | None,
+    ties: str,
 ) -> jnp.ndarray:
     from . import pald as _pald  # deferred: pald re-exports from_features
 
@@ -182,7 +185,7 @@ def _from_features_single(
 
         return _kops.pald_fused(
             X, metric=metric, block=block, block_z=block_z,
-            normalize=normalize, impl=impl,
+            normalize=normalize, impl=impl, ties=ties,
         )
     if impl is not None:
         # pald.cohesion picks impl per backend itself; silently dropping an
@@ -195,7 +198,7 @@ def _from_features_single(
     D = cdist_reference(X, metric=metric)
     kz = {} if block_z is None else {"block_z": block_z}
     return _pald.cohesion(D, method=method, block=block, schedule=schedule,
-                          normalize=normalize, **kz)
+                          normalize=normalize, ties=ties, **kz)
 
 
 def from_features(
@@ -209,6 +212,7 @@ def from_features(
     schedule: str = "dense",
     normalize: bool = True,
     impl: str | None = None,
+    ties: str = DEFAULT_TIES,
 ) -> jnp.ndarray:
     """PaLD cohesion straight from feature vectors.
 
@@ -225,18 +229,25 @@ def from_features(
              ``batch * n^2`` floats.
     block:   kernel tile; "auto" consults the tuning cache under the
              ``pald_fused`` pass, keyed by (n, d).
+    ties:    'drop' (default) / 'split' / 'ignore' — what an exact distance
+             tie means, identically on every method (see ``pald.cohesion``).
+             Quantized or duplicated feature rows produce exact ties in
+             every metric, so this matters for real embedding data;
+             'split' is the theoretically-faithful choice there.
 
     Inputs of any float dtype are cast to float32 here, at the API
     boundary — float64 feature matrices are downcast explicitly (PaLD only
     consumes the *order* of distances, which f32 preserves for any
     non-pathological data) and the result dtype is always float32.
     """
+    validate_ties(ties)
     X = jnp.asarray(X, jnp.float32)
     if X.ndim not in (2, 3):
         raise ValueError(f"X must be (n, d) or (B, n, d), got shape {X.shape}")
     single = functools.partial(
         _from_features_single, metric=metric, method=method, block=block,
         block_z=block_z, schedule=schedule, normalize=normalize, impl=impl,
+        ties=ties,
     )
     if X.ndim == 2:
         return single(X)

@@ -16,11 +16,13 @@ Two entry points:
 
 Both compute, with W = 1/U (zero diagonal):
 
-    U[x, y] = sum_z (D[x,z] < D[x,y]) | (D[y,z] < D[x,y])
-    C[x, z] = sum_y (D[x,z] < D[y,z]) & (D[x,z] < D[x,y]) * W[x,y]
+    U[x, y] = sum_z focus_weight(D[x,z], D[y,z], D[x,y])
+    C[x, z] = sum_y support_weight(D[x,z], D[y,z], D[x,y]) * W[x,y]
 
-which matches ``reference.pald_pairwise_reference(ties='ignore')`` exactly on
-tie-free inputs (see tests/test_pald_core.py).
+with the tie-mode predicates shared across every path (``core/ties.py``);
+the default ``ties='drop'`` reduces to the classic strict masks and matches
+``reference.pald_pairwise_reference(ties='drop')`` entry-wise on any input
+(see tests/test_pald_core.py, tests/test_conformance.py).
 """
 from __future__ import annotations
 
@@ -29,20 +31,24 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .ties import DEFAULT_TIES, focus_weight, index_xwins, support_weight
+
 __all__ = ["local_focus_dense", "pald_dense", "pald_blocked"]
 
 
-def local_focus_dense(D: jnp.ndarray, *, z_chunk: int | None = None) -> jnp.ndarray:
-    """U[x,y] = #{z : d_xz < d_xy or d_yz < d_xy}, computed in z-chunks."""
+def local_focus_dense(D: jnp.ndarray, *, z_chunk: int | None = None,
+                      ties: str = DEFAULT_TIES) -> jnp.ndarray:
+    """U[x,y] = #{z : d_xz < d_xy or d_yz < d_xy}, computed in z-chunks
+    (fractional boundary-tie membership under ``ties='split'``)."""
     D = D.astype(jnp.float32)
     n = D.shape[0]
     z_chunk = z_chunk or n
 
     def body(carry, Dz):
         # Dz: (zc, n) rows of D for a chunk of z (d_zx == d_xz by symmetry).
-        # mask[x, y, z] = (d_xz < d_xy) | (d_yz < d_xy)
+        # m[x, y, z] = focus membership weight of z in the (x, y) focus
         dxz = Dz.T  # (n, zc) -> d_xz for x in rows
-        m = (dxz[:, None, :] < D[:, :, None]) | (dxz[None, :, :] < D[:, :, None])
+        m = focus_weight(dxz[:, None, :], dxz[None, :, :], D[:, :, None], ties)
         return carry + jnp.sum(m, axis=-1, dtype=jnp.float32), None
 
     n_chunks = -(-n // z_chunk)
@@ -69,21 +75,25 @@ def _weights(U: jnp.ndarray, n_valid: jnp.ndarray | int | None = None) -> jnp.nd
 
 
 def pald_dense(
-    D: jnp.ndarray, *, z_chunk: int | None = None, normalize: bool = False
+    D: jnp.ndarray, *, z_chunk: int | None = None, normalize: bool = False,
+    ties: str = DEFAULT_TIES
 ) -> jnp.ndarray:
     """Branch-free dense-pairwise PaLD; O(n^2 * chunk) temporaries."""
     D = D.astype(jnp.float32)
     n = D.shape[0]
-    U = local_focus_dense(D, z_chunk=z_chunk)
+    U = local_focus_dense(D, z_chunk=z_chunk, ties=ties)
     W = _weights(U)
     z_chunk_ = z_chunk or n
+    # ties='ignore' breaks support ties by global index (larger index wins);
+    # the ordered (x, y) grid visits both orders, so the x-role tiebreak
+    # suffices
+    xwins = index_xwins(0, n, 0, n)[:, :, None] if ties == "ignore" else None
 
     def body(_, Dz):
-        # C[x, zc] = sum_y (d_xz < d_yz) & (d_xz < d_xy) * W[x, y]
+        # C[x, zc] = sum_y support_weight(d_xz, d_yz, d_xy) * W[x, y]
         dxz = Dz.T  # (n, zc)
-        in_focus = dxz[:, None, :] < D[:, :, None]          # d_xz < d_xy
-        closer = dxz[:, None, :] < dxz[None, :, :]           # d_xz < d_yz
-        g = (in_focus & closer).astype(jnp.float32)
+        g = support_weight(dxz[:, None, :], dxz[None, :, :], D[:, :, None],
+                           ties, xwins)
         return None, jnp.einsum("xyz,xy->xz", g, W)
 
     n_chunks = -(-n // z_chunk_)
@@ -97,13 +107,14 @@ def pald_dense(
     return C
 
 
-@functools.partial(jax.jit, static_argnames=("block", "normalize"))
+@functools.partial(jax.jit, static_argnames=("block", "normalize", "ties"))
 def pald_blocked(
     D: jnp.ndarray,
     *,
     block: int = 128,
     normalize: bool = False,
     n_valid: jnp.ndarray | int | None = None,
+    ties: str = DEFAULT_TIES,
 ) -> jnp.ndarray:
     """Blocked pairwise PaLD (paper Fig. 5 structure) in pure JAX.
 
@@ -122,7 +133,7 @@ def pald_blocked(
         Dx = jax.lax.dynamic_slice(D, (xb * block, 0), (block, n))  # d_xz
         Dy = jax.lax.dynamic_slice(D, (yb * block, 0), (block, n))  # d_yz
         Dxy = jax.lax.dynamic_slice(Dx, (0, yb * block), (block, block))
-        m = (Dx[:, None, :] < Dxy[:, :, None]) | (Dy[None, :, :] < Dxy[:, :, None])
+        m = focus_weight(Dx[:, None, :], Dy[None, :, :], Dxy[:, :, None], ties)
         return jnp.sum(m, axis=-1, dtype=jnp.float32)  # (block, block)
 
     def focus_loop(i, U):
@@ -139,8 +150,12 @@ def pald_blocked(
         Dy = jax.lax.dynamic_slice(D, (yb * block, 0), (block, n))  # d_yz (by, n)
         Dxy = jax.lax.dynamic_slice(Dx, (0, yb * block), (block, block))
         Wxy = jax.lax.dynamic_slice(W, (xb * block, yb * block), (block, block))
-        g = (Dx[:, None, :] < Dy[None, :, :]) & (Dx[:, None, :] < Dxy[:, :, None])
-        return jnp.einsum("xyz,xy->xz", g.astype(jnp.float32), Wxy)  # (bx, n)
+        xw = None
+        if ties == "ignore":  # global-index tiebreak (every ordered pair visited)
+            xw = index_xwins(xb * block, block, yb * block, block)[:, :, None]
+        g = support_weight(Dx[:, None, :], Dy[None, :, :], Dxy[:, :, None],
+                           ties, xw)
+        return jnp.einsum("xyz,xy->xz", g, Wxy)  # (bx, n)
 
     def coh_loop(i, C):
         xb, yb = i // nb, i % nb

@@ -34,8 +34,10 @@ from repro.tuning import autotune as _tuner
 
 from . import pairwise as _pairwise
 from . import triplet as _triplet
+from .ties import DEFAULT_TIES, TIE_MODES, validate_ties  # noqa: F401
 
 Method = Literal["auto", "dense", "pairwise", "triplet", "kernel"]
+Ties = Literal["drop", "split", "ignore"]
 
 __all__ = ["cohesion", "from_features", "local_depths", "pad_distance_matrix"]
 
@@ -73,6 +75,7 @@ def cohesion(
     schedule: str = "dense",
     normalize: bool = True,
     z_chunk: int | None = None,
+    ties: Ties = DEFAULT_TIES,
 ) -> jnp.ndarray:
     """Compute the PaLD cohesion matrix C from a distance matrix D.
 
@@ -83,7 +86,20 @@ def cohesion(
     input (no D yet) goes through ``pald.from_features`` instead, whose
     fused method never materializes D at all.
     ``block="auto"`` resolves tiles via the tuning cache.
+
+    ``ties`` fixes what an exact distance tie means — the SAME answer on
+    every method/schedule/impl (DESIGN.md §9):
+      'drop'  (default) a tied z supports neither point of the pair; strict
+              comparisons everywhere (the paper's "ignore equality" applied
+              branch-free) — cheapest, and exact on tie-free input;
+      'split' a tie splits support 0.5/0.5 and a z exactly on the focus
+              boundary joins with weight 0.5 (the theoretical formulation;
+              conserves total cohesion mass on any input);
+      'ignore' Algorithm 1's sequential if/else: the higher-index point of
+              the pair takes tied support.
+    On tie-free distances all three modes return identical results.
     """
+    validate_ties(ties)
     n = D.shape[0]
     if schedule not in ("dense", "tri"):
         raise ValueError(f"unknown schedule {schedule!r}")
@@ -99,12 +115,12 @@ def cohesion(
         )
     if method == "dense":
         D = jnp.asarray(D, jnp.float32)  # explicit boundary cast (see module doc)
-        C = _pairwise.pald_dense(D, z_chunk=z_chunk, normalize=False)
+        C = _pairwise.pald_dense(D, z_chunk=z_chunk, normalize=False, ties=ties)
         return C / max(n - 1, 1) if normalize else C
     if block == "auto":
         pass_ = {"pairwise": "pald", "triplet": "pald",
                  "kernel": "pald_tri" if schedule == "tri" else "pald"}[method]
-        block, bz_auto = _tuner.resolve_blocks(n, pass_)
+        block, bz_auto = _tuner.resolve_blocks(n, pass_, ties=ties)
         if block_z is None:
             block_z = bz_auto
     block = int(block)
@@ -113,14 +129,15 @@ def cohesion(
     # normalization is applied here (not inside the blocked fns) so the padded
     # size never leaks into the 1/(n-1) factor.
     if method == "pairwise":
-        C = _pairwise.pald_blocked(Dp, block=block, n_valid=nv)
+        C = _pairwise.pald_blocked(Dp, block=block, n_valid=nv, ties=ties)
     elif method == "triplet":
-        C = _triplet.pald_block_symmetric(Dp, block=block, n_valid=nv)
+        C = _triplet.pald_block_symmetric(Dp, block=block, n_valid=nv, ties=ties)
     elif method == "kernel":
         from repro.kernels import ops as _kops
 
         kz = {} if block_z is None else {"block_z": block_z}
-        C = _kops.pald(Dp, block=block, n_valid=nv, schedule=schedule, **kz)
+        C = _kops.pald(Dp, block=block, n_valid=nv, schedule=schedule,
+                       ties=ties, **kz)
     else:
         raise ValueError(f"unknown method {method!r}")
     C = C[:n0, :n0]

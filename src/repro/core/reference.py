@@ -5,17 +5,27 @@ correctness oracles for every optimized path (blocked jnp, Pallas kernels,
 distributed shard_map). They are O(n^3) python loops over numpy arrays and are
 only intended for n up to a few hundred.
 
-Semantics (documented in DESIGN.md §9):
-  * strict ``<`` comparisons, matching the paper's optimized code which
-    "ignores equality in pairwise/triplet distance comparisons";
-  * optional tie handling (``ties='split'``) implements the theoretical
-    formulation where support is split 0.5/0.5 on exact distance ties;
+Semantics (documented in DESIGN.md §9; implemented for the optimized paths
+by the shared predicates in ``core/ties.py``):
+  * ``ties='drop'`` (the pipeline default): strict ``<`` comparisons,
+    matching the paper's optimized code which "ignores equality in
+    pairwise/triplet distance comparisons" — both strict masks are false on
+    a tie, so the tied z supports neither point;
+  * ``ties='split'`` implements the theoretical formulation where support is
+    split 0.5/0.5 on exact distance ties, INCLUDING the focus-size pass: a z
+    exactly on the focus boundary (d_xz == d_xy or d_yz == d_xy) joins the
+    focus with weight 0.5, so U is fractional;
+  * ``ties='ignore'`` is Algorithm 1's sequential if/else: on a support tie
+    the higher-index point wins (the else-branch assigns y, the loop runs
+    x < y);
   * ``normalize=True`` applies the 1/(n-1) factor of Eq. (3.3) so that row
     sums of C equal the local depths l_x.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from .ties import DEFAULT_TIES, validate_ties
 
 __all__ = [
     "pald_pairwise_reference",
@@ -24,45 +34,83 @@ __all__ = [
 ]
 
 
-def local_focus_reference(D: np.ndarray) -> np.ndarray:
-    """Local-focus size matrix U (Algorithm 1, lines 3-6), strict comparisons.
+def _half_step(d: np.ndarray, thr: float) -> np.ndarray:
+    """h(d, thr) = 1 if d < thr, 0.5 if d == thr, else 0 (split-mode weight)."""
+    return np.where(d < thr, 1.0, np.where(d == thr, 0.5, 0.0))
 
-    U[x, y] = |{z : d_xz < d_xy or d_yz < d_xy}| for x != y.  Both x and y are
-    always members (d_xx = 0 < d_xy), so U >= 2 off-diagonal for positive
-    distances.  The diagonal is left at 0 and is never used.
+
+def local_focus_reference(D: np.ndarray, *, ties: str = DEFAULT_TIES) -> np.ndarray:
+    """Local-focus size matrix U (Algorithm 1, lines 3-6).
+
+    Strict modes ('drop', 'ignore'):
+    U[x, y] = |{z : d_xz < d_xy or d_yz < d_xy}| for x != y.  Both x and y
+    are always members (d_xx = 0 < d_xy), so U >= 2 off-diagonal for positive
+    distances.  'split': boundary ties join with weight 0.5, so U is a
+    fractional (multiple-of-0.5) count.  The diagonal is left at 0 and is
+    never used.
     """
-    D = np.asarray(D)
+    validate_ties(ties)
+    D = np.asarray(D, dtype=np.float64)
     n = D.shape[0]
-    U = np.zeros((n, n), dtype=np.int64)
+    U = np.zeros((n, n), dtype=np.float64)
     for x in range(n):
         for y in range(n):
             if x == y:
                 continue
             dxy = D[x, y]
-            U[x, y] = int(np.sum((D[x, :] < dxy) | (D[y, :] < dxy)))
+            if ties == "split":
+                U[x, y] = float(np.sum(
+                    np.maximum(_half_step(D[x, :], dxy), _half_step(D[y, :], dxy))
+                ))
+            else:
+                U[x, y] = float(np.sum((D[x, :] < dxy) | (D[y, :] < dxy)))
     return U
 
 
 def pald_pairwise_reference(
-    D: np.ndarray, *, ties: str = "ignore", normalize: bool = False
+    D: np.ndarray, *, ties: str = DEFAULT_TIES, normalize: bool = False
 ) -> np.ndarray:
     """Algorithm 1 (pairwise sequential), entry-wise.
 
-    ties='ignore'  -> strict comparisons; on a tie d_xz == d_yz the support
-                      goes to y (the else branch), exactly as Algorithm 1.
-    ties='split'   -> exact ties split support 0.5/0.5 (theoretical PaLD).
-    ties='drop'    -> exact ties support neither point.  This matches the
-                      branch-free vectorized/Pallas paths, whose two strict
-                      masks (d_xz < d_yz) and (d_yz < d_xz) are both false on
-                      a tie -- the vector analogue of the paper's "ignoring
-                      equality in distance comparisons".
+    ties='drop'    -> (default) exact ties support neither point: the two
+                      strict masks (d_xz < d_yz) and (d_yz < d_xz) are both
+                      false on a tie -- the vector analogue of the paper's
+                      "ignoring equality in distance comparisons".
+    ties='split'   -> exact ties split support 0.5/0.5 (theoretical PaLD /
+                      generalized PaLD triplet weights), and a z exactly on
+                      the focus boundary joins the focus with weight 0.5.
+    ties='ignore'  -> strict focus; on a support tie d_xz == d_yz the
+                      support goes to y (the else branch), exactly as
+                      Algorithm 1's sequential control flow.
+
+    All optimized paths (blocked jnp, Pallas kernels + fallbacks, fused,
+    distributed) match this oracle entry-wise for the SAME ``ties`` mode —
+    enforced by tests/test_conformance.py and tests/test_ties.py.
     """
+    validate_ties(ties)
     D = np.asarray(D, dtype=np.float64)
     n = D.shape[0]
     C = np.zeros((n, n), dtype=np.float64)
     for x in range(n - 1):
         for y in range(x + 1, n):
             dxy = D[x, y]
+            if ties == "split":
+                m = np.maximum(_half_step(D[x, :], dxy), _half_step(D[y, :], dxy))
+                u = float(m.sum())
+                if u == 0.0:
+                    continue
+                w = 1.0 / u
+                for z in range(n):
+                    if m[z] == 0.0:
+                        continue
+                    if D[x, z] < D[y, z]:
+                        C[x, z] += m[z] * w
+                    elif D[y, z] < D[x, z]:
+                        C[y, z] += m[z] * w
+                    else:
+                        C[x, z] += 0.5 * m[z] * w
+                        C[y, z] += 0.5 * m[z] * w
+                continue
             infocus = (D[x, :] < dxy) | (D[y, :] < dxy)
             u = int(np.sum(infocus))
             if u == 0:
@@ -72,10 +120,7 @@ def pald_pairwise_reference(
                 if not infocus[z]:
                     continue
                 if D[x, z] == D[y, z]:
-                    if ties == "split":
-                        C[x, z] += 0.5 * w
-                        C[y, z] += 0.5 * w
-                    elif ties == "ignore":
+                    if ties == "ignore":
                         C[y, z] += w
                     # 'drop': neither
                 elif D[x, z] < D[y, z]:

@@ -15,7 +15,9 @@ the dense pairwise form while keeping fully regular vector access.  Diagonal
 blocks (X == Y) fall back to the dense one-sided update, which already covers
 both orders of the pairs inside the block.
 
-Matches ``reference.pald_pairwise_reference(ties='ignore')`` on tie-free input.
+Tie handling goes through the shared predicates of ``core/ties.py``; each
+mode matches ``reference.pald_pairwise_reference(ties=mode)`` entry-wise on
+arbitrary (tied or not) input.
 """
 from __future__ import annotations
 
@@ -27,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from .pairwise import _weights
+from .ties import DEFAULT_TIES, focus_weight, index_xwins, support_weight
 
 __all__ = ["pald_block_symmetric"]
 
@@ -36,13 +39,14 @@ def _tri_pairs(nb: int) -> tuple[np.ndarray, np.ndarray]:
     return xs.astype(np.int32), ys.astype(np.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "normalize"))
+@functools.partial(jax.jit, static_argnames=("block", "normalize", "ties"))
 def pald_block_symmetric(
     D: jnp.ndarray,
     *,
     block: int = 128,
     normalize: bool = False,
     n_valid: jnp.ndarray | int | None = None,
+    ties: str = DEFAULT_TIES,
 ) -> jnp.ndarray:
     D = D.astype(jnp.float32)
     n = D.shape[0]
@@ -58,7 +62,7 @@ def pald_block_symmetric(
         Dx = jax.lax.dynamic_slice(D, (xb * block, 0), (block, n))
         Dy = jax.lax.dynamic_slice(D, (yb * block, 0), (block, n))
         Dxy = jax.lax.dynamic_slice_in_dim(Dx, yb * block, block, axis=1)
-        m = (Dx[:, None, :] < Dxy[:, :, None]) | (Dy[None, :, :] < Dxy[:, :, None])
+        m = focus_weight(Dx[:, None, :], Dy[None, :, :], Dxy[:, :, None], ties)
         blk = jnp.sum(m, axis=-1, dtype=jnp.float32)
         U = jax.lax.dynamic_update_slice(U, blk, (xb * block, yb * block))
         U = jax.lax.dynamic_update_slice(U, blk.T, (yb * block, xb * block))
@@ -75,12 +79,20 @@ def pald_block_symmetric(
         Dxy = jax.lax.dynamic_slice_in_dim(Dx, yb * block, block, axis=1)
         Wxy = jax.lax.dynamic_slice(W, (xb * block, yb * block), (block, block))
         diag = xb == yb
-        gx = (Dx[:, None, :] < Dy[None, :, :]) & (Dx[:, None, :] < Dxy[:, :, None])
-        add_x = jnp.einsum("xyz,xy->xz", gx.astype(jnp.float32), Wxy)
+        xw = yw = None
+        if ties == "ignore":
+            # global-index tiebreak; on diagonal blocks the one-sided x-role
+            # visits both orders of every in-block pair, so xw alone covers it
+            xw = index_xwins(xb * block, block, yb * block, block)[:, :, None]
+            yw = index_xwins(yb * block, block, xb * block, block).T[:, :, None]
+        gx = support_weight(Dx[:, None, :], Dy[None, :, :], Dxy[:, :, None],
+                            ties, xw)
+        add_x = jnp.einsum("xyz,xy->xz", gx, Wxy)
         # y-role: skipped for diagonal blocks (dense one-sided already covers
         # both orders there); masked to zero via `diag`.
-        gy = (Dy[None, :, :] < Dx[:, None, :]) & (Dy[None, :, :] < Dxy[:, :, None])
-        add_y = jnp.einsum("xyz,xy->yz", gy.astype(jnp.float32), Wxy)
+        gy = support_weight(Dy[None, :, :], Dx[:, None, :], Dxy[:, :, None],
+                            ties, yw)
+        add_y = jnp.einsum("xyz,xy->yz", gy, Wxy)
         add_y = jnp.where(diag, 0.0, 1.0) * add_y
 
         rx = jax.lax.dynamic_slice(C, (xb * block, 0), (block, n))

@@ -20,6 +20,12 @@ cache (``repro.tuning``), falling back to size-aware defaults on a miss.
 Dims that don't divide by the chosen tile are padded up to the next tile
 multiple (+inf distances / zero weights, exact by construction) instead of
 silently degrading to tiny divisor blocks.
+
+Every entry point takes ``ties ∈ {'drop', 'split', 'ignore'}``
+(``core/ties.py``); all impls of one mode agree entry-wise, on tied input
+included.  The rectangular ``cohesion_general`` form needs the caller to
+supply the ``ties='ignore'`` global-index tiebreak (``xwins``); the square
+and fused forms derive it themselves.
 """
 from __future__ import annotations
 
@@ -28,6 +34,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.ties import (DEFAULT_TIES, focus_weight, index_xwins,
+                             square_xwins, support_weight, validate_ties)
 from repro.tuning import autotune as _tuner
 
 from .pald_cohesion import cohesion_general_pallas, cohesion_pallas  # noqa: F401
@@ -87,10 +95,15 @@ def _pad2(a: jnp.ndarray, mr: int, mc: int, value: float) -> jnp.ndarray:
     return jnp.pad(a, ((0, mr - r), (0, mc - c)), constant_values=value)
 
 
-def _resolve_blocks(n: int, pass_: str, block, block_z, impl: str) -> tuple[int, int]:
-    """Turn "auto" block requests into concrete tiles via the tuning cache."""
+def _resolve_blocks(n: int, pass_: str, block, block_z, impl: str,
+                    ties: str = DEFAULT_TIES) -> tuple[int, int]:
+    """Turn "auto" block requests into concrete tiles via the tuning cache.
+
+    ``ties`` joins the cache key for non-default modes — the tile bodies
+    differ (extra equality masks / tiebreak input), so their optima may too.
+    """
     if block == "auto" or block_z == "auto":
-        rb, rbz = _tuner.resolve_blocks(n, pass_, impl=impl)
+        rb, rbz = _tuner.resolve_blocks(n, pass_, impl=impl, ties=ties)
         block = rb if block == "auto" else block
         block_z = rbz if block_z == "auto" else block_z
     return int(block), int(block_z)
@@ -112,14 +125,15 @@ def _adaptive_chunk(mx: int, my: int, mz: int, want: int) -> int:
     return _pick_block(mz, min(want, cap))
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def _focus_general_jnp(DXZ, DYZ, DXY, *, chunk: int = 512):
+@functools.partial(jax.jit, static_argnames=("chunk", "ties"))
+def _focus_general_jnp(DXZ, DYZ, DXY, *, chunk: int = 512,
+                       ties: str = DEFAULT_TIES):
     mx, mz = DXZ.shape
     c = _adaptive_chunk(mx, DYZ.shape[0], mz, chunk)
 
     def body(acc, blks):
         dxz, dyz = blks  # (mx, c), (my, c)
-        m = (dxz[:, None, :] < DXY[:, :, None]) | (dyz[None, :, :] < DXY[:, :, None])
+        m = focus_weight(dxz[:, None, :], dyz[None, :, :], DXY[:, :, None], ties)
         return acc + jnp.sum(m, axis=-1, dtype=jnp.float32), None
 
     xs = (
@@ -130,30 +144,40 @@ def _focus_general_jnp(DXZ, DYZ, DXY, *, chunk: int = 512):
     return U
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def _cohesion_general_jnp(DXZ, DYZ, DXY, W, *, chunk: int = 128):
+@functools.partial(jax.jit, static_argnames=("chunk", "ties"))
+def _cohesion_general_jnp(DXZ, DYZ, DXY, W, XW=None, *, chunk: int = 128,
+                          ties: str = DEFAULT_TIES):
     my = DYZ.shape[0]
     mx, mz = DXZ.shape
     c = _adaptive_chunk(mx, mz, my, chunk)
 
-    def body(acc, blks):
-        dyz, dxy, w = blks  # (c, mz), (mx, c), (mx, c)
-        g = (DXZ[:, None, :] < dyz[None, :, :]) & (DXZ[:, None, :] < dxy[:, :, None])
-        return acc + jnp.einsum("xyz,xy->xz", g.astype(jnp.float32), w), None
+    def chunked(A):  # (mx, my) -> per-scan-step (mx, c) slabs
+        return A.reshape(A.shape[0], my // c, c).transpose(1, 0, 2)
 
-    xs = (
-        DYZ.reshape(my // c, c, -1),
-        DXY.reshape(DXY.shape[0], my // c, c).transpose(1, 0, 2),
-        W.reshape(W.shape[0], my // c, c).transpose(1, 0, 2),
-    )
+    def body(acc, blks):
+        dyz, dxy, w, xw = blks  # (c, mz), (mx, c), (mx, c), (mx, c)|None
+        own = xw[:, :, None] if ties == "ignore" else None
+        g = support_weight(DXZ[:, None, :], dyz[None, :, :], dxy[:, :, None],
+                           ties, own)
+        return acc + jnp.einsum("xyz,xy->xz", g, w), None
+
+    if ties == "ignore":
+        if XW is None:
+            raise ValueError("ties='ignore' needs XW (global-index tiebreak)")
+        xw_chunks = chunked(XW)
+    else:
+        # dummy zero-size leaf keeps the scan structure mode-independent
+        xw_chunks = jnp.zeros((my // c, mx, 0), jnp.bool_)
+    xs = (DYZ.reshape(my // c, c, -1), chunked(DXY), chunked(W), xw_chunks)
     C, _ = jax.lax.scan(body, jnp.zeros((DXZ.shape[0], DXZ.shape[1]), jnp.float32), xs)
     return C
 
 
 # --------------------------------------------------------------------------
 # jnp fallbacks for the upper-triangular block schedules (square case).
-# Same tie semantics as the tri kernels: the y-role reuses the x-role
-# comparison through its complement, i.e. ties='ignore' (support goes to y).
+# Same tile bodies as the tri kernels: both role updates go through the
+# shared tie predicate, with the block coordinates providing the
+# ties='ignore' global-index tiebreak.
 # --------------------------------------------------------------------------
 def _tri_pairs(nb: int):
     import numpy as np
@@ -161,8 +185,8 @@ def _tri_pairs(nb: int):
     return jnp.asarray(xs, jnp.int32), jnp.asarray(ys, jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("block",))
-def _focus_tri_jnp(D, *, block: int = 128):
+@functools.partial(jax.jit, static_argnames=("block", "ties"))
+def _focus_tri_jnp(D, *, block: int = 128, ties: str = DEFAULT_TIES):
     n = D.shape[0]
     nb = n // block
     xs, ys = _tri_pairs(nb)
@@ -172,7 +196,7 @@ def _focus_tri_jnp(D, *, block: int = 128):
         Dx = jax.lax.dynamic_slice(D, (xb * block, 0), (block, n))
         Dy = jax.lax.dynamic_slice(D, (yb * block, 0), (block, n))
         Dxy = jax.lax.dynamic_slice_in_dim(Dx, yb * block, block, axis=1)
-        m = (Dx[:, None, :] < Dxy[:, :, None]) | (Dy[None, :, :] < Dxy[:, :, None])
+        m = focus_weight(Dx[:, None, :], Dy[None, :, :], Dxy[:, :, None], ties)
         blk = jnp.sum(m, axis=-1, dtype=jnp.float32)
         U = jax.lax.dynamic_update_slice(U, blk, (xb * block, yb * block))
         return jax.lax.dynamic_update_slice(U, blk.T, (yb * block, xb * block))
@@ -181,17 +205,18 @@ def _focus_tri_jnp(D, *, block: int = 128):
     return jax.lax.fori_loop(0, npairs, body, jnp.zeros((n, n), jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnames=("block",))
-def _cohesion_tri_jnp(D, W, *, block: int = 128):
+@functools.partial(jax.jit, static_argnames=("block", "ties"))
+def _cohesion_tri_jnp(D, W, *, block: int = 128, ties: str = DEFAULT_TIES):
     """Both role updates per upper-triangular block pair.
 
     The y-role is expressed in the same row-major orientation as the x-role
     (roles swapped through the symmetry of D and W), so both einsums reduce
-    over the middle axis — the matmul-friendly layout XLA lowers best.  The
-    y-role's ``<=`` is the complement of the x-role's ``<`` (ties -> y,
-    ``ties='ignore'``), matching the tri kernel.  Diagonal blocks skip the
-    y-role computation entirely (lax.cond): the one-sided x-role already
-    covers both orders of every in-block pair.
+    over the middle axis — the matmul-friendly layout XLA lowers best.  Both
+    roles evaluate the shared tie predicate in the requested mode (the
+    pre-PR3 complement trick hard-coded ties->y off-diagonal and strict
+    comparisons on the diagonal, matching neither reference on tied input).
+    Diagonal blocks skip the y-role computation entirely (lax.cond): the
+    one-sided x-role already covers both orders of every in-block pair.
     """
     n = D.shape[0]
     nb = n // block
@@ -203,14 +228,18 @@ def _cohesion_tri_jnp(D, W, *, block: int = 128):
         Dy = jax.lax.dynamic_slice(D, (yb * block, 0), (block, n))
         Dxy = jax.lax.dynamic_slice_in_dim(Dx, yb * block, block, axis=1)
         Wxy = jax.lax.dynamic_slice(W, (xb * block, yb * block), (block, block))
-        gx = (Dx[:, None, :] < Dy[None, :, :]) & (Dx[:, None, :] < Dxy[:, :, None])
-        add_x = jnp.einsum("xyz,xy->xz", gx.astype(jnp.float32), Wxy)
+        xw = yw = None
+        if ties == "ignore":
+            xw = index_xwins(xb * block, block, yb * block, block)[:, :, None]
+            yw = index_xwins(yb * block, block, xb * block, block)[:, :, None]
+        gx = support_weight(Dx[:, None, :], Dy[None, :, :], Dxy[:, :, None],
+                            ties, xw)
+        add_x = jnp.einsum("xyz,xy->xz", gx, Wxy)
 
         def y_role(_):
-            gy = (Dy[:, None, :] <= Dx[None, :, :]) & (
-                Dy[:, None, :] < Dxy.T[:, :, None]
-            )
-            return jnp.einsum("yxz,yx->yz", gy.astype(jnp.float32), Wxy.T)
+            gy = support_weight(Dy[:, None, :], Dx[None, :, :],
+                                Dxy.T[:, :, None], ties, yw)
+            return jnp.einsum("yxz,yx->yz", gy, Wxy.T)
 
         add_y = jax.lax.cond(
             xb == yb, lambda _: jnp.zeros((block, n), jnp.float32), y_role, None
@@ -260,8 +289,10 @@ def _fused_z_chunk(m: int, block: int, block_z: int) -> int:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("metric", "block", "block_z", "n_valid"))
-def _focus_fused_jnp(X, *, metric: str, block: int, block_z: int, n_valid: int):
+                   static_argnames=("metric", "block", "block_z", "n_valid",
+                                    "ties"))
+def _focus_fused_jnp(X, *, metric: str, block: int, block_z: int, n_valid: int,
+                     ties: str = DEFAULT_TIES):
     m = X.shape[0]
     nb = m // block
     cz = _fused_z_chunk(m, block, block_z)
@@ -276,7 +307,8 @@ def _focus_fused_jnp(X, *, metric: str, block: int, block_z: int, n_valid: int):
             def zstep(zb, acc):
                 dxc = jax.lax.dynamic_slice(Dx, (0, zb * cz), (block, cz))
                 dyc = jax.lax.dynamic_slice(Dy, (0, zb * cz), (block, cz))
-                msk = (dxc[:, None, :] < Dxy[:, :, None]) | (dyc[None, :, :] < Dxy[:, :, None])
+                msk = focus_weight(dxc[:, None, :], dyc[None, :, :],
+                                   Dxy[:, :, None], ties)
                 return acc + jnp.sum(msk, axis=-1, dtype=jnp.float32)
 
             blk = jax.lax.fori_loop(0, m // cz, zstep,
@@ -289,9 +321,10 @@ def _focus_fused_jnp(X, *, metric: str, block: int, block_z: int, n_valid: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("metric", "block", "block_z", "n_valid"))
+                   static_argnames=("metric", "block", "block_z", "n_valid",
+                                    "ties"))
 def _cohesion_fused_jnp(X, W, *, metric: str, block: int, block_z: int,
-                        n_valid: int):
+                        n_valid: int, ties: str = DEFAULT_TIES):
     m = X.shape[0]
     nb = m // block
     cz = _fused_z_chunk(m, block, block_z)
@@ -303,12 +336,16 @@ def _cohesion_fused_jnp(X, W, *, metric: str, block: int, block_z: int,
             Dy = _dist_slab(X, yb * block, block, metric, n_valid)
             Dxy = jax.lax.dynamic_slice(Dx, (0, yb * block), (block, block))
             Wxy = jax.lax.dynamic_slice(W, (xb * block, yb * block), (block, block))
+            xw = None
+            if ties == "ignore":  # every ordered block pair is visited
+                xw = index_xwins(xb * block, block, yb * block, block)[:, :, None]
 
             def zstep(zb, acc):
                 dxc = jax.lax.dynamic_slice(Dx, (0, zb * cz), (block, cz))
                 dyc = jax.lax.dynamic_slice(Dy, (0, zb * cz), (block, cz))
-                g = (dxc[:, None, :] < dyc[None, :, :]) & (dxc[:, None, :] < Dxy[:, :, None])
-                addc = jnp.einsum("xyz,xy->xz", g.astype(jnp.float32), Wxy)
+                g = support_weight(dxc[:, None, :], dyc[None, :, :],
+                                   Dxy[:, :, None], ties, xw)
+                addc = jnp.einsum("xyz,xy->xz", g, Wxy)
                 acc_c = jax.lax.dynamic_slice(acc, (0, zb * cz), (block, cz))
                 return jax.lax.dynamic_update_slice(acc, acc_c + addc, (0, zb * cz))
 
@@ -324,11 +361,14 @@ def _cohesion_fused_jnp(X, W, *, metric: str, block: int, block_z: int,
 # --------------------------------------------------------------------------
 # public entry points
 # --------------------------------------------------------------------------
-def focus_general(DXZ, DYZ, DXY, *, block=128, block_z=512, impl: str | None = None):
+def focus_general(DXZ, DYZ, DXY, *, block=128, block_z=512,
+                  impl: str | None = None, ties: str = DEFAULT_TIES):
+    validate_ties(ties)
     impl = impl or _default_impl()
-    block, block_z = _resolve_blocks(max(DXZ.shape), "focus", block, block_z, impl)
+    block, block_z = _resolve_blocks(max(DXZ.shape), "focus", block, block_z,
+                                     impl, ties)
     if impl == "jnp":
-        return _focus_general_jnp(DXZ, DYZ, DXY, chunk=block_z)
+        return _focus_general_jnp(DXZ, DYZ, DXY, chunk=block_z, ties=ties)
     (mx, mz), my = DXZ.shape, DYZ.shape[0]
     bx, mxp = _block_and_pad(mx, block)
     by, myp = _block_and_pad(my, block)
@@ -338,76 +378,104 @@ def focus_general(DXZ, DYZ, DXY, *, block=128, block_z=512, impl: str | None = N
         _pad2(DYZ, myp, mzp, jnp.inf),
         _pad2(DXY, mxp, myp, jnp.inf),
         block_x=bx, block_y=by, block_z=bz, interpret=impl == "interpret",
+        ties=ties,
     )
     return U[:mx, :my]
 
 
-def cohesion_general(DXZ, DYZ, DXY, W, *, block=128, block_z=512, impl: str | None = None):
+def cohesion_general(DXZ, DYZ, DXY, W, *, block=128, block_z=512,
+                     impl: str | None = None, ties: str = DEFAULT_TIES,
+                     xwins=None):
+    """``xwins`` (mx, my) bool — global index of x > global index of y —
+    is required for ``ties='ignore'``: the rectangular form cannot derive
+    global row identities itself (distributed callers own the offsets)."""
+    validate_ties(ties)
     impl = impl or _default_impl()
-    block, block_z = _resolve_blocks(max(DXZ.shape), "cohesion", block, block_z, impl)
+    block, block_z = _resolve_blocks(max(DXZ.shape), "cohesion", block, block_z,
+                                     impl, ties)
+    if ties == "ignore" and xwins is None:
+        raise ValueError("ties='ignore' needs xwins (global-index tiebreak)")
     if impl == "jnp":
-        return _cohesion_general_jnp(DXZ, DYZ, DXY, W, chunk=block)
+        XW = xwins if ties == "ignore" else None
+        return _cohesion_general_jnp(DXZ, DYZ, DXY, W, XW, chunk=block,
+                                     ties=ties)
     (mx, mz), my = DXZ.shape, DYZ.shape[0]
     bx, mxp = _block_and_pad(mx, block)
     by, myp = _block_and_pad(my, block)
     bz, mzp = _block_and_pad(mz, block_z)
+    XW = None
+    if ties == "ignore":
+        # pad with 0 ("x does not win"): padded pairs carry zero weight anyway
+        XW = _pad2(xwins.astype(jnp.float32), mxp, myp, 0.0)
     C = cohesion_general_pallas(
         _pad2(DXZ, mxp, mzp, jnp.inf),
         _pad2(DYZ, myp, mzp, jnp.inf),
         _pad2(DXY, mxp, myp, jnp.inf),
         _pad2(W, mxp, myp, 0.0),
+        XW,
         block_x=bx, block_z=bz, block_y=by, interpret=impl == "interpret",
+        ties=ties,
     )
     return C[:mx, :mz]
 
 
 def focus(D, *, block=128, block_z=512, impl: str | None = None,
-          schedule: str = "dense"):
+          schedule: str = "dense", ties: str = DEFAULT_TIES):
     """schedule='tri' uses the upper-triangular scalar-prefetch kernel
     (pald_focus_tri): ~half the comparisons of the dense grid, same
     result.  Only meaningful for the square (sequential) case."""
+    validate_ties(ties)
     if schedule == "tri":
         impl = impl or ("pallas" if on_tpu() else "jnp")
         n = D.shape[0]
-        block, block_z = _resolve_blocks(n, "focus_tri", block, block_z, impl)
+        block, block_z = _resolve_blocks(n, "focus_tri", block, block_z, impl,
+                                         ties)
         block, block_z = min(block, n), min(block_z, n)
         if impl == "jnp":
             Dp, _, n0 = _pad_square_tri(D, None, block)
-            return _focus_tri_jnp(Dp, block=block)[:n0, :n0]
+            return _focus_tri_jnp(Dp, block=block, ties=ties)[:n0, :n0]
         # pad to the largest tile, then shrink tiles to divisors of the
         # padded size (keeps the quantum bounded — never an lcm blow-up)
         Dp, _, n0 = _pad_square_tri(D, None, max(block, block_z))
         m = Dp.shape[0]
         block, block_z = _pick_block(m, block), _pick_block(m, block_z)
         U = focus_tri_pallas(
-            Dp, block=block, block_z=block_z, interpret=impl == "interpret"
+            Dp, block=block, block_z=block_z, interpret=impl == "interpret",
+            ties=ties,
         )
         return U[:n0, :n0]
-    return focus_general(D, D, D, block=block, block_z=block_z, impl=impl)
+    return focus_general(D, D, D, block=block, block_z=block_z, impl=impl,
+                         ties=ties)
 
 
 def cohesion_from_weights(D, W, *, block=128, block_z=512, impl: str | None = None,
-                          schedule: str = "dense"):
+                          schedule: str = "dense", ties: str = DEFAULT_TIES):
     """Pass 2 from precomputed reciprocal weights W = 1/U.
 
     schedule='tri' enumerates only the upper-triangular block pairs and
-    applies both role updates per visit (pald_cohesion_tri)."""
+    applies both role updates per visit (pald_cohesion_tri).  The square
+    case derives the ties='ignore' index tiebreak itself."""
+    validate_ties(ties)
     if schedule == "tri":
         impl = impl or ("pallas" if on_tpu() else "jnp")
         n = D.shape[0]
-        block, block_z = _resolve_blocks(n, "cohesion_tri", block, block_z, impl)
+        block, block_z = _resolve_blocks(n, "cohesion_tri", block, block_z,
+                                         impl, ties)
         block, block_z = min(block, n), min(block_z, n)
         if impl == "jnp":
             Dp, Wp, n0 = _pad_square_tri(D, W, block)
-            return _cohesion_tri_jnp(Dp, Wp, block=block)[:n0, :n0]
+            return _cohesion_tri_jnp(Dp, Wp, block=block, ties=ties)[:n0, :n0]
         Dp, Wp, n0 = _pad_square_tri(D, W, max(block, block_z))
         m = Dp.shape[0]
         block, block_z = _pick_block(m, block), _pick_block(m, block_z)
         C = cohesion_tri_pallas(
-            Dp, Wp, block=block, block_z=block_z, interpret=impl == "interpret"
+            Dp, Wp, block=block, block_z=block_z, interpret=impl == "interpret",
+            ties=ties,
         )
         return C[:n0, :n0]
-    return cohesion_general(D, D, D, W, block=block, block_z=block_z, impl=impl)
+    xwins = square_xwins(D.shape[0]) if ties == "ignore" else None
+    return cohesion_general(D, D, D, W, block=block, block_z=block_z, impl=impl,
+                            ties=ties, xwins=xwins)
 
 
 def pald(
@@ -419,6 +487,7 @@ def pald(
     n_valid=None,
     impl: str | None = None,
     schedule: str = "dense",
+    ties: str = DEFAULT_TIES,
 ):
     """Full PaLD via the kernel pipeline (inputs padded internally as needed).
 
@@ -426,14 +495,16 @@ def pald(
     'jnp' (vectorized fallback), or None for backend default.
     schedule: 'dense' runs the full rectangular grids; 'tri' dispatches to
     the fused upper-triangular pipeline (``pald_tri``).
+    ties: tie-handling mode shared by both passes (core/ties.py).
     """
     if schedule == "tri":
         return pald_tri(D, block=block, block_z=block_z, normalize=normalize,
-                        n_valid=n_valid, impl=impl)
+                        n_valid=n_valid, impl=impl, ties=ties)
     impl = impl or ("pallas" if on_tpu() else "interpret")
-    U = focus(D, block=block, block_z=block_z, impl=impl)
+    U = focus(D, block=block, block_z=block_z, impl=impl, ties=ties)
     W = weights_ref(U, n_valid)
-    C = cohesion_from_weights(D, W, block=block, block_z=block_z, impl=impl)
+    C = cohesion_from_weights(D, W, block=block, block_z=block_z, impl=impl,
+                              ties=ties)
     if normalize:
         C = C / (D.shape[0] - 1)
     return C
@@ -447,6 +518,7 @@ def pald_fused(
     block_z=512,
     normalize: bool = False,
     impl: str | None = None,
+    ties: str = DEFAULT_TIES,
 ):
     """Fused features→cohesion pipeline: X (n, d) -> C (n, n).
 
@@ -462,23 +534,25 @@ def pald_fused(
     """
     from repro.core.features import pad_features
 
+    validate_ties(ties)
     impl = impl or ("pallas" if on_tpu() else "jnp")
     X = jnp.asarray(X, jnp.float32)
     n, d = X.shape
     if block_z is None:
         block_z = "auto" if block == "auto" else 512
     if block == "auto" or block_z == "auto":
-        rb, rbz = _tuner.resolve_blocks(n, "pald_fused", impl=impl, d=d)
+        rb, rbz = _tuner.resolve_blocks(n, "pald_fused", impl=impl, d=d,
+                                        ties=ties)
         block = rb if block == "auto" else block
         block_z = rbz if block_z == "auto" else block_z
     block, block_z = min(int(block), n), min(int(block_z), n)
     if impl == "jnp":
         Xp, n0 = pad_features(X, block)
         U = _focus_fused_jnp(Xp, metric=metric, block=block, block_z=block_z,
-                             n_valid=n0)
+                             n_valid=n0, ties=ties)
         W = weights_ref(U, n0 if Xp.shape[0] != n0 else None)
         C = _cohesion_fused_jnp(Xp, W, metric=metric, block=block,
-                                block_z=block_z, n_valid=n0)
+                                block_z=block_z, n_valid=n0, ties=ties)
     else:
         from .pald_fused import cohesion_fused_pallas, focus_fused_pallas
 
@@ -491,11 +565,11 @@ def pald_fused(
             Xp = jnp.pad(Xp, ((0, 0), (0, 128 - d % 128)))
         interp = impl == "interpret"
         U = focus_fused_pallas(Xp, metric=metric, n_valid=n0, block=block,
-                               block_z=block_z, interpret=interp)
+                               block_z=block_z, interpret=interp, ties=ties)
         W = weights_ref(U, n0 if m != n0 else None)
         C = cohesion_fused_pallas(Xp, W, metric=metric, n_valid=n0,
                                   block=block, block_z=block_z,
-                                  interpret=interp)
+                                  interpret=interp, ties=ties)
     C = C[:n, :n]
     if normalize:
         C = C / max(n - 1, 1)
@@ -510,16 +584,18 @@ def pald_tri(
     normalize: bool = False,
     n_valid=None,
     impl: str | None = None,
+    ties: str = DEFAULT_TIES,
 ):
     """Fused tri-schedule pipeline: tri-focus -> precomputed-reciprocal
     weights -> tri-cohesion.  Both passes visit only the nb(nb+1)/2
     upper-triangular block pairs (paper Algorithm 2 at block granularity,
     DESIGN.md §4.3); padding to the tile multiple happens once here.
     """
+    validate_ties(ties)
     impl = impl or ("pallas" if on_tpu() else "interpret")
     n_in = D.shape[0]
-    bf, bzf = _resolve_blocks(n_in, "focus_tri", block, block_z, impl)
-    bc, bzc = _resolve_blocks(n_in, "cohesion_tri", block, block_z, impl)
+    bf, bzf = _resolve_blocks(n_in, "focus_tri", block, block_z, impl, ties)
+    bc, bzc = _resolve_blocks(n_in, "cohesion_tri", block, block_z, impl, ties)
     bf, bzf = min(bf, n_in), min(bzf, n_in)
     bc, bzc = min(bc, n_in), min(bzc, n_in)
     # one pipeline-level pad to the largest requested tile, then shrink each
@@ -531,14 +607,16 @@ def pald_tri(
     bzf, bzc = _pick_block(m, bzf), _pick_block(m, bzc)
     nv = n_valid if n_valid is not None else (n_in if Dp.shape[0] != n_in else None)
     if impl == "jnp":
-        U = _focus_tri_jnp(Dp, block=bf)
+        U = _focus_tri_jnp(Dp, block=bf, ties=ties)
         W = weights_ref(U, nv)
-        C = _cohesion_tri_jnp(Dp, W, block=bc)
+        C = _cohesion_tri_jnp(Dp, W, block=bc, ties=ties)
     else:
         interp = impl == "interpret"
-        U = focus_tri_pallas(Dp, block=bf, block_z=bzf, interpret=interp)
+        U = focus_tri_pallas(Dp, block=bf, block_z=bzf, interpret=interp,
+                             ties=ties)
         W = weights_ref(U, nv)
-        C = cohesion_tri_pallas(Dp, W, block=bc, block_z=bzc, interpret=interp)
+        C = cohesion_tri_pallas(Dp, W, block=bc, block_z=bzc, interpret=interp,
+                                ties=ties)
     C = C[:n_in, :n_in]
     if normalize:
         C = C / (n_in - 1)

@@ -1,9 +1,12 @@
 """Pallas TPU kernel for PaLD pass 2: cohesion accumulation.
 
-    C[x, z] = sum_y (D[x,z] < D[y,z]) & (D[x,z] < D[x,y]) * W[x,y]
+    C[x, z] = sum_y support_weight(D[x,z], D[y,z], D[x,y]) * W[x,y]
 
 with W = 1/U (zero diagonal / padded entries; computed outside the kernel so
-the reciprocal is done once — the paper's "precompute reciprocals" trick).
+the reciprocal is done once — the paper's "precompute reciprocals" trick)
+and the tie-mode support predicate shared with every other path
+(``core/ties.py``; the default ``ties='drop'`` is the classic strict
+``(d_xz < d_yz) & (d_xz < d_xy)``).
 
 Grid (nx, nz, ny) with the y-reduction innermost: the output block C[X, Z]
 stays resident in VMEM across all y steps.  The kernel updates unit-stride
@@ -11,7 +14,14 @@ stays resident in VMEM across all y steps.  The kernel updates unit-stride
 C instead" stride-1 optimization (their C is updated column-wise because the
 z loop streams columns; our block layout makes the streamed dim contiguous).
 
-VMEM = D_XZ + C_XZ + D_YZ + D_XY + W_XY = 3*bx*bz + 2*bx*by floats.
+``ties='ignore'`` needs the global-index tiebreak: callers pass ``XW``
+(mx, my) float32, 1.0 where global index x > global index y, which rides the
+same BlockSpec as W.  The rectangular form cannot derive it from grid
+position (distributed callers own arbitrary row offsets), so it is an
+explicit input rather than an iota.
+
+VMEM = D_XZ + C_XZ + D_YZ + D_XY + W_XY (+ XW_XY for 'ignore')
+     = 3*bx*bz + 2*bx*by (+ bx*by) floats.
 """
 from __future__ import annotations
 
@@ -21,10 +31,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.ties import DEFAULT_TIES, support_weight
+
 __all__ = ["cohesion_pallas"]
 
 
-def _cohesion_kernel(dxz_ref, dyz_ref, dxy_ref, w_ref, c_ref):
+def _cohesion_kernel(dxz_ref, dyz_ref, dxy_ref, w_ref, c_ref, *, ties):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -41,53 +53,92 @@ def _cohesion_kernel(dxz_ref, dyz_ref, dxy_ref, w_ref, c_ref):
         row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)   # (1, bz)  d_yz
         thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)   # (bx, 1) d_xy
         wy = jax.lax.dynamic_slice_in_dim(w, y, 1, axis=1)      # (bx, 1)
-        g = (dxz < row) & (dxz < thr)                           # (bx, bz)
-        return acc + g.astype(jnp.float32) * wy
+        g = support_weight(dxz, row, thr, ties)                 # (bx, bz)
+        return acc + g * wy
 
     add = jax.lax.fori_loop(0, by, body, jnp.zeros_like(c_ref))
     c_ref[...] += add
 
 
-@functools.partial(jax.jit, static_argnames=("block_x", "block_z", "block_y", "interpret"))
+def _cohesion_kernel_xw(dxz_ref, dyz_ref, dxy_ref, w_ref, xw_ref, c_ref, *, ties):
+    """ties='ignore' variant: one extra (bx, by) tiebreak tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    dxz = dxz_ref[...]
+    dyz = dyz_ref[...]
+    dxy = dxy_ref[...]
+    w = w_ref[...]
+    xw = xw_ref[...]    # (bx, by) 1.0 where global x index > global y index
+    by = dxy.shape[1]
+
+    def body(y, acc):
+        row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)
+        thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)
+        wy = jax.lax.dynamic_slice_in_dim(w, y, 1, axis=1)
+        xwy = jax.lax.dynamic_slice_in_dim(xw, y, 1, axis=1) > 0.5  # (bx, 1)
+        g = support_weight(dxz, row, thr, ties, xwy)
+        return acc + g * wy
+
+    add = jax.lax.fori_loop(0, by, body, jnp.zeros_like(c_ref))
+    c_ref[...] += add
+
+
+@functools.partial(jax.jit, static_argnames=("block_x", "block_z", "block_y",
+                                             "interpret", "ties"))
 def cohesion_general_pallas(
     DXZ: jnp.ndarray,  # (mx, mz)
     DYZ: jnp.ndarray,  # (my, mz)
     DXY: jnp.ndarray,  # (mx, my)
     W: jnp.ndarray,    # (mx, my)
+    XW: jnp.ndarray | None = None,  # (mx, my) tiebreak, ties='ignore' only
     *,
     block_x: int = 128,
     block_z: int = 512,
     block_y: int = 128,
     interpret: bool = False,
+    ties: str = DEFAULT_TIES,
 ) -> jnp.ndarray:
-    """C (mx, mz) = sum_y (DXZ < DYZ[y]) & (DXZ < DXY[:,y]) * W[:,y].
+    """C (mx, mz) = sum_y support_weight(DXZ, DYZ[y], DXY[:,y]) * W[:,y].
 
     Rectangular form for distributed per-device compute; the square
-    sequential case passes D three times.
+    sequential case passes D three times.  ``ties='ignore'`` additionally
+    requires ``XW`` (1.0 where global x index > global y index).
     """
     mx, mz = DXZ.shape
     my = DYZ.shape[0]
     assert DYZ.shape[1] == mz and DXY.shape == (mx, my) and W.shape == (mx, my)
     assert mx % block_x == 0 and mz % block_z == 0 and my % block_y == 0
     grid = (mx // block_x, mz // block_z, my // block_y)
+    pair_spec = pl.BlockSpec((block_x, block_y), lambda i, j, k: (i, k))
+    in_specs = [
+        pl.BlockSpec((block_x, block_z), lambda i, j, k: (i, j)),  # DXZ
+        pl.BlockSpec((block_y, block_z), lambda i, j, k: (k, j)),  # DYZ
+        pair_spec,                                                 # DXY
+        pair_spec,                                                 # W
+    ]
+    args = [DXZ.astype(jnp.float32), DYZ.astype(jnp.float32),
+            DXY.astype(jnp.float32), W.astype(jnp.float32)]
+    if ties == "ignore":
+        if XW is None:
+            raise ValueError("ties='ignore' needs XW (global-index tiebreak)")
+        assert XW.shape == (mx, my)
+        in_specs.append(pair_spec)                                 # XW
+        args.append(XW.astype(jnp.float32))
+        kernel = functools.partial(_cohesion_kernel_xw, ties=ties)
+    else:
+        kernel = functools.partial(_cohesion_kernel, ties=ties)
     return pl.pallas_call(
-        _cohesion_kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_x, block_z), lambda i, j, k: (i, j)),  # DXZ
-            pl.BlockSpec((block_y, block_z), lambda i, j, k: (k, j)),  # DYZ
-            pl.BlockSpec((block_x, block_y), lambda i, j, k: (i, k)),  # DXY
-            pl.BlockSpec((block_x, block_y), lambda i, j, k: (i, k)),  # W
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_x, block_z), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mx, mz), jnp.float32),
         interpret=interpret,
-    )(
-        DXZ.astype(jnp.float32),
-        DYZ.astype(jnp.float32),
-        DXY.astype(jnp.float32),
-        W.astype(jnp.float32),
-    )
+    )(*args)
 
 
 def cohesion_pallas(
@@ -98,8 +149,11 @@ def cohesion_pallas(
     block_z: int = 512,
     block_y: int = 128,
     interpret: bool = False,
+    ties: str = DEFAULT_TIES,
+    XW: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Square cohesion matrix (un-normalized, sequential case)."""
     return cohesion_general_pallas(
-        D, D, D, W, block_x=block_x, block_z=block_z, block_y=block_y, interpret=interpret
+        D, D, D, W, XW, block_x=block_x, block_z=block_z, block_y=block_y,
+        interpret=interpret, ties=ties
     )

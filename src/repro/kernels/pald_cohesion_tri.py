@@ -13,16 +13,16 @@ enumerated — scalar-prefetched (xb, yb) index arrays via
 ``pltpu.PrefetchScalarGridSpec`` — and each off-diagonal visit performs BOTH
 role updates:
 
-    x-role:  C[x, z] +=  (d_xz < d_yz)            & (d_xz < d_xy) * W[x, y]
-    y-role:  C[y, z] += !(d_xz < d_yz)            & (d_yz < d_xy) * W[x, y]
+    x-role:  C[x, z] += support_weight(d_xz, d_yz, d_xy) * W[x, y]
+    y-role:  C[y, z] += support_weight(d_yz, d_xz, d_xy) * W[x, y]
 
-The y-role reuses the x-role's comparison cube through its complement, which
-is the paper's Algorithm-2 branch ("whichever of x, y is closer to z gets the
-support") translated to branch-free vector form.  On an exact tie
-d_xz == d_yz the support goes to y — precisely the ``ties='ignore'``
-semantics of ``reference.pald_pairwise_reference`` (the dense path's two
-strict masks implement ``ties='drop'``; the schedules agree on tie-free
-input, which is what every optimized path targets).
+with the tie-mode predicate shared across every path (``core/ties.py``).
+Before PR 3 the y-role reused the x-role's comparison through its complement
+(ties -> y, i.e. ``ties='ignore'``) while diagonal blocks ran the one-sided
+strict x-role (``ties='drop'``), so the schedule matched *neither* reference
+on tied input — the shared helper computes both roles explicitly in the
+requested mode instead, with the global block indices (already prefetched
+for the index maps) providing the ``ties='ignore'`` index tiebreak.
 
 Accumulation layout (grid = (nz, npairs), pairs innermost, x-major order):
 
@@ -54,11 +54,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.ties import DEFAULT_TIES, support_weight
+
 __all__ = ["cohesion_tri_pallas"]
 
 
 def _cohesion_tri_kernel(xs_ref, ys_ref, dxz_ref, dyz_ref, dxy_ref, w_ref,
-                         cx_ref, cy_ref):
+                         cx_ref, cy_ref, *, ties):
     t = pl.program_id(1)
     xb = xs_ref[t]
     yb = ys_ref[t]
@@ -84,12 +86,19 @@ def _cohesion_tri_kernel(xs_ref, ys_ref, dxz_ref, dyz_ref, dxy_ref, w_ref,
         row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)   # (1, bz) d_yz
         thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)   # (b, 1)  d_xy
         wy = jax.lax.dynamic_slice_in_dim(w, y, 1, axis=1)      # (b, 1)
-        cmp = dxz < row                                         # (b, bz)
-        gx = cmp & (dxz < thr)
-        acc_x = acc_x + gx.astype(jnp.float32) * wy
-        # y-role: complement of cmp, one output row, reduced over the x axis
-        gy = jnp.logical_not(cmp) & (row < thr)                 # (b, bz)
-        ry = jnp.sum(gy.astype(jnp.float32) * wy, axis=0, keepdims=True)
+        xw = yw = None
+        if ties == "ignore":
+            # global-index tiebreak from the prefetched block coordinates; on
+            # diagonal blocks the one-sided x-role visits both orders of every
+            # in-block pair, so xw alone implements the mode there
+            xg = xb * b + jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)
+            yg = yb * b + y
+            xw, yw = xg > yg, yg > xg
+        gx = support_weight(dxz, row, thr, ties, xw)            # (b, bz)
+        acc_x = acc_x + gx * wy
+        # y-role: one output row, reduced over the x axis
+        gy = support_weight(row, dxz, thr, ties, yw)            # (b, bz)
+        ry = jnp.sum(gy * wy, axis=0, keepdims=True)
         acc_y = jax.lax.dynamic_update_slice_in_dim(acc_y, ry, y, axis=0)
         return acc_x, acc_y
 
@@ -106,7 +115,8 @@ def _cohesion_tri_kernel(xs_ref, ys_ref, dxz_ref, dyz_ref, dxy_ref, w_ref,
         cy_ref[pl.ds(start, b), :] += add_y
 
 
-@functools.partial(jax.jit, static_argnames=("block", "block_z", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "block_z", "interpret",
+                                             "ties"))
 def cohesion_tri_pallas(
     D: jnp.ndarray,
     W: jnp.ndarray,
@@ -114,6 +124,7 @@ def cohesion_tri_pallas(
     block: int = 128,
     block_z: int = 512,
     interpret: bool = False,
+    ties: str = DEFAULT_TIES,
 ) -> jnp.ndarray:
     """C (n, n) via the upper-triangular block schedule (square case only)."""
     n = D.shape[0]
@@ -149,7 +160,7 @@ def cohesion_tri_pallas(
         ],
     )
     Cx, Cy = pl.pallas_call(
-        _cohesion_tri_kernel,
+        functools.partial(_cohesion_tri_kernel, ties=ties),
         grid_spec=spec,
         out_shape=[
             jax.ShapeDtypeStruct((n, n), jnp.float32),

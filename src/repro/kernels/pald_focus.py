@@ -21,10 +21,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.ties import DEFAULT_TIES, focus_weight
+
 __all__ = ["focus_pallas"]
 
 
-def _focus_kernel(dxz_ref, dyz_ref, dxy_ref, u_ref):
+def _focus_kernel(dxz_ref, dyz_ref, dxy_ref, u_ref, *, ties):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -37,18 +39,19 @@ def _focus_kernel(dxz_ref, dyz_ref, dxy_ref, u_ref):
     by = dxy.shape[1]
 
     def body(y, acc):
-        # column y of the U block: sum_z (d_xz < d_xy[:,y]) | (d_yz[y] < d_xy[:,y])
+        # column y of the U block: sum_z focus_weight(d_xz, d_yz[y], d_xy[:,y])
         thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)      # (bx, 1)
         row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)      # (1, bz)
-        m = (dxz < thr) | (row < thr)                              # (bx, bz)
-        col = jnp.sum(m.astype(jnp.float32), axis=1, keepdims=True)
+        m = focus_weight(dxz, row, thr, ties)                      # (bx, bz)
+        col = jnp.sum(m, axis=1, keepdims=True)
         return jax.lax.dynamic_update_slice_in_dim(acc, col, y, axis=1)
 
     add = jax.lax.fori_loop(0, by, body, jnp.zeros_like(u_ref))
     u_ref[...] += add
 
 
-@functools.partial(jax.jit, static_argnames=("block_x", "block_y", "block_z", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_x", "block_y", "block_z",
+                                             "interpret", "ties"))
 def focus_general_pallas(
     DXZ: jnp.ndarray,  # (mx, mz) distances x -> z
     DYZ: jnp.ndarray,  # (my, mz) distances y -> z
@@ -58,6 +61,7 @@ def focus_general_pallas(
     block_y: int = 128,
     block_z: int = 512,
     interpret: bool = False,
+    ties: str = DEFAULT_TIES,
 ) -> jnp.ndarray:
     """U (mx, my) = sum_z (DXZ[x,z] < DXY[x,y]) | (DYZ[y,z] < DXY[x,y]).
 
@@ -71,7 +75,7 @@ def focus_general_pallas(
     assert mx % block_x == 0 and my % block_y == 0 and mz % block_z == 0
     grid = (mx // block_x, my // block_y, mz // block_z)
     return pl.pallas_call(
-        _focus_kernel,
+        functools.partial(_focus_kernel, ties=ties),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_x, block_z), lambda i, j, k: (i, k)),  # DXZ
@@ -90,8 +94,10 @@ def focus_pallas(
     block_xy: int = 128,
     block_z: int = 512,
     interpret: bool = False,
+    ties: str = DEFAULT_TIES,
 ) -> jnp.ndarray:
     """Square local-focus size matrix (sequential case)."""
     return focus_general_pallas(
-        D, D, D, block_x=block_xy, block_y=block_xy, block_z=block_z, interpret=interpret
+        D, D, D, block_x=block_xy, block_y=block_xy, block_z=block_z,
+        interpret=interpret, ties=ties
     )

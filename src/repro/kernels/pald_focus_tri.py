@@ -24,10 +24,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.ties import DEFAULT_TIES, focus_weight
+
 __all__ = ["focus_tri_pallas"]
 
 
-def _focus_tri_kernel(xs_ref, ys_ref, dxz_ref, dyz_ref, dxy_ref, u_ref):
+def _focus_tri_kernel(xs_ref, ys_ref, dxz_ref, dyz_ref, dxy_ref, u_ref, *, ties):
     # xs_ref/ys_ref are scalar-prefetch refs (consumed by the index maps);
     # the kernel body itself is identical to the dense focus kernel.
     del xs_ref, ys_ref
@@ -45,21 +47,23 @@ def _focus_tri_kernel(xs_ref, ys_ref, dxz_ref, dyz_ref, dxy_ref, u_ref):
     def body(y, acc):
         thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)      # (b, 1)
         row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)      # (1, bz)
-        m = (dxz < thr) | (row < thr)
-        col = jnp.sum(m.astype(jnp.float32), axis=1, keepdims=True)
+        m = focus_weight(dxz, row, thr, ties)
+        col = jnp.sum(m, axis=1, keepdims=True)
         return jax.lax.dynamic_update_slice_in_dim(acc, col, y, axis=1)
 
     add = jax.lax.fori_loop(0, b, body, jnp.zeros((bx, b), jnp.float32))
     u_ref[0] += add
 
 
-@functools.partial(jax.jit, static_argnames=("block", "block_z", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "block_z", "interpret",
+                                             "ties"))
 def focus_tri_pallas(
     D: jnp.ndarray,
     *,
     block: int = 128,
     block_z: int = 512,
     interpret: bool = False,
+    ties: str = DEFAULT_TIES,
 ) -> jnp.ndarray:
     """U = local-focus sizes via the upper-triangular block schedule."""
     n = D.shape[0]
@@ -88,7 +92,7 @@ def focus_tri_pallas(
         ),
     )
     packed = pl.pallas_call(
-        _focus_tri_kernel,
+        functools.partial(_focus_tri_kernel, ties=ties),
         grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((npairs, block, block), jnp.float32),
         interpret=interpret,

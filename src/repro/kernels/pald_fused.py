@@ -29,12 +29,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.features import masked_dist_tile
+from repro.core.ties import DEFAULT_TIES, focus_weight, support_weight
 
 __all__ = ["focus_fused_pallas", "cohesion_fused_pallas"]
 
 
 def _focus_fused_kernel(xi_ref, xj_ref, xk_ref, u_ref, *, metric, n_valid,
-                        block, block_y, block_z):
+                        block, block_y, block_z, ties):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -56,8 +57,8 @@ def _focus_fused_kernel(xi_ref, xj_ref, xk_ref, u_ref, *, metric, n_valid,
     def body(y, acc):
         thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)      # (bx, 1)
         row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)      # (1, bz)
-        m = (dxz < thr) | (row < thr)
-        col = jnp.sum(m.astype(jnp.float32), axis=1, keepdims=True)
+        m = focus_weight(dxz, row, thr, ties)
+        col = jnp.sum(m, axis=1, keepdims=True)
         return jax.lax.dynamic_update_slice_in_dim(acc, col, y, axis=1)
 
     add = jax.lax.fori_loop(0, by, body, jnp.zeros_like(u_ref))
@@ -65,7 +66,7 @@ def _focus_fused_kernel(xi_ref, xj_ref, xk_ref, u_ref, *, metric, n_valid,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "metric", "n_valid", "block", "block_y", "block_z", "interpret"))
+    "metric", "n_valid", "block", "block_y", "block_z", "interpret", "ties"))
 def focus_fused_pallas(
     X: jnp.ndarray,            # (m, d) zero-padded features
     *,
@@ -75,6 +76,7 @@ def focus_fused_pallas(
     block_y: int | None = None,
     block_z: int = 512,
     interpret: bool = False,
+    ties: str = DEFAULT_TIES,
 ) -> jnp.ndarray:
     """U (m, m) local-focus sizes computed straight from feature tiles."""
     m, d = X.shape
@@ -83,7 +85,7 @@ def focus_fused_pallas(
     grid = (m // block, m // block_y, m // block_z)
     kernel = functools.partial(
         _focus_fused_kernel, metric=metric, n_valid=n_valid,
-        block=block, block_y=block_y, block_z=block_z,
+        block=block, block_y=block_y, block_z=block_z, ties=ties,
     )
     return pl.pallas_call(
         kernel,
@@ -100,7 +102,7 @@ def focus_fused_pallas(
 
 
 def _cohesion_fused_kernel(xi_ref, xj_ref, xk_ref, w_ref, c_ref, *, metric,
-                           n_valid, block, block_y, block_z):
+                           n_valid, block, block_y, block_z, ties):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -118,21 +120,25 @@ def _cohesion_fused_kernel(xi_ref, xj_ref, xk_ref, w_ref, c_ref, *, metric,
                            n_valid, loop_d=True)   # (bx, by)
     w = w_ref[...]                                 # (bx, by)
     by = dxy.shape[1]
+    bx = dxz.shape[0]
+    xg = xoff + jax.lax.broadcasted_iota(jnp.int32, (bx, 1), 0)
 
-    # identical tile body to pald_cohesion._cohesion_kernel
+    # identical tile body to pald_cohesion._cohesion_kernel; the grid owns
+    # both offsets, so the ties='ignore' index tiebreak is an in-kernel iota
     def body(y, acc):
         row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)   # (1, bz)
         thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)   # (bx, 1)
         wy = jax.lax.dynamic_slice_in_dim(w, y, 1, axis=1)      # (bx, 1)
-        g = (dxz < row) & (dxz < thr)
-        return acc + g.astype(jnp.float32) * wy
+        xw = (xg > yoff + y) if ties == "ignore" else None
+        g = support_weight(dxz, row, thr, ties, xw)
+        return acc + g * wy
 
     add = jax.lax.fori_loop(0, by, body, jnp.zeros_like(c_ref))
     c_ref[...] += add
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "metric", "n_valid", "block", "block_y", "block_z", "interpret"))
+    "metric", "n_valid", "block", "block_y", "block_z", "interpret", "ties"))
 def cohesion_fused_pallas(
     X: jnp.ndarray,            # (m, d) zero-padded features
     W: jnp.ndarray,            # (m, m) reciprocal weights
@@ -143,6 +149,7 @@ def cohesion_fused_pallas(
     block_y: int | None = None,
     block_z: int = 512,
     interpret: bool = False,
+    ties: str = DEFAULT_TIES,
 ) -> jnp.ndarray:
     """C (m, m) cohesion from feature tiles + precomputed weights."""
     m, d = X.shape
@@ -152,7 +159,7 @@ def cohesion_fused_pallas(
     grid = (m // block, m // block_z, m // block_y)
     kernel = functools.partial(
         _cohesion_fused_kernel, metric=metric, n_valid=n_valid,
-        block=block, block_y=block_y, block_z=block_z,
+        block=block, block_y=block_y, block_z=block_z, ties=ties,
     )
     return pl.pallas_call(
         kernel,

@@ -8,12 +8,14 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.ties import DEFAULT_TIES, focus_weight, support_weight
+
 __all__ = ["focus_ref", "cohesion_ref", "weights_ref"]
 
 
-def focus_ref(D: jnp.ndarray) -> jnp.ndarray:
+def focus_ref(D: jnp.ndarray, *, ties: str = DEFAULT_TIES) -> jnp.ndarray:
     D = D.astype(jnp.float32)
-    m = (D[:, None, :] < D[:, :, None]) | (D[None, :, :] < D[:, :, None])
+    m = focus_weight(D[:, None, :], D[None, :, :], D[:, :, None], ties)
     return jnp.sum(m, axis=-1).astype(jnp.float32)
 
 
@@ -27,8 +29,12 @@ def weights_ref(U: jnp.ndarray, n_valid=None) -> jnp.ndarray:
     return W.astype(jnp.float32)
 
 
-def cohesion_ref(D: jnp.ndarray, W: jnp.ndarray) -> jnp.ndarray:
+def cohesion_ref(D: jnp.ndarray, W: jnp.ndarray, *,
+                 ties: str = DEFAULT_TIES) -> jnp.ndarray:
     D = D.astype(jnp.float32)
-    # g[x, y, z] = (d_xz < d_yz) & (d_xz < d_xy)
-    g = (D[:, None, :] < D[None, :, :]) & (D[:, None, :] < D[:, :, None])
-    return jnp.einsum("xyz,xy->xz", g.astype(jnp.float32), W.astype(jnp.float32))
+    n = D.shape[0]
+    ids = jnp.arange(n)
+    xw = (ids[:, None] > ids[None, :])[:, :, None] if ties == "ignore" else None
+    # g[x, y, z] = support_weight(d_xz, d_yz, d_xy)
+    g = support_weight(D[:, None, :], D[None, :, :], D[:, :, None], ties, xw)
+    return jnp.einsum("xyz,xy->xz", g, W.astype(jnp.float32))

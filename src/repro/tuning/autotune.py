@@ -37,11 +37,19 @@ PASSES = ("focus", "cohesion", "focus_tri", "cohesion_tri", "pald",
           "pald_tri", "pald_fused")
 
 
-def _pass_key(pass_: str, d: int | None) -> str:
+def _pass_key(pass_: str, d: int | None, ties: str | None = None) -> str:
     """Feature-fused cells depend on the feature dimension too: the optimal
     tile moves with d (the in-register distance compute scales with it), so
-    d joins the cache key as a ``:d<d>`` suffix on the pass name."""
-    return pass_ if d is None else f"{pass_}:d{int(d)}"
+    d joins the cache key as a ``:d<d>`` suffix on the pass name.  Non-default
+    tie modes change the tile bodies (extra equality masks for 'split', the
+    index-tiebreak input for 'ignore'), so they get their own cells via a
+    ``:t-<mode>`` suffix; the default 'drop' keeps the legacy key so existing
+    caches stay valid."""
+    if d is not None:
+        pass_ = f"{pass_}:d{int(d)}"
+    if ties and ties != "drop":
+        pass_ = f"{pass_}:t-{ties}"
+    return pass_
 
 
 def cache_path(path: str | None = None) -> str:
@@ -149,21 +157,27 @@ def resolve_blocks(
     backend: str | None = None,
     path: str | None = None,
     d: int | None = None,
+    ties: str | None = None,
 ) -> tuple[int, int]:
     """(block, block_z) for one pass at size n: cached, nearest, or default.
 
     ``d`` (feature dimension) extends the key for the fused pass — tiles
-    tuned at one d are not reused for another."""
+    tuned at one d are not reused for another.  ``ties`` extends the key for
+    non-default tie modes (their tile bodies differ); a miss on a tie-mode
+    cell falls back to the strict cell's entry before the size heuristic,
+    since the optima rarely move much."""
     backend = backend or _default_backend()
     impl = impl or _default_impl(backend)
-    pass_ = _pass_key(pass_, d)
-    rec = lookup(backend, impl, n, pass_, path)
-    if rec is None:
-        near = lookup_nearest(backend, impl, n, pass_, path)
-        rec = near[1] if near else None
-    if rec and "block" in rec:
-        return (max(min(int(rec["block"]), n), 1),
-                max(min(int(rec.get("block_z", rec["block"])), n), 1))
+    base = _pass_key(pass_, d)
+    keyed = _pass_key(pass_, d, ties)
+    for pk in dict.fromkeys((keyed, base)):  # tie-mode cell first, then strict
+        rec = lookup(backend, impl, n, pk, path)
+        if rec is None:
+            near = lookup_nearest(backend, impl, n, pk, path)
+            rec = near[1] if near else None
+        if rec and "block" in rec:
+            return (max(min(int(rec["block"]), n), 1),
+                    max(min(int(rec.get("block_z", rec["block"])), n), 1))
     return _default_blocks(n, pass_)
 
 
@@ -219,23 +233,29 @@ def _synthetic_inputs(n: int, seed: int = 0, with_weights: bool = False,
     return D, W, X
 
 
-def _runner(pass_: str, D, W, X, block: int, block_z: int, impl: str):
+def _runner(pass_: str, D, W, X, block: int, block_z: int, impl: str,
+            ties: str = "drop"):
     from repro.kernels import ops
     if pass_ == "focus":
-        return ops.focus_general(D, D, D, block=block, block_z=block_z, impl=impl)
+        return ops.focus_general(D, D, D, block=block, block_z=block_z,
+                                 impl=impl, ties=ties)
     if pass_ == "focus_tri":
-        return ops.focus(D, block=block, block_z=block_z, impl=impl, schedule="tri")
+        return ops.focus(D, block=block, block_z=block_z, impl=impl,
+                         schedule="tri", ties=ties)
     if pass_ == "cohesion":
-        return ops.cohesion_from_weights(D, W, block=block, block_z=block_z, impl=impl)
+        return ops.cohesion_from_weights(D, W, block=block, block_z=block_z,
+                                         impl=impl, ties=ties)
     if pass_ == "cohesion_tri":
         return ops.cohesion_from_weights(D, W, block=block, block_z=block_z,
-                                         impl=impl, schedule="tri")
+                                         impl=impl, schedule="tri", ties=ties)
     if pass_ == "pald":
-        return ops.pald(D, block=block, block_z=block_z, impl=impl)
+        return ops.pald(D, block=block, block_z=block_z, impl=impl, ties=ties)
     if pass_ == "pald_tri":
-        return ops.pald_tri(D, block=block, block_z=block_z, impl=impl)
+        return ops.pald_tri(D, block=block, block_z=block_z, impl=impl,
+                            ties=ties)
     if pass_ == "pald_fused":
-        return ops.pald_fused(X, block=block, block_z=block_z, impl=impl)
+        return ops.pald_fused(X, block=block, block_z=block_z, impl=impl,
+                              ties=ties)
     raise ValueError(f"unknown pass {pass_!r} (expected one of {PASSES})")
 
 
@@ -252,13 +272,15 @@ def tune(
     seed: int = 0,
     iters: int = 3,
     d: int | None = None,
+    ties: str = "drop",
 ) -> dict:
     """Measure the candidate grid for one (n, pass, impl) cell and record the
     argmin.  Returns the record that was (or would be) cached.
 
     For ``pass_="pald_fused"`` the feature dimension ``d`` (default 8) joins
     the cache key — the fused tiles trade in-register distance compute
-    against revisit traffic, and that tradeoff moves with d."""
+    against revisit traffic, and that tradeoff moves with d.  Non-default
+    ``ties`` modes are keyed separately too (their tile bodies differ)."""
     backend = backend or _default_backend()
     impl = impl or _default_impl(backend)
     if pass_ == "pald_fused" and d is None:
@@ -270,7 +292,8 @@ def tune(
     rows = []
     for b in sorted({min(b, n) for b in blocks}):
         for bz in sorted({min(z, n) for z in blocks_z}):
-            t = time_fn(lambda: _runner(pass_, D, W, X, b, bz, impl), iters=iters)
+            t = time_fn(lambda: _runner(pass_, D, W, X, b, bz, impl, ties),
+                        iters=iters)
             rows.append({"block": b, "block_z": bz, "seconds": round(t, 6)})
     best = min(rows, key=lambda r: r["seconds"])
     record = {
@@ -281,7 +304,8 @@ def tune(
         "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
     }
     if save:
-        save_entry(backend, impl, n, _pass_key(pass_, d if pass_ == "pald_fused" else None),
+        save_entry(backend, impl, n,
+                   _pass_key(pass_, d if pass_ == "pald_fused" else None, ties),
                    record, path)
     return record
 

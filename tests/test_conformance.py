@@ -7,9 +7,13 @@ one.  The n grid deliberately includes the degenerate (n=1), minimal
 (n=2), sub-block (n=7), non-multiple (n=33) and multi-block non-multiple
 (n=130) regimes, so every padding / tiling branch is exercised.
 
-The oracle is ``pald_pairwise_reference(ties="ignore", normalize=True)``
-computed in float64; all optimized paths agree with it on tie-free data
-regardless of their internal tie convention (DESIGN.md §9).
+The oracle is ``pald_pairwise_reference(normalize=True)`` computed in
+float64; on the tie-free gaussian draws every tie mode returns identical
+results, so those cells pin the default mode only.  The TIE-HEAVY axis
+(integer distances, quantized embeddings, duplicated feature rows) runs
+every ``ties`` mode against its own oracle — the input class on which the
+paths used to disagree (DESIGN.md §9); before PR 3 the oracle only ever
+saw tie-free draws, which is how that bug class shipped.
 """
 import functools
 
@@ -19,6 +23,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import features, pald, reference
+from repro.core.ties import TIE_MODES
 
 NS = (1, 2, 7, 33, 130)
 BLOCKS = (16, 64)
@@ -103,6 +108,80 @@ def test_materialized_methods_from_features(metric):
         Cm = np.asarray(pald.from_features(jnp.asarray(X), metric=metric,
                                            method=method, block=16))
         np.testing.assert_allclose(Cm, Cf, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tie-heavy axis: integer distances, quantized embeddings, duplicated rows —
+# × every ties mode × every (method, schedule).  Inputs are integer-valued
+# so all distance arithmetic is exact in f32 and the f64 oracle sees the
+# same tie structure as the optimized paths.
+# ---------------------------------------------------------------------------
+TIE_KINDS = ("integer", "quantized", "duplicates")
+
+
+@functools.lru_cache(maxsize=None)
+def _tie_case(kind: str):
+    """(X or None, D_float64) for one tie-heavy input kind."""
+    rng = np.random.default_rng(300)
+    if kind == "integer":
+        # raw integer distance matrix (e.g. edit distances, graph hops):
+        # 5 distinct values over 153 pairs
+        A = rng.integers(1, 6, size=(18, 18))
+        D = np.triu(A, 1)
+        return None, (D + D.T).astype(np.float64)
+    if kind == "quantized":
+        # rounded embeddings: integer grid points in 3-d
+        X = rng.integers(-4, 5, size=(18, 3)).astype(np.float32)
+    else:  # duplicates: exact zero-distance ties
+        base = rng.integers(-4, 5, size=(12, 3)).astype(np.float32)
+        X = np.vstack([base, base[:6]])
+    D = np.asarray(features.cdist_reference(X, metric="sqeuclidean"),
+                   np.float64)
+    return X, D
+
+
+@functools.lru_cache(maxsize=None)
+def _tie_ref(kind: str, ties: str):
+    _, D = _tie_case(kind)
+    return reference.pald_pairwise_reference(D, ties=ties, normalize=True)
+
+
+@pytest.mark.parametrize("ties", TIE_MODES)
+@pytest.mark.parametrize("kind", TIE_KINDS)
+@pytest.mark.parametrize("method,schedule",
+                         [("dense", "dense")] + BLOCKED_PATHS)
+def test_tie_modes_match_reference(kind, ties, method, schedule):
+    _, D = _tie_case(kind)
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method=method,
+                                 schedule=schedule, block=8, ties=ties))
+    np.testing.assert_allclose(C, _tie_ref(kind, ties), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("ties", TIE_MODES)
+@pytest.mark.parametrize("metric", features.METRICS)
+@pytest.mark.parametrize("impl", ["jnp", "interpret"])
+def test_fused_tie_modes_match_reference(metric, impl, ties):
+    """Duplicated feature rows (exact zero-distance ties) through the fused
+    pipeline, all four metrics: fused tile distances must reproduce the
+    oracle's tie structure bit-for-bit."""
+    X, _ = _tie_case("duplicates")
+    D = np.asarray(features.cdist_reference(X, metric=metric), np.float64)
+    Cref = reference.pald_pairwise_reference(D, ties=ties, normalize=True)
+    C = np.asarray(pald.from_features(jnp.asarray(X), metric=metric,
+                                      block=8, block_z=8, impl=impl,
+                                      ties=ties))
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("ties", TIE_MODES)
+def test_quantized_from_features_tie_modes(ties):
+    """Quantized (rounded) embeddings via from_features: ties across
+    distinct point pairs, not just duplicates."""
+    X, D = _tie_case("quantized")
+    C = np.asarray(pald.from_features(jnp.asarray(X), metric="sqeuclidean",
+                                      block=8, block_z=8, ties=ties))
+    np.testing.assert_allclose(C, _tie_ref("quantized", ties),
+                               rtol=1e-5, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------

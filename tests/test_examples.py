@@ -1,4 +1,5 @@
 """The shipped examples must actually run (they are the public API demo)."""
+import os
 import subprocess
 import sys
 
@@ -10,7 +11,11 @@ def _run(args, timeout=480):
         [sys.executable] + args, capture_output=True, text=True,
         timeout=timeout, cwd="/root/repo",
         env={"PYTHONPATH": "/root/repo/src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # without this, jax probes ~8 minutes for an accelerator
+             # backend before falling back to CPU — more than the whole
+             # timeout budget of the example itself
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
     )
 
 

@@ -1,0 +1,225 @@
+"""Unified ``ties=`` contract: regression, properties, and the bf16 path.
+
+PR 3's bug class: on tie-heavy distances the pipeline used to return three
+different cohesion matrices for the same input depending on dispatch —
+``method="dense"`` implemented ``ties='drop'``, the tri schedules implemented
+'ignore' for cross-block pairs but 'drop' inside diagonal blocks (so they
+matched *neither* reference), and ``method="auto"`` silently picked among
+them by size.  These tests pin the unified contract:
+
+* the 12-point integer-matrix repro is a committed regression test for the
+  tri-schedule disagreement (every schedule now matches every mode's
+  reference on it);
+* ``comm_dtype=bfloat16`` manufactures ties f32 didn't have; the distributed
+  result must equal single-device PaLD on the bf16-cast matrix under the
+  same explicit ``ties=``;
+* the mode-level mass laws: 'split' conserves total mass n/2 on ANY input,
+  'ignore' conserves it for positive off-diagonal distances, 'drop' can
+  only lose mass.
+
+The guarded hypothesis strategy drawing matrices WITH ties lives in
+``test_ties_properties.py`` (own module, so its importorskip cannot take
+these deterministic regression tests down with it).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributed, features, pald, reference
+from repro.core.ties import TIE_MODES
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# the committed 12-point integer-matrix repro (ISSUE 3).  Ties abound: only
+# 5 distinct off-diagonal values for 66 pairs.  Block 8 < n = 12 gives the
+# tri schedules both diagonal-block and cross-block pair visits — the two
+# code paths whose tie semantics used to disagree.
+# ---------------------------------------------------------------------------
+def _integer_repro() -> np.ndarray:
+    rng = np.random.default_rng(42)
+    A = rng.integers(1, 6, size=(12, 12))
+    D = np.triu(A, 1)
+    return (D + D.T).astype(np.float64)
+
+
+@pytest.mark.parametrize("ties", TIE_MODES)
+@pytest.mark.parametrize("impl", ["jnp", "interpret"])
+def test_tri_schedule_integer_repro(ties, impl):
+    """Regression: the tri kernels disagreed with the ties='ignore' reference
+    they documented (max |dC| ~ 3e-2 before the shared-helper fix)."""
+    D = _integer_repro()
+    Cref = reference.pald_pairwise_reference(D, ties=ties, normalize=False)
+    C = np.asarray(ops.pald_tri(jnp.asarray(D), block=8, block_z=8,
+                                impl=impl, ties=ties))
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("ties", TIE_MODES)
+def test_integer_repro_all_paths_agree(ties):
+    """One answer per input: every dispatch returns the same matrix."""
+    D = _integer_repro()
+    Cs = [np.asarray(pald.cohesion(jnp.asarray(D), method=m, schedule=s,
+                                   block=8, ties=ties))
+          for m, s in (("dense", "dense"), ("pairwise", "dense"),
+                       ("triplet", "dense"), ("kernel", "dense"),
+                       ("kernel", "tri"))]
+    for C in Cs[1:]:
+        np.testing.assert_allclose(C, Cs[0], rtol=1e-6, atol=1e-7)
+
+
+def test_modes_actually_differ_on_ties():
+    """The repro matrix distinguishes the three modes (guards against a
+    helper refactor that silently collapses them)."""
+    D = _integer_repro()
+    C = {t: reference.pald_pairwise_reference(D, ties=t) for t in TIE_MODES}
+    assert np.abs(C["drop"] - C["ignore"]).max() > 1e-3
+    assert np.abs(C["drop"] - C["split"]).max() > 1e-3
+    assert np.abs(C["split"] - C["ignore"]).max() > 1e-3
+
+
+def test_focus_split_is_fractional():
+    """'split' weights boundary ties 0.5 in pass 1; U stays a multiple of
+    0.5 and is >= the strict count everywhere."""
+    D = _integer_repro()
+    Us = reference.local_focus_reference(D, ties="split")
+    U = reference.local_focus_reference(D, ties="drop")
+    assert np.all(Us >= U)
+    assert np.abs(Us * 2 - np.round(Us * 2)).max() == 0.0
+    assert np.abs(Us - U).max() > 0  # integer distances do produce boundary ties
+    # off-diagonal comparison only: the reference documents its diagonal as
+    # "left at 0, never used", while the vectorized pass computes the (also
+    # never used — W zeroes it) d_xx == d_xx = 0 boundary weight there
+    off = ~np.eye(len(D), dtype=bool)
+    Uops = np.asarray(ops.focus(jnp.asarray(D), block=8, block_z=8,
+                                impl="jnp", ties="split"))
+    np.testing.assert_allclose(Uops[off], Us[off], rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# mode-level mass laws (exact, on ANY input)
+# ---------------------------------------------------------------------------
+def _total_mass(D, ties):
+    return reference.pald_pairwise_reference(D, ties=ties).sum()
+
+
+def test_mass_laws_on_tied_input():
+    D = _integer_repro()
+    n = D.shape[0]
+    pairs = n * (n - 1) / 2
+    # split: every pair has u > 0 (x, y weigh >= 0.5 each) and distributes
+    # exactly 1 -> total mass == number of pairs, always
+    assert abs(_total_mass(D, "split") - pairs) < 1e-9
+    # ignore: every in-focus z awards its full 1/u to exactly one point, so
+    # mass is conserved whenever all off-diagonal distances are positive
+    assert abs(_total_mass(D, "ignore") - pairs) < 1e-9
+    # drop: tied support evaporates — strictly less mass on this input
+    assert _total_mass(D, "drop") < pairs - 1e-3
+
+
+def test_split_mass_survives_duplicates():
+    """Exact duplicates (d_xy = 0) kill strict pairs entirely ('ignore'
+    loses their mass); 'split' still distributes each pair's unit."""
+    D = _integer_repro()
+    D[0, 1] = D[1, 0] = 0.0  # points 0 and 1 are duplicates
+    n = D.shape[0]
+    pairs = n * (n - 1) / 2
+    assert abs(_total_mass(D, "split") - pairs) < 1e-9
+    assert _total_mass(D, "ignore") < pairs - 0.5
+    # and the optimized paths implement the same law
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method="kernel",
+                                 schedule="tri", block=8, ties="split",
+                                 normalize=False))
+    assert abs(C.sum() - pairs) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# validation: one contract, loudly enforced at every entry point
+# ---------------------------------------------------------------------------
+def test_unknown_ties_rejected_everywhere():
+    D = jnp.zeros((4, 4))
+    X = jnp.zeros((4, 2))
+    with pytest.raises(ValueError):
+        pald.cohesion(D, ties="round-robin")
+    with pytest.raises(ValueError):
+        pald.from_features(X, ties="round-robin")
+    with pytest.raises(ValueError):
+        ops.pald(D, ties="round-robin")
+    with pytest.raises(ValueError):
+        reference.pald_pairwise_reference(np.zeros((4, 4)), ties="round-robin")
+
+
+def test_rectangular_ignore_needs_xwins():
+    D = jnp.asarray(_integer_repro())
+    W = jnp.ones((12, 12))
+    with pytest.raises(ValueError):
+        ops.cohesion_general(D, D, D, W, impl="jnp", ties="ignore")
+
+
+# ---------------------------------------------------------------------------
+# distributed: explicit ties + the bf16 manufactured-ties contract
+# ---------------------------------------------------------------------------
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 host devices"
+)
+
+
+@needs_devices
+@pytest.mark.parametrize("ties", TIE_MODES)
+@pytest.mark.parametrize("strategy", ["allgather", "ring", "2d"])
+def test_distributed_tie_modes(ties, strategy):
+    from repro.launch import mesh as meshlib
+
+    D = _integer_repro()
+    Cref = reference.pald_pairwise_reference(D, ties=ties, normalize=True)
+    mesh = (meshlib.make_test_mesh((4, 2), ("data", "model"))
+            if strategy == "2d" else meshlib.make_test_mesh((8,), ("data",)))
+    C = np.asarray(distributed.pald_distributed(
+        D, mesh, strategy=strategy, impl="jnp", ties=ties))
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+@needs_devices
+@pytest.mark.parametrize("ties", TIE_MODES)
+def test_bf16_comm_equals_single_device_on_cast_matrix(ties):
+    """bf16 communication rounds near-equal distances into EXACT ties; with
+    the tie mode explicit, the distributed result equals single-device PaLD
+    on the bf16-cast matrix under the same ``ties=`` — it no longer depends
+    on which kernel the shard body dispatches to."""
+    from conftest import euclidean_distance_matrix
+    from repro.launch import mesh as meshlib
+
+    rng = np.random.default_rng(7)
+    D = euclidean_distance_matrix(rng.normal(size=(48, 4)))
+    Dbf = np.asarray(jnp.asarray(D, jnp.bfloat16).astype(jnp.float32),
+                     np.float64)
+    # the cast must actually manufacture ties, else this test is vacuous
+    iu = np.triu_indices(48, 1)
+    assert len(np.unique(Dbf[iu])) < len(np.unique(D[iu]))
+
+    mesh = meshlib.make_test_mesh((4, 2), ("data", "model"))
+    C = np.asarray(distributed.pald_distributed(
+        D, mesh, strategy="2d", impl="jnp", comm_dtype=jnp.bfloat16,
+        ties=ties))
+    Csingle = np.asarray(pald.cohesion(jnp.asarray(Dbf), method="dense",
+                                       ties=ties))
+    np.testing.assert_allclose(C, Csingle, rtol=1e-5, atol=1e-6)
+    Cref = reference.pald_pairwise_reference(Dbf, ties=ties, normalize=True)
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+def test_fused_quantized_embeddings_all_modes():
+    """Quantized (integer-valued) embeddings with duplicated rows: exact
+    zero-distance ties through the fused pipeline, all modes."""
+    rng = np.random.default_rng(5)
+    base = rng.integers(-3, 4, size=(10, 3)).astype(np.float32)
+    X = np.vstack([base, base[:4]])  # 4 exact duplicates
+    D = np.asarray(features.cdist_reference(X, metric="sqeuclidean"),
+                   np.float64)
+    for ties in TIE_MODES:
+        Cref = reference.pald_pairwise_reference(D, ties=ties, normalize=True)
+        C = np.asarray(pald.from_features(jnp.asarray(X), metric="sqeuclidean",
+                                          block=8, block_z=8, ties=ties))
+        np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,57 @@
+"""Hypothesis properties over matrices WITH ties (guarded, own module).
+
+The main property suite (``test_pald_properties.py``) deterministically
+jitters its draws to kill duplicates — which is exactly how the tri-schedule
+tie disagreement shipped.  This strategy draws distances from a small
+integer alphabet so ties are guaranteed by pigeonhole, and lives in its own
+module so the ``importorskip`` guard (hypothesis is an optional dependency)
+cannot take the deterministic regression tests in ``test_ties.py`` down
+with it.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import pald, reference
+from repro.core.ties import TIE_MODES
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@st.composite
+def tied_distance_matrices(draw, nmin=4, nmax=12, values=4):
+    """Symmetric integer distance matrix with positive off-diagonals drawn
+    from {1..values}: n*(n-1)/2 >= 6 pairs over <= 4 values forces ties."""
+    n = draw(st.integers(nmin, nmax))
+    flat = draw(st.lists(st.integers(1, values),
+                         min_size=n * (n - 1) // 2,
+                         max_size=n * (n - 1) // 2))
+    D = np.zeros((n, n))
+    D[np.triu_indices(n, 1)] = flat
+    return D + D.T
+
+
+@settings(max_examples=15, deadline=None)
+@given(tied_distance_matrices(), st.sampled_from(TIE_MODES))
+def test_tied_draws_match_reference(D, ties):
+    Cref = reference.pald_pairwise_reference(D, ties=ties, normalize=True)
+    Cd = np.asarray(pald.cohesion(jnp.asarray(D), method="dense", ties=ties))
+    np.testing.assert_allclose(Cd, Cref, rtol=1e-5, atol=1e-6)
+    Ct = np.asarray(pald.cohesion(jnp.asarray(D), method="kernel",
+                                  schedule="tri", block=8, ties=ties))
+    np.testing.assert_allclose(Ct, Cref, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(tied_distance_matrices())
+def test_tied_draws_mass_laws(D):
+    n = D.shape[0]
+    pairs = n * (n - 1) / 2
+    split = reference.pald_pairwise_reference(D, ties="split").sum()
+    ignore = reference.pald_pairwise_reference(D, ties="ignore").sum()
+    drop = reference.pald_pairwise_reference(D, ties="drop").sum()
+    assert abs(split - pairs) < 1e-9
+    assert abs(ignore - pairs) < 1e-9
+    assert drop <= pairs + 1e-9
