@@ -135,6 +135,106 @@ def run_ties(ns=(128, 256, 512, 1024), impl: str = "jnp",
     return rows
 
 
+def run_dispatch(ns=(256, 512), method: str = "triplet",
+                 block: int = 128, repeats: int = 3,
+                 iters: int = 50) -> list[dict]:
+    """Engine dispatch overhead (ISSUE 4 acceptance: <= 2%).
+
+    ``pald.cohesion`` = plan resolution + registry lookup + input checks +
+    the registered executor; the executor is byte-for-byte the pre-refactor
+    method-branch body, so everything before it is the refactor's added
+    cost.  Subtracting two noisy wall-clock timings of the same O(n^3)
+    compute cannot resolve a 2% budget (run-to-run swing is ~10% on shared
+    boxes), so the machinery is microbenched on its own — ``iters`` calls of
+    plan + lookup + checks, no compute — and reported relative to the
+    executor's (MIN over ``repeats`` median-of-3) time:
+
+        dispatch_overhead = dispatch_s / direct_s
+    """
+    import time as _time
+
+    from repro.core import engine, pald as _pald
+
+    rows = []
+    for n in ns:
+        D = jnp.asarray(random_distance_matrix(n))
+        b = min(block, n)
+        p = _pald.plan(D, method=method, block=b)
+        ex = engine.get_executor(p.kind, p.method, p.schedule)
+        t_direct = float("inf")
+        for _ in range(repeats):
+            t_direct = min(t_direct, time_fn(lambda: ex(D, p)))
+        def bench_machinery(**plan_kwargs):
+            # MIN over repeats, like the executor timing: the ratio must not
+            # pair one route's load-spiked measurement with the other's
+            # fastest observation
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = _time.perf_counter()
+                for _ in range(iters):
+                    pi = _pald.plan(D, **plan_kwargs)
+                    engine.get_executor(pi.kind, pi.method, pi.schedule)
+                    engine._check_input(D, pi)
+                best = min(best, (_time.perf_counter() - t0) / iters)
+            return best
+
+        t_dispatch = bench_machinery(method=method, block=b)
+        # the facade's true default path: method='auto' + block='auto' adds
+        # the method-crossover and nearest-n tuning-cache scans
+        t_dispatch_auto = bench_machinery(method="auto", block="auto")
+        rows.append({
+            "n": n,
+            "method": method,
+            "direct_s": round(t_direct, 4),
+            "dispatch_us": round(t_dispatch * 1e6, 1),
+            "dispatch_auto_us": round(t_dispatch_auto * 1e6, 1),
+            "dispatch_overhead": round(t_dispatch / t_direct, 6),
+            "dispatch_auto_overhead": round(t_dispatch_auto / t_direct, 6),
+        })
+    return rows
+
+
+def run_batched(cells=((3, 128), (3, 256), (2, 512)),
+                block: int = 64, d: int = 8) -> list[dict]:
+    """Batched (B, n, n)/(B, n, d) throughput vs the per-item loop.
+
+    The engine vmaps one executor over the batch, so the whole batch is one
+    compiled call — the serving-path shape.  One distance cell (triplet, the
+    large-n winner) and one feature cell (fused) per (B, n).
+    """
+    from repro.core import pald as _pald
+
+    rows = []
+    for B, n in cells:
+        rng = np.random.default_rng(n)
+        Db = jnp.asarray(np.stack([random_distance_matrix(n, seed=s)
+                                   for s in range(B)]))
+        Xb = jnp.asarray(rng.normal(size=(B, n, d)), jnp.float32)
+        b = min(block, n)
+        for label, batched, loop in (
+            ("triplet",
+             lambda: _pald.cohesion(Db, method="triplet", block=b),
+             lambda: [_pald.cohesion(Db[i], method="triplet", block=b)
+                      for i in range(B)]),
+            ("fused",
+             lambda: _pald.from_features(Xb, block=b, block_z=b),
+             lambda: [_pald.from_features(Xb[i], block=b, block_z=b)
+                      for i in range(B)]),
+        ):
+            t_batched = time_fn(batched)
+            t_loop = time_fn(loop)
+            rows.append({
+                "B": B,
+                "n": n,
+                "method": label,
+                "loop_s": round(t_loop, 4),
+                "batched_s": round(t_batched, 4),
+                "batched_speedup": round(t_loop / t_batched, 3),
+                "items_per_s": round(B / t_batched, 2),
+            })
+    return rows
+
+
 def main() -> None:
     emit(run(), header="table1: pairwise vs triplet")
     emit(run_kernels(), header="table1b: dense vs tri kernel schedule (jnp impl)")

@@ -8,6 +8,8 @@ Sections:
     table1  pairwise vs triplet           (bench_variants)
     table1b dense vs tri kernel schedule  (bench_variants.run_kernels)
     table1c fused features vs materialize (bench_variants.run_fused)
+    dispatch plan+execute overhead        (bench_variants.run_dispatch)
+    batched  (B,n,n) engine throughput    (bench_variants.run_batched)
     fig9+   scaling + comm model          (bench_scaling)
     sec7    text-analysis application     (bench_text_analysis)
     roofline summary of dry-run JSONs     (roofline), if present
@@ -78,6 +80,14 @@ def main() -> None:
         section("ties",
                 "ties: split/ignore tile-body overhead vs strict drop (--fast)",
                 lambda: bench_variants.run_ties(ns=(256, 512, 1024)))
+        section("dispatch",
+                "engine: plan+execute dispatch overhead vs direct call (--fast)",
+                lambda: bench_variants.run_dispatch(ns=(256, 512)))
+        section("batched",
+                "engine: batched (B,n,n)/(B,n,d) throughput vs per-item loop "
+                "(--fast)",
+                lambda: bench_variants.run_batched(
+                    cells=((3, 128), (3, 256), (2, 512))))
     else:
         section("fig3", "fig3: optimization waterfall",
                 bench_optimizations.run)
@@ -92,6 +102,13 @@ def main() -> None:
         section("ties",
                 "ties: split/ignore tile-body overhead vs strict drop",
                 bench_variants.run_ties)
+        section("dispatch",
+                "engine: plan+execute dispatch overhead vs direct call",
+                lambda: bench_variants.run_dispatch(ns=(256, 512, 1024)))
+        section("batched",
+                "engine: batched (B,n,n)/(B,n,d) throughput vs per-item loop",
+                lambda: bench_variants.run_batched(
+                    cells=((4, 256), (4, 512), (2, 1024))))
     section("scaling_measured", "fig9: measured scaling",
             bench_scaling.measured)
     section("comm_model", "comm model (n=100k analytic)",

@@ -23,6 +23,8 @@ def main() -> None:
     C = pald.cohesion(jnp.asarray(D))                 # cohesion matrix
     depths = pald.local_depths(C)                     # l_x = sum_z c_xz
     comms = analysis.communities(np.asarray(C))       # strong-tie components
+    # NB: analysis.universal_threshold assumes the NORMALIZED C (the
+    # default normalize=True above carries the 1/(n-1) factor)
 
     print(f"n={len(X)}  sum(l_x)={float(depths.sum()):.2f}  (= n/2 exactly)")
     print(f"universal threshold tau={analysis.universal_threshold(np.asarray(C)):.4f}")
@@ -35,6 +37,33 @@ def main() -> None:
         Cm = pald.cohesion(jnp.asarray(D), method=method)
         assert np.allclose(np.asarray(Cm), np.asarray(C), atol=1e-5)
     print("all four methods agree ✓")
+
+    # --- the execution plan: resolve once, run anywhere -------------------
+    # every knob (auto method, "auto" tiles, impl, tie semantics) is
+    # resolved exactly once into a frozen plan; cohesion()/from_features()
+    # are plan(...).execute(x) underneath.  explain() shows what resolved
+    # and where it came from (tuning cache hit / nearest-n / default) —
+    # the thing to paste into a perf bug report.
+    p = pald.plan(jnp.asarray(D), method="auto")
+    info = p.explain()
+    print(f"plan: method={info['method']} ({info['method_source']}), "
+          f"block={info['block']}, padded n={info['padded_n']}, "
+          f"executor={info['executor'].rsplit('.', 1)[-1]}")
+    assert np.allclose(np.asarray(p.execute(jnp.asarray(D))), np.asarray(C))
+
+    # batched serving shape: (B, n, n) -> (B, n, n) works on EVERY method
+    # (the Pallas tri pipeline included); batch= bounds how many items are
+    # vmapped per compiled call, i.e. peak memory ~ batch * n^2 floats
+    Db = jnp.stack([jnp.asarray(D)] * 4)
+    Cb4 = pald.cohesion(Db, method="kernel", schedule="tri", batch=2)
+    print(f"batched cohesion: {Db.shape} -> {Cb4.shape}")
+
+    # input validation lives at the same boundary: non-square / nonzero-diag
+    # D always errors; check=True adds finite+symmetry+nonnegativity
+    try:
+        pald.cohesion(jnp.asarray(D) + 1.0)  # broken diagonal
+    except ValueError as e:
+        print(f"caught bad input: {str(e)[:60]}...")
 
     # --- straight from features (no D matrix) -----------------------------
     # the fused pipeline computes distance tiles in-register from feature

@@ -16,6 +16,15 @@ __all__ = ["universal_threshold", "strong_ties", "communities", "top_ties"]
 
 
 def universal_threshold(C: np.ndarray) -> float:
+    """tau = mean(diag(C)) / 2 — half the mean self-cohesion.
+
+    Assumes C is the NORMALIZED cohesion matrix (``pald.cohesion`` /
+    ``from_features`` with the default ``normalize=True``, i.e. entries
+    carry the 1/(n-1) factor).  On an un-normalized C every entry — diagonal
+    and off-diagonal alike — scales by (n-1), so the *partition* into strong
+    and weak ties is unchanged, but the returned tau is on the un-normalized
+    scale and must not be compared against normalized cohesion values.
+    """
     return float(np.mean(np.diag(C))) / 2.0
 
 
@@ -30,7 +39,14 @@ def strong_ties(C: np.ndarray, threshold: float | None = None) -> np.ndarray:
 
 
 def communities(C: np.ndarray, threshold: float | None = None) -> list[list[int]]:
-    """Connected components of the strong-tie graph (union-find)."""
+    """Connected components of the strong-tie graph (union-find).
+
+    Deterministic output order: components sorted by size (largest first),
+    equal sizes broken by smallest member index; members within a component
+    are in increasing index order.  Sorting by size alone would leave
+    equal-size communities in union-find-root order — an artifact of edge
+    iteration, not of the data.
+    """
     S = strong_ties(C, threshold)
     n = S.shape[0]
     parent = list(range(n))
@@ -48,7 +64,7 @@ def communities(C: np.ndarray, threshold: float | None = None) -> list[list[int]
     groups: dict[int, list[int]] = {}
     for i in range(n):
         groups.setdefault(find(i), []).append(i)
-    return sorted(groups.values(), key=len, reverse=True)
+    return sorted(groups.values(), key=lambda g: (-len(g), g[0]))
 
 
 def top_ties(C: np.ndarray, x: int, k: int = 10) -> list[tuple[int, float]]:

@@ -38,8 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.kernels import ops as kops
-
+from . import engine as _engine
 from .ties import DEFAULT_TIES, index_xwins as _xwins_rows, validate_ties
 
 # jax.shard_map is top-level only from jax>=0.5; fall back to the
@@ -77,21 +76,18 @@ def _weights_rows(U_rows: jnp.ndarray, row_offset: jnp.ndarray, n_valid) -> jnp.
 # ---------------------------------------------------------------------------
 # 1-D strategies: D row-sharded over a single (flattened) axis
 # ---------------------------------------------------------------------------
-def _allgather_body(Dloc, *, axis, n_valid, impl, ties=DEFAULT_TIES,
-                    block="auto", block_z="auto"):
+def _allgather_body(Dloc, *, axis, n_valid, plan):
     m = Dloc.shape[0]
     Dall = jax.lax.all_gather(Dloc, axis, tiled=True)          # (n, n)
     off = jax.lax.axis_index(axis) * m
-    U = kops.focus_general(Dloc, Dall, Dloc, impl=impl, ties=ties,
-                           block=block, block_z=block_z)       # (m, n)
+    U = plan.focus_general(Dloc, Dall, Dloc)                   # (m, n)
     W = _weights_rows(U, off, n_valid)
-    xw = _xwins_rows(off, m, 0, Dall.shape[0]) if ties == "ignore" else None
-    return kops.cohesion_general(Dloc, Dall, Dloc, W, impl=impl, ties=ties,
-                                 xwins=xw, block=block, block_z=block_z)
+    xw = (_xwins_rows(off, m, 0, Dall.shape[0])
+          if plan.ties == "ignore" else None)
+    return plan.cohesion_general(Dloc, Dall, Dloc, W, xwins=xw)
 
 
-def _ring_body(Dloc, *, axis, p, n_valid, impl, ties=DEFAULT_TIES,
-               block="auto", block_z="auto"):
+def _ring_body(Dloc, *, axis, p, n_valid, plan):
     m, n = Dloc.shape
     fwd = [(j, (j + 1) % p) for j in range(p)]
     r = jax.lax.axis_index(axis)
@@ -106,8 +102,7 @@ def _ring_body(Dloc, *, axis, p, n_valid, impl, ties=DEFAULT_TIES,
         nxt = jax.lax.ppermute(blk, axis, fwd)                  # comm ...
         off = owner_cols(s)
         Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
-        Ublk = kops.focus_general(Dloc, blk, Dxy, impl=impl, ties=ties,
-                                  block=block, block_z=block_z)  # ... overlaps compute
+        Ublk = plan.focus_general(Dloc, blk, Dxy)               # ... overlaps compute
         U = jax.lax.dynamic_update_slice(U, Ublk, (0, off))
         return nxt, U
 
@@ -123,10 +118,8 @@ def _ring_body(Dloc, *, axis, p, n_valid, impl, ties=DEFAULT_TIES,
         off = owner_cols(s)
         Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
         Wxy = jax.lax.dynamic_slice(W, (0, off), (m, m))
-        xw = _xwins_rows(r * m, m, off, m) if ties == "ignore" else None
-        C = C + kops.cohesion_general(Dloc, blk, Dxy, Wxy, impl=impl,
-                                      ties=ties, xwins=xw,
-                                      block=block, block_z=block_z)
+        xw = _xwins_rows(r * m, m, off, m) if plan.ties == "ignore" else None
+        C = C + plan.cohesion_general(Dloc, blk, Dxy, Wxy, xwins=xw)
         return nxt, C
 
     _, C = jax.lax.fori_loop(
@@ -146,8 +139,7 @@ def _ring_body(Dloc, *, axis, p, n_valid, impl, ties=DEFAULT_TIES,
 # which every metric maps to a finite distance, so masking by global index
 # is what keeps padded points out of real foci.
 # ---------------------------------------------------------------------------
-def _feat_allgather_body(Xloc, *, axis, metric, n_valid, impl,
-                         ties=DEFAULT_TIES, block="auto", block_z="auto"):
+def _feat_allgather_body(Xloc, *, axis, metric, n_valid, plan):
     from .features import masked_dist_tile
 
     m = Xloc.shape[0]
@@ -159,16 +151,13 @@ def _feat_allgather_body(Xloc, *, axis, metric, n_valid, impl,
     off = jax.lax.axis_index(axis) * m
     Dall = masked_dist_tile(Xall, Xall, metric, 0, 0, nv)        # (n, n) local
     Dloc = jax.lax.dynamic_slice(Dall, (off, 0), (m, n))         # own rows
-    U = kops.focus_general(Dloc, Dall, Dloc, impl=impl, ties=ties,
-                           block=block, block_z=block_z)
+    U = plan.focus_general(Dloc, Dall, Dloc)
     W = _weights_rows(U, off, n_valid)
-    xw = _xwins_rows(off, m, 0, n) if ties == "ignore" else None
-    return kops.cohesion_general(Dloc, Dall, Dloc, W, impl=impl, ties=ties,
-                                 xwins=xw, block=block, block_z=block_z)
+    xw = _xwins_rows(off, m, 0, n) if plan.ties == "ignore" else None
+    return plan.cohesion_general(Dloc, Dall, Dloc, W, xwins=xw)
 
 
-def _feat_ring_body(Xloc, *, axis, p, metric, n_valid, impl,
-                    ties=DEFAULT_TIES, block="auto", block_z="auto"):
+def _feat_ring_body(Xloc, *, axis, p, metric, n_valid, plan):
     from .features import masked_dist_tile
 
     m = Xloc.shape[0]
@@ -191,8 +180,7 @@ def _feat_ring_body(Xloc, *, axis, p, metric, n_valid, impl,
         off = owner_off(s)
         Dblk = masked_dist_tile(xblk, Xall, metric, off, 0, nv)  # recomputed
         Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
-        Ublk = kops.focus_general(Dloc, Dblk, Dxy, impl=impl, ties=ties,
-                                  block=block, block_z=block_z)
+        Ublk = plan.focus_general(Dloc, Dblk, Dxy)
         U = jax.lax.dynamic_update_slice(U, Ublk, (0, off))
         return nxt, U
 
@@ -209,10 +197,8 @@ def _feat_ring_body(Xloc, *, axis, p, metric, n_valid, impl,
         Dblk = masked_dist_tile(xblk, Xall, metric, off, 0, nv)
         Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
         Wxy = jax.lax.dynamic_slice(W, (0, off), (m, m))
-        xw = _xwins_rows(r * m, m, off, m) if ties == "ignore" else None
-        C = C + kops.cohesion_general(Dloc, Dblk, Dxy, Wxy, impl=impl,
-                                      ties=ties, xwins=xw,
-                                      block=block, block_z=block_z)
+        xw = _xwins_rows(r * m, m, off, m) if plan.ties == "ignore" else None
+        C = C + plan.cohesion_general(Dloc, Dblk, Dxy, Wxy, xwins=xw)
         return nxt, C
 
     _, C = jax.lax.fori_loop(
@@ -224,8 +210,8 @@ def _feat_ring_body(Xloc, *, axis, p, metric, n_valid, impl,
 # ---------------------------------------------------------------------------
 # 2-D strategy (comm-optimal), optionally streaming over the pod axis
 # ---------------------------------------------------------------------------
-def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, impl, mesh_shape,
-             ties=DEFAULT_TIES, block="auto", block_z="auto"):
+def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, mesh_shape,
+             plan):
     mr, mc = Dblk.shape
     gathered_rows = tuple(a for a in row_axes if a != stream_axis)
     # row index offset of this device's X block within the global ordering
@@ -265,8 +251,7 @@ def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, impl, mesh_shape
         nxt = blk if stream_axis is None else jax.lax.ppermute(blk, stream_axis, fwd)
         zoff = slab_row_offset(s)
         dxz = jax.lax.dynamic_slice(Grow, (0, zoff), (mr, slab_rows))
-        U = U + kops.focus_general(dxz, blk.T, Dblk, impl=impl, ties=ties,
-                                   block=block, block_z=block_z)
+        U = U + plan.focus_general(dxz, blk.T, Dblk)
         return nxt, U
 
     _, U = jax.lax.fori_loop(0, nsteps, f_step, (slab, jnp.zeros((mr, mc), jnp.float32)))
@@ -283,10 +268,8 @@ def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, impl, mesh_shape
         dxy = jax.lax.dynamic_slice(Grow, (0, yoff), (mr, slab_rows))
         w = jax.lax.dynamic_slice(Wrow, (0, yoff), (mr, slab_rows))
         xw = (_xwins_rows(roff, mr, yoff, slab_rows)
-              if ties == "ignore" else None)
-        C = C + kops.cohesion_general(Dblk, blk, dxy, w, impl=impl,
-                                      ties=ties, xwins=xw,
-                                      block=block, block_z=block_z)
+              if plan.ties == "ignore" else None)
+        C = C + plan.cohesion_general(Dblk, blk, dxy, w, xwins=xw)
         return nxt, C
 
     _, C = jax.lax.fori_loop(0, nsteps, c_step, (slab, jnp.zeros((mr, mc), jnp.float32)))
@@ -368,29 +351,24 @@ def pald_distributed(
     Dp = Dp.at[jnp.arange(m), jnp.arange(m)].set(0.0)
     n_valid = n0 if m != n0 else None
 
-    # resolve "auto" tiles once at dispatch (trace) time against the
-    # per-device row extent; `repro.kernels.ops` clamps them to each call's
-    # actual rectangle.
-    if block == "auto" or block_z == "auto":
-        from repro.tuning import autotune as _tuner
-
-        m_dev = m // (p if strategy in ("allgather", "ring") else pr)
-        rb, rbz = _tuner.resolve_blocks(max(m_dev, 1), "cohesion", impl=impl)
-        block = rb if block == "auto" else block
-        block_z = rbz if block_z == "auto" else block_z
-    block, block_z = int(block), int(block_z)
+    # resolve every per-device knob (tiles via the tuning cache, impl, ties)
+    # exactly once at dispatch (trace) time, keyed on the per-device row
+    # extent; the shard bodies consume the frozen plan instead of re-threading
+    # four loose kwargs.  `repro.kernels.ops` still clamps the tiles to each
+    # call's actual rectangle.
+    m_dev = m // (p if strategy in ("allgather", "ring") else pr)
+    local_plan = _engine.plan_local(m_dev, impl=impl, ties=ties,
+                                    block=block, block_z=block_z)
 
     mesh_shape = sizes
     if strategy == "allgather":
         body = functools.partial(
-            _allgather_body, axis=flat_axes, n_valid=n_valid, impl=impl,
-            ties=ties, block=block, block_z=block_z
+            _allgather_body, axis=flat_axes, n_valid=n_valid, plan=local_plan
         )
         out_spec = P(flat_axes, None)
     elif strategy == "ring":
         body = functools.partial(
-            _ring_body, axis=flat_axes, p=p, n_valid=n_valid, impl=impl,
-            ties=ties, block=block, block_z=block_z
+            _ring_body, axis=flat_axes, p=p, n_valid=n_valid, plan=local_plan
         )
         out_spec = P(flat_axes, None)
     elif strategy == "2d":
@@ -400,11 +378,8 @@ def pald_distributed(
             col_axis=col_axis,
             stream_axis="pod" if pod_stream else None,
             n_valid=n_valid,
-            impl=impl,
             mesh_shape=mesh_shape,
-            ties=ties,
-            block=block,
-            block_z=block_z,
+            plan=local_plan,
         )
         out_spec = P(tuple(row_axes), col_axis)
     else:
@@ -465,25 +440,18 @@ def pald_distributed_from_features(
     Xp = jnp.pad(X, ((0, m - n0), (0, 0)))
     n_valid = n0 if m != n0 else None
 
-    if block == "auto" or block_z == "auto":
-        from repro.tuning import autotune as _tuner
-
-        rb, rbz = _tuner.resolve_blocks(max(m // p, 1), "cohesion", impl=impl)
-        block = rb if block == "auto" else block
-        block_z = rbz if block_z == "auto" else block_z
-    block, block_z = int(block), int(block_z)
+    local_plan = _engine.plan_local(m // p, impl=impl, ties=ties,
+                                    block=block, block_z=block_z)
 
     if strategy == "allgather":
         body = functools.partial(
             _feat_allgather_body, axis=axis_names, metric=metric,
-            n_valid=n_valid, impl=impl, ties=ties,
-            block=block, block_z=block_z,
+            n_valid=n_valid, plan=local_plan,
         )
     else:
         body = functools.partial(
             _feat_ring_body, axis=axis_names, p=p, metric=metric,
-            n_valid=n_valid, impl=impl, ties=ties,
-            block=block, block_z=block_z,
+            n_valid=n_valid, plan=local_plan,
         )
     fn = jax.jit(
         shard_map_compat(body, mesh=mesh, in_specs=P(axis_names, None),

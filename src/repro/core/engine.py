@@ -1,0 +1,584 @@
+"""Execution-plan engine: resolve once, run anywhere.
+
+The paper's speedups come from picking the right variant per problem size
+(blocked pairwise vs. block-symmetric triplet vs. tuned kernel tiles), but
+that choice used to be re-derived in four places: ``core/pald.py`` branched
+on method, every ``kernels/ops`` entry point re-resolved blocks/impl/padding,
+``core/features.py`` had its own batch layer, and ``core/distributed.py``
+re-threaded impl+ties into every shard body.  This module centralizes ALL of
+that (DESIGN.md §11):
+
+``plan(x, kind=...) -> PaldPlan``
+    Performs every resolution exactly once — auto-method via the tuning
+    cache, ``block="auto"`` via ``tuning.resolve_blocks``, impl defaults per
+    pipeline, knob validation (``schedule="tri"`` off-kernel, ``block_z`` on
+    a non-kernel path, ``z_chunk`` off-dense, ...), and input shape/value
+    checks — and returns a frozen, reusable plan.
+
+``PaldPlan.execute(x)``
+    The single dispatch path: looks the resolved ``(kind, method, schedule)``
+    up in the EXECUTOR REGISTRY and runs it.  Batched input (``(B, n, n)``
+    distances or ``(B, n, d)`` features) is handled here, once, for every
+    method — chunked ``jax.vmap`` bounded by the plan's ``batch=`` knob —
+    so the Pallas tri pipeline batches exactly like the dense jnp paths.
+
+``register_executor(kind, method, schedule)``
+    How ``core/pairwise``, ``core/triplet`` and ``kernels/ops`` contribute
+    their callables; alternative backends (a partitioned-kNN local depth, a
+    generalized-PaLD variant) plug in the same way without touching the
+    facades.
+
+``PaldPlan.explain()``
+    The resolved dict — method/tiles with cache provenance, padded shape,
+    estimated VMEM per grid step — for debuggability and bench provenance.
+
+``pald.cohesion`` / ``pald.from_features`` are thin facades over
+``plan(...).execute(x)``; they contain no method branching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.tuning import autotune as _tuner
+
+from .ties import DEFAULT_TIES, validate_ties
+
+__all__ = [
+    "PaldPlan",
+    "plan",
+    "plan_local",
+    "register_executor",
+    "get_executor",
+    "available_executors",
+    "pad_distance_matrix",
+]
+
+DISTANCE_METHODS = ("dense", "pairwise", "triplet", "kernel")
+FEATURE_METHODS = ("fused",) + DISTANCE_METHODS
+SCHEDULES = ("dense", "tri")
+
+# methods whose executors take an impl= knob (kernel pipelines); the pure-jnp
+# blocked paths have exactly one implementation, so an explicit impl request
+# there is a caller error, not something to drop silently
+_IMPL_METHODS = ("kernel", "fused")
+
+
+def pad_distance_matrix(
+    D: jnp.ndarray, block: int, *, dtype=jnp.float32
+) -> tuple[jnp.ndarray, int]:
+    """Pad D to a multiple of ``block`` with +inf off-diagonal, 0 diagonal.
+
+    Padded points are infinitely far from everything: they never enter a real
+    pair's local focus (inf < d is false) and every real z is inside a padded
+    pair's focus but contributes to padded rows of C only.
+
+    The input is cast to ``dtype`` (float32 by default) *here*, before any
+    blocked arithmetic — this is the pipeline's one explicit downcast point;
+    nothing downstream changes precision again.
+    """
+    D = jnp.asarray(D, dtype)
+    n = D.shape[0]
+    m = -(-n // block) * block
+    if m == n:
+        return D, n
+    P = jnp.full((m, m), jnp.inf, D.dtype)
+    P = P.at[:n, :n].set(D)
+    P = P.at[jnp.arange(m), jnp.arange(m)].set(0.0)
+    return P, n
+
+
+# ---------------------------------------------------------------------------
+# executor registry
+# ---------------------------------------------------------------------------
+_EXECUTORS: dict[tuple[str, str, str], Callable] = {}
+
+
+def register_executor(kind: str, method: str, schedule: str = "dense"):
+    """Decorator: contribute the executor for one (kind, method, schedule)
+    cell.  The callable receives ``(x, plan)`` with ``x`` one UNBATCHED item
+    (a (n, n) distance matrix or (n, d) feature matrix, any float dtype) and
+    owns the full per-item pipeline: cast, pad, compute, slice, normalize.
+    It must be traceable (plan.execute vmaps it for batched input)."""
+
+    def deco(fn):
+        _EXECUTORS[(kind, method, schedule)] = fn
+        return fn
+
+    return deco
+
+
+def _load_contributors() -> None:
+    """Import the modules that register the default executors.  Deferred so
+    importing the engine (or core.pald) stays cheap and cycle-free; the
+    kernels package in particular is only pulled in on first kernel use."""
+    from repro.core import pairwise, triplet  # noqa: F401
+    from repro.kernels import ops  # noqa: F401
+
+
+def get_executor(kind: str, method: str, schedule: str) -> Callable:
+    key = (kind, method, schedule)
+    if key not in _EXECUTORS:
+        _load_contributors()
+    if key not in _EXECUTORS:
+        raise KeyError(
+            f"no executor registered for {key}; known cells: "
+            f"{sorted(_EXECUTORS)}"
+        )
+    return _EXECUTORS[key]
+
+
+def available_executors() -> list[tuple[str, str, str]]:
+    """All registered (kind, method, schedule) cells (contributors loaded)."""
+    _load_contributors()
+    return sorted(_EXECUTORS)
+
+
+# ---------------------------------------------------------------------------
+# the plan
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PaldPlan:
+    """Frozen result of one resolution pass: everything an executor needs.
+
+    Build with ``plan(...)`` (or ``plan_local`` for distributed shard
+    bodies); never mutate — a plan is safe to reuse across calls and across
+    threads for any input matching its item shape.
+    """
+
+    kind: str                     # "distance" | "features"
+    method: str                   # resolved (never "auto")
+    schedule: str                 # "dense" | "tri"
+    impl: str | None              # kernel/fused impl; None = one-impl path
+    block: int | None             # None for the un-blocked dense method
+    block_z: int | None           # z tile; None = executor default
+    z_chunk: int | None           # dense-method z streaming chunk
+    ties: str
+    metric: str | None            # features kind only
+    normalize: bool
+    batch: int | None             # vmap chunk bound for batched input
+    check: bool                   # deep input validation on execute
+    n: int                        # per-item point count
+    d: int | None                 # feature dimension (features kind)
+    # provenance (explain)
+    method_source: str = "explicit"
+    block_source: str = "explicit"
+
+    # -- execution ---------------------------------------------------------
+    def execute(self, x) -> jnp.ndarray:
+        """Run the planned pipeline on ``x`` — one item or a batch.
+
+        ``x``: (n, n) / (B, n, n) distances, or (n, d) / (B, n, d) features,
+        matching the plan's item shape.  Batching is uniform across every
+        (method, schedule) cell: items are vmapped in chunks of ``batch=``
+        (None = whole batch in one compiled call), which bounds peak memory
+        at ``batch * n^2`` floats regardless of the underlying executor.
+        """
+        x = jnp.asarray(x)
+        _check_input(x, self)
+        fn = get_executor(self.kind, self.method, self.schedule)
+        if x.ndim == 2:
+            return fn(x, self)
+        B = x.shape[0]
+        single = lambda xi: fn(xi, self)  # noqa: E731
+        if self.batch is None or self.batch >= B:
+            return jax.vmap(single)(x)
+        chunks = [jax.vmap(single)(x[s:s + self.batch])
+                  for s in range(0, B, self.batch)]
+        return jnp.concatenate(chunks, axis=0)
+
+    # -- distributed shard-body primitives ---------------------------------
+    # The shard bodies in core/distributed.py call the rectangular kernel
+    # forms per step; threading the plan instead of four loose knobs keeps
+    # the resolution in one place (and in explain()).
+    def focus_general(self, DXZ, DYZ, DXY) -> jnp.ndarray:
+        from repro.kernels import ops as _kops
+
+        return _kops.focus_general(DXZ, DYZ, DXY, block=self.block,
+                                   block_z=self.block_z, impl=self.impl,
+                                   ties=self.ties)
+
+    def cohesion_general(self, DXZ, DYZ, DXY, W, *, xwins=None) -> jnp.ndarray:
+        from repro.kernels import ops as _kops
+
+        return _kops.cohesion_general(DXZ, DYZ, DXY, W, block=self.block,
+                                      block_z=self.block_z, impl=self.impl,
+                                      ties=self.ties, xwins=xwins)
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def padded_n(self) -> int:
+        """Per-item extent after the engine-level pad to a block multiple
+        (the kernel pipelines may pad further for their z tiles)."""
+        if self.block is None:
+            return self.n
+        return -(-self.n // self.block) * self.block
+
+    def explain(self) -> dict[str, Any]:
+        """The resolved plan as a plain dict: what will run, which tiles,
+        where they came from (cache hit / nearest-n / default), the padded
+        shape, and a rough VMEM-per-grid-step estimate.  Stable keys — bench
+        provenance rows and debug logs rely on them."""
+        fn = get_executor(self.kind, self.method, self.schedule)
+        return {
+            "kind": self.kind,
+            "method": self.method,
+            "schedule": self.schedule,
+            "impl": self.impl,
+            "block": self.block,
+            "block_z": self.block_z,
+            "z_chunk": self.z_chunk,
+            "ties": self.ties,
+            "metric": self.metric,
+            "normalize": self.normalize,
+            "batch": self.batch,
+            "n": self.n,
+            "d": self.d,
+            "padded_n": self.padded_n,
+            "padded_shape": ((self.padded_n, self.padded_n)
+                             if self.kind == "distance"
+                             else (self.padded_n, self.d)),
+            "method_source": self.method_source,
+            "block_source": self.block_source,
+            "executor": f"{fn.__module__}.{fn.__qualname__}",
+            "est_vmem_bytes_per_step": _est_vmem_per_step(self),
+        }
+
+
+def _est_vmem_per_step(p: PaldPlan) -> int | None:
+    """Rough f32 bytes resident per grid step (per fori step for the jnp
+    paths).  A planning aid — tile residency of the dominant pass-2 body,
+    not a promise about XLA's actual allocation."""
+    if p.block is None:  # un-blocked dense: (n, n, z_chunk) comparison cube
+        zc = p.z_chunk or p.n
+        return 4 * p.n * p.n * zc
+    b = p.block
+    m = p.padded_n
+    if p.method in ("pairwise", "triplet"):
+        # (b, b, n) support cube + two (b, n) row slabs
+        return 4 * (b * b * m + 2 * b * m)
+    bz = p.block_z or min(512, m)
+    d_ = p.d or 0
+    tiles = 2 * b * bz + 2 * b * b + b * bz        # dxz, dyz, dxy, w, out
+    if p.method == "fused":
+        tiles += 2 * b * max(d_, 1)                # feature tiles
+    if p.schedule == "tri":
+        tiles += m * bz                            # resident Cy column slab
+    return 4 * tiles
+
+
+# ---------------------------------------------------------------------------
+# input validation
+# ---------------------------------------------------------------------------
+def _item_shape_checks(x, p: PaldPlan) -> None:
+    if x.ndim not in (2, 3):
+        what = ("D must be (n, n) or (B, n, n)" if p.kind == "distance"
+                else "X must be (n, d) or (B, n, d)")
+        raise ValueError(f"{what}, got shape {tuple(x.shape)}")
+    if p.kind == "distance" and x.shape[-1] != x.shape[-2]:
+        raise ValueError(
+            f"distance matrix must be square, got shape {tuple(x.shape)}")
+    expect = (p.n, p.n) if p.kind == "distance" else (p.n, p.d)
+    if tuple(x.shape[-2:]) != expect:
+        raise ValueError(
+            f"input item shape {tuple(x.shape[-2:])} does not match the "
+            f"plan's {expect}; build a new plan for a new problem size")
+
+
+def _check_input(x, p: PaldPlan) -> None:
+    """Cheap always-on checks plus the opt-in deep ones (``check=True``).
+
+    Value checks only run on concrete arrays — under jit/vmap tracing the
+    values don't exist yet, and shape checks are all that can (and need to)
+    fire there.  Note the flip side: an eager call on a device array that a
+    previous async computation is still producing must SYNC on the O(n)
+    diagonal fetch before dispatching, costing host-side overlap (never
+    correctness).  A latency-critical pipeline that wants fully async
+    dispatch should wrap the call in ``jax.jit`` — traced execution skips
+    the value checks by construction.
+    """
+    _item_shape_checks(x, p)
+    if isinstance(x, jax.core.Tracer) or p.kind != "distance":
+        if p.check and not isinstance(x, jax.core.Tracer):
+            if not bool(jnp.isfinite(x).all()):
+                raise ValueError("features contain non-finite entries "
+                                 "(nan/inf); PaLD needs finite coordinates")
+        return
+    # always-on O(n) check: a nonzero (or nan) diagonal means the input is
+    # not a self-distance matrix — every padding and focus invariant assumes
+    # d(x, x) == 0
+    diag = np.asarray(jnp.diagonal(x, axis1=-2, axis2=-1))
+    if not np.all(diag == 0.0):
+        raise ValueError(
+            "distance matrix diagonal must be exactly 0 "
+            f"(got max |diag| = {np.nanmax(np.abs(diag))!r}; nan counts as "
+            "nonzero); pass distances with d(x, x) = 0")
+    if not p.check:
+        return
+    xv = np.asarray(x)
+    if not np.isfinite(xv).all():
+        raise ValueError("distance matrix contains non-finite entries "
+                         "(nan/inf)")
+    if (xv < 0).any():
+        raise ValueError("distance matrix contains negative entries; "
+                         "PaLD consumes the order of nonnegative distances")
+    if not np.array_equal(xv, np.swapaxes(xv, -1, -2)):
+        raise ValueError("distance matrix is not symmetric (exact equality "
+                         "is required: PaLD compares d_xz against d_zx's "
+                         "role symmetrically)")
+
+
+# ---------------------------------------------------------------------------
+# resolution
+# ---------------------------------------------------------------------------
+def _shape_of(x, n, d, kind):
+    if x is not None:
+        shape = tuple(np.shape(x))
+        if len(shape) not in (2, 3):
+            what = ("D must be (n, n) or (B, n, n)" if kind == "distance"
+                    else "X must be (n, d) or (B, n, d)")
+            raise ValueError(f"{what}, got shape {shape}")
+        item = shape[-2:]
+        if kind == "distance":
+            if item[0] != item[1]:
+                raise ValueError(
+                    f"distance matrix must be square, got shape {shape}")
+            return item[0], None
+        return item[0], item[1]
+    if n is None:
+        raise ValueError("plan() needs either an input array or n=")
+    if kind == "features" and d is None:
+        raise ValueError("plan(kind='features') needs d= when no array "
+                         "is given")
+    return int(n), None if kind == "distance" else int(d)
+
+
+def _default_kernel_impl(method: str) -> str:
+    """Backend-default impl per pipeline (mirrors kernels/ops): the fused
+    path prefers the vectorized jnp fallback off-TPU, the D-consuming kernel
+    pipeline prefers bit-faithful interpret execution."""
+    on_tpu = jax.default_backend() == "tpu"
+    if on_tpu:
+        return "pallas"
+    return "jnp" if method == "fused" else "interpret"
+
+
+def plan(
+    x=None,
+    *,
+    kind: str = "distance",
+    n: int | None = None,
+    d: int | None = None,
+    method: str = "auto",
+    schedule: str = "dense",
+    block: int | str | None = None,
+    block_z: int | str | None = None,
+    z_chunk: int | None = None,
+    metric: str | None = None,
+    normalize: bool = True,
+    impl: str | None = None,
+    ties: str = DEFAULT_TIES,
+    batch: int | None = None,
+    check: bool = False,
+) -> PaldPlan:
+    """Resolve every knob exactly once and return a frozen ``PaldPlan``.
+
+    ``x`` (or ``n=``/``d=``) fixes the per-item problem size the resolution
+    is keyed on.  ``kind`` selects the input contract: ``"distance"`` (a
+    precomputed (n, n) matrix — ``pald.cohesion``) or ``"features"`` ((n, d)
+    vectors — ``pald.from_features``).  All remaining knobs have the same
+    meaning as on the facades; validation rejects contradictions instead of
+    silently dropping knobs (``schedule='tri'`` off the kernel pipeline,
+    ``block_z``/``impl`` on a path that has no such degree of freedom,
+    ``z_chunk`` off the dense method, unknown metrics/methods/tie modes).
+
+    One deliberate exception: ``block=`` is accepted AND ignored by
+    ``method='dense'`` (the un-blocked path has no tile), so the common
+    "sweep every method with one shared block argument" idiom stays valid —
+    ``explain()['block']`` is ``None`` there, making the drop visible.
+    """
+    validate_ties(ties)
+    if kind not in ("distance", "features"):
+        raise ValueError(f"unknown kind {kind!r} "
+                         "(expected 'distance' or 'features')")
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    n, d = _shape_of(x, n, d, kind)
+    if batch is not None and batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+
+    if kind == "features":
+        from .features import METRICS
+
+        metric = metric or "euclidean"
+        if metric not in METRICS:
+            raise ValueError(
+                f"unknown metric {metric!r} (expected one of {METRICS})")
+        allowed = FEATURE_METHODS
+    else:
+        if metric is not None:
+            raise ValueError("metric= only applies to kind='features' "
+                             "(a distance matrix already fixed it)")
+        allowed = DISTANCE_METHODS
+
+    # -- method ------------------------------------------------------------
+    # Path-specific knobs PIN the auto method (the way an explicit tri
+    # schedule always has) instead of letting the tuning cache decide and
+    # then validating against its answer — otherwise whether a knob is legal
+    # would flip with the input size and with another machine's cache state.
+    method_source = "explicit"
+    if method == "auto":
+        if schedule == "tri":
+            # an explicit tri request pins the kernel pipeline (the only
+            # method with a tri schedule)
+            method, method_source = "kernel", "schedule=tri"
+        elif kind == "features":
+            method, method_source = "fused", "default"
+        elif z_chunk is not None:
+            if impl is not None or block_z not in (None, "auto"):
+                raise ValueError(
+                    "z_chunk= pins method='dense' but impl=/block_z= pin "
+                    "the kernel pipeline; pass an explicit method")
+            method, method_source = "dense", "z_chunk"
+        elif impl is not None or block_z not in (None, "auto"):
+            # an explicit z TILE (or impl) is a kernel-pipeline request;
+            # block_z="auto" is not — "auto" means "pick for me", which on a
+            # path without a z tile legitimately resolves to "no tile", so
+            # it must not override the measured method crossover
+            method, method_source = "kernel", "impl/block_z"
+        else:
+            method, method_source = _tuner.method_for_ex(n)
+    if method not in allowed:
+        raise ValueError(f"unknown method {method!r} for kind={kind!r} "
+                         f"(expected one of {('auto',) + allowed})")
+    if schedule == "tri" and method != "kernel":
+        raise ValueError(
+            f"schedule='tri' is only available for method='kernel', "
+            f"got {method!r}")
+
+    # -- impl --------------------------------------------------------------
+    if method in _IMPL_METHODS:
+        impl = impl or _default_kernel_impl(method)
+    elif impl is not None:
+        # silently dropping an explicit request would let a caller believe
+        # it exercised a path it didn't
+        raise ValueError(
+            f"impl={impl!r} is only configurable for the kernel/fused "
+            f"pipelines; method={method!r} has exactly one implementation")
+
+    # -- per-method knob surface -------------------------------------------
+    if z_chunk is not None and method != "dense":
+        raise ValueError("z_chunk= only applies to method='dense' "
+                         "(the blocked paths stream z by block_z tiles)")
+    if method == "dense":
+        if block_z not in (None, "auto"):
+            raise ValueError("block_z= does not apply to method='dense' "
+                             "(it has no z tile; use z_chunk=)")
+        return PaldPlan(
+            kind=kind, method=method, schedule=schedule, impl=None,
+            block=None, block_z=None, z_chunk=z_chunk, ties=ties,
+            metric=metric, normalize=normalize, batch=batch, check=check,
+            n=n, d=d, method_source=method_source, block_source="n/a",
+        )
+    if method in ("pairwise", "triplet"):
+        if block_z not in (None, "auto"):
+            raise ValueError(
+                f"block_z= does not apply to method={method!r} (the "
+                "pure-jnp blocked paths stream the full z axis per block "
+                "pair)")
+        # block_z="auto" resolves to "no z tile" here — a valid resolution,
+        # not a dropped knob; explain() shows block_z=None with no z
+        # provenance, and no tuning-cache scan is wasted on it
+        block_z = None
+
+    # -- tiles -------------------------------------------------------------
+    block_source = "explicit"
+    if block is None:
+        block = "auto" if method == "fused" else 128
+        block_source = "default"
+    if method == "fused":
+        # one authority for the fused tile defaults, shared with
+        # kernels/ops.pald_fused (tuning.resolve_fused_tiles) — the plan can
+        # never drift from what the kernel entry point would compute
+        was_auto = block == "auto"
+        block, block_z, src = _tuner.resolve_fused_tiles(
+            n, d, block, block_z, impl=impl, ties=ties)
+        if src is not None:
+            # provenance tracks the *block* tile; an explicit block with an
+            # auto block_z must not claim the user's tile came from the cache
+            block_source = src if was_auto else f"{block_source}; z:{src}"
+    elif block == "auto" or block_z == "auto":
+        pass_ = "pald_tri" if schedule == "tri" else "pald"
+        rb, rbz, src = _tuner.resolve_blocks_ex(n, pass_, ties=ties)
+        block_source = src if block == "auto" else f"{block_source}; z:{src}"
+        block = rb if block == "auto" else block
+        if method == "kernel" and block_z in (None, "auto"):
+            block_z = rbz
+    block = int(block)
+    block_z = None if block_z is None else int(block_z)
+
+    return PaldPlan(
+        kind=kind, method=method, schedule=schedule, impl=impl,
+        block=block, block_z=block_z, z_chunk=None, ties=ties,
+        metric=metric, normalize=normalize, batch=batch, check=check,
+        n=n, d=d, method_source=method_source, block_source=block_source,
+    )
+
+
+def plan_local(
+    n: int,
+    *,
+    impl: str | None = None,
+    ties: str = DEFAULT_TIES,
+    block: int | str = "auto",
+    block_z: int | str = "auto",
+) -> PaldPlan:
+    """Plan for the rectangular per-device bodies of ``core/distributed``.
+
+    ``n`` is the per-device row extent the tiles are keyed on.  The shard
+    bodies consume the plan through ``plan.focus_general`` /
+    ``plan.cohesion_general``; ``impl=None`` keeps the kernels' own backend
+    default (jnp off-TPU — the vectorized fallback, which is what the
+    collectives overlap against).
+    """
+    validate_ties(ties)
+    block_source = "explicit"
+    if block == "auto" or block_z == "auto":
+        rb, rbz, src = _tuner.resolve_blocks_ex(max(int(n), 1), "cohesion",
+                                                impl=impl)
+        block = rb if block == "auto" else block
+        block_z = rbz if block_z == "auto" else block_z
+        block_source = src
+    return PaldPlan(
+        kind="distance", method="kernel", schedule="dense", impl=impl,
+        block=int(block), block_z=int(block_z), z_chunk=None, ties=ties,
+        metric=None, normalize=False, batch=None, check=False,
+        n=max(int(n), 1), d=None, method_source="shard-body",
+        block_source=block_source,
+    )
+
+
+# ---------------------------------------------------------------------------
+# built-in executors: the features->materialized-D compositions.  The fused
+# path and all distance paths are contributed by their home modules; these
+# cells are pure composition, so they live with the registry.
+# ---------------------------------------------------------------------------
+def _materialize_then(schedule: str):
+    def _exec(X, p: PaldPlan):
+        from .features import cdist_reference
+
+        D = cdist_reference(X, metric=p.metric)
+        return get_executor("distance", p.method, schedule)(D, p)
+
+    return _exec
+
+
+for _m in DISTANCE_METHODS:
+    register_executor("features", _m, "dense")(_materialize_then("dense"))
+register_executor("features", "kernel", "tri")(_materialize_then("tri"))
+del _m

@@ -10,21 +10,16 @@ front-end:
     Plain-jnp pairwise distances for the supported metrics.  The oracle the
     fused kernels are tested against, and the "materialize-then-PaLD" path.
 
-``from_features(X, metric=..., method=..., batch=...)``
-    The public entry point.  ``method="fused"`` (the default resolution of
-    ``method="auto"``) computes each distance *tile* on the fly from
-    ``(block, d)`` feature tiles inside the kernel, so ``D`` never hits HBM
-    (DESIGN.md §10).  Any other method materializes ``D`` once via
-    ``cdist_reference`` and delegates to ``pald.cohesion``.
-
-    A 3-D input ``X: (B, n, d)`` is treated as a batch and mapped with
-    ``jax.vmap`` to ``C: (B, n, n)``; ``batch=`` bounds how many batch
-    elements are vmapped per compiled call.
+The public entry point lives in ``repro.core.pald.from_features`` — a thin
+facade over the execution-plan engine (``core/engine.py``), which resolves
+``method="fused"`` (distance tiles computed on the fly from ``(block, d)``
+feature tiles inside the kernel, so ``D`` never hits HBM — DESIGN.md §10)
+vs. the materialize-once paths, and owns the batched ``(B, n, d)`` layer.
 
 Supported metrics (see ``METRICS``): ``sqeuclidean``, ``euclidean``,
 ``cosine``, ``manhattan``.  All distance computation is float32; inputs of
-any float dtype are cast exactly once at this API boundary (float64 inputs
-are explicitly, not silently, downcast).
+any float dtype are cast exactly once at the executor boundary (float64
+inputs are explicitly, not silently, downcast).
 
 Tile-level building blocks (``dist_tile``, ``masked_dist_tile``) are shared
 by the Pallas kernels (``repro.kernels.pald_fused``), the jnp fused
@@ -34,13 +29,10 @@ comparable distances.
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
-
-from .ties import DEFAULT_TIES, validate_ties
 
 METRICS = ("sqeuclidean", "euclidean", "cosine", "manhattan")
 
@@ -53,7 +45,6 @@ __all__ = [
     "cdist_reference",
     "dist_tile",
     "masked_dist_tile",
-    "from_features",
     "pad_features",
 ]
 
@@ -161,100 +152,6 @@ def pad_features(X: jnp.ndarray, quantum: int) -> tuple[jnp.ndarray, int]:
     return jnp.pad(X, ((0, m - n), (0, 0))), n
 
 
-# ---------------------------------------------------------------------------
-# public entry point
-# ---------------------------------------------------------------------------
-def _from_features_single(
-    X: jnp.ndarray,
-    *,
-    metric: Metric,
-    method: str,
-    block,
-    block_z,
-    schedule: str,
-    normalize: bool,
-    impl: str | None,
-    ties: str,
-) -> jnp.ndarray:
-    from . import pald as _pald  # deferred: pald re-exports from_features
-
-    if method == "auto":
-        method = "fused"
-    if method == "fused":
-        from repro.kernels import ops as _kops
-
-        return _kops.pald_fused(
-            X, metric=metric, block=block, block_z=block_z,
-            normalize=normalize, impl=impl, ties=ties,
-        )
-    if impl is not None:
-        # pald.cohesion picks impl per backend itself; silently dropping an
-        # explicit request would let a test believe it exercised a path it
-        # didn't
-        raise ValueError(
-            f"impl={impl!r} is only configurable for method='fused'; "
-            f"method={method!r} delegates to pald.cohesion")
-    # materialize-then-PaLD: one cdist, then the requested cohesion path
-    D = cdist_reference(X, metric=metric)
-    kz = {} if block_z is None else {"block_z": block_z}
-    return _pald.cohesion(D, method=method, block=block, schedule=schedule,
-                          normalize=normalize, ties=ties, **kz)
-
-
-def from_features(
-    X: jnp.ndarray,
-    *,
-    metric: Metric = "euclidean",
-    method: str = "auto",
-    batch: int | None = None,
-    block: int | str = "auto",
-    block_z: int | str | None = None,
-    schedule: str = "dense",
-    normalize: bool = True,
-    impl: str | None = None,
-    ties: str = DEFAULT_TIES,
-) -> jnp.ndarray:
-    """PaLD cohesion straight from feature vectors.
-
-    X: (n, d) -> C: (n, n), or batched (B, n, d) -> (B, n, n).
-
-    method:  "fused" (default via "auto") runs the fused kernel pipeline —
-             distance tiles are computed in-register from feature tiles and
-             the full D matrix is never materialized in HBM;
-             "dense" / "pairwise" / "triplet" / "kernel" materialize D once
-             (``cdist_reference``) and delegate to ``pald.cohesion``.
-    metric:  one of ``METRICS`` (sqeuclidean, euclidean, cosine, manhattan).
-    batch:   for 3-D X, how many batch elements to vmap per compiled call
-             (None = the whole batch at once); bounds peak memory at
-             ``batch * n^2`` floats.
-    block:   kernel tile; "auto" consults the tuning cache under the
-             ``pald_fused`` pass, keyed by (n, d).
-    ties:    'drop' (default) / 'split' / 'ignore' — what an exact distance
-             tie means, identically on every method (see ``pald.cohesion``).
-             Quantized or duplicated feature rows produce exact ties in
-             every metric, so this matters for real embedding data;
-             'split' is the theoretically-faithful choice there.
-
-    Inputs of any float dtype are cast to float32 here, at the API
-    boundary — float64 feature matrices are downcast explicitly (PaLD only
-    consumes the *order* of distances, which f32 preserves for any
-    non-pathological data) and the result dtype is always float32.
-    """
-    validate_ties(ties)
-    X = jnp.asarray(X, jnp.float32)
-    if X.ndim not in (2, 3):
-        raise ValueError(f"X must be (n, d) or (B, n, d), got shape {X.shape}")
-    single = functools.partial(
-        _from_features_single, metric=metric, method=method, block=block,
-        block_z=block_z, schedule=schedule, normalize=normalize, impl=impl,
-        ties=ties,
-    )
-    if X.ndim == 2:
-        return single(X)
-    B = X.shape[0]
-    if batch is None or batch >= B:
-        return jax.vmap(single)(X)
-    if batch < 1:
-        raise ValueError(f"batch must be >= 1, got {batch}")
-    chunks = [jax.vmap(single)(X[s:s + batch]) for s in range(0, B, batch)]
-    return jnp.concatenate(chunks, axis=0)
+# The public entry point (``pald.from_features``) and the batched layer live
+# in ``repro.core.pald`` / ``repro.core.engine``; this module provides the
+# metric tile primitives every executor shares.

@@ -167,3 +167,31 @@ def pald_blocked(
     if normalize:
         C = C / (n - 1)
     return C
+
+
+# ---------------------------------------------------------------------------
+# engine executors: this module's contributions to the dispatch registry.
+# Each receives one unbatched item plus the resolved plan and owns the full
+# per-item pipeline (cast, pad, compute, slice, normalize) — see
+# core/engine.py.
+# ---------------------------------------------------------------------------
+from . import engine as _engine  # noqa: E402  (registry import, cycle-free)
+
+
+@_engine.register_executor("distance", "dense", "dense")
+def _exec_dense(D, plan):
+    D = jnp.asarray(D, jnp.float32)  # explicit boundary cast
+    n = D.shape[0]
+    C = pald_dense(D, z_chunk=plan.z_chunk, normalize=False, ties=plan.ties)
+    return C / max(n - 1, 1) if plan.normalize else C
+
+
+@_engine.register_executor("distance", "pairwise", "dense")
+def _exec_pairwise(D, plan):
+    Dp, n0 = _engine.pad_distance_matrix(D, plan.block)  # f32 boundary cast
+    nv = jnp.asarray(n0) if Dp.shape[0] != n0 else None
+    # normalization applies to the unpadded extent only, so the padded size
+    # never leaks into the 1/(n-1) factor
+    C = pald_blocked(Dp, block=plan.block, n_valid=nv, ties=plan.ties)
+    C = C[:n0, :n0]
+    return C / max(n0 - 1, 1) if plan.normalize else C

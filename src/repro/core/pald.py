@@ -1,4 +1,4 @@
-"""Public PaLD API.
+"""Public PaLD API — thin facades over the execution-plan engine.
 
     from repro.core import pald
     C = pald.cohesion(D)                      # auto method selection
@@ -8,21 +8,35 @@
     C = pald.cohesion(D, method="kernel",
                       schedule="tri")         # upper-tri kernel pipeline
     C = pald.cohesion(D, method="dense")      # un-blocked vectorized baseline
+    C = pald.cohesion(Db)                     # batched: (B, n, n) -> (B, n, n)
     C = pald.from_features(X, metric="cosine")  # fused, from feature vectors
+
+    p = pald.plan(D, method="auto")           # resolve once ...
+    C = p.execute(D)                          # ... run (and re-run) anywhere
+    p.explain()                               # what resolved, and why
+
+Every knob — auto method via the tuning cache, ``block="auto"`` tiles, impl
+defaults, tie semantics, batching — is resolved exactly once by
+``pald.plan`` (``core/engine.py``); ``cohesion`` and ``from_features`` are
+``plan(...).execute(x)`` with no method branching of their own.  The
+executor registry maps each resolved ``(kind, method, schedule)`` cell to a
+callable contributed by ``core/pairwise``, ``core/triplet`` and
+``kernels/ops`` (DESIGN.md §11).
 
 Inputs of any size are padded internally to a block multiple with +inf
 distances; padded points land outside every local focus and contribute
 nothing, so the result restricted to the original n x n is exact.
 
-``method="auto"`` consults the persistent tuning cache (measured crossovers
-recorded by ``benchmarks/hillclimb.py methods``) and falls back to the seed
-heuristic on a cold cache.  ``block="auto"`` resolves the tile through the
-same cache (``repro.tuning``).
-
-Dtype contract: every entry point casts its input to float32 exactly once,
-here at the API boundary (float64 inputs are downcast explicitly — PaLD
+Dtype contract: every entry point casts its input to float32 exactly once
+at the executor boundary (float64 inputs are downcast explicitly — PaLD
 depends only on the order of distances, which f32 preserves away from ulp
 collisions) and always returns float32.
+
+Input contract: the plan layer rejects non-square or wrong-rank ``D`` and
+any matrix whose diagonal is not exactly zero (cheap, always on);
+``check=True`` additionally verifies finiteness, symmetry and
+nonnegativity — worth it at the boundary of a serving path, skipped by
+default on the hot path.
 """
 from __future__ import annotations
 
@@ -30,54 +44,46 @@ from typing import Literal
 
 import jax.numpy as jnp
 
-from repro.tuning import autotune as _tuner
-
-from . import pairwise as _pairwise
-from . import triplet as _triplet
+from .engine import PaldPlan, pad_distance_matrix  # noqa: F401
+from .engine import plan as _engine_plan
 from .ties import DEFAULT_TIES, TIE_MODES, validate_ties  # noqa: F401
 
 Method = Literal["auto", "dense", "pairwise", "triplet", "kernel"]
 Ties = Literal["drop", "split", "ignore"]
 
-__all__ = ["cohesion", "from_features", "local_depths", "pad_distance_matrix"]
+__all__ = ["cohesion", "from_features", "plan", "local_depths",
+           "pad_distance_matrix", "PaldPlan"]
 
 
-def pad_distance_matrix(
-    D: jnp.ndarray, block: int, *, dtype=jnp.float32
-) -> tuple[jnp.ndarray, int]:
-    """Pad D to a multiple of ``block`` with +inf off-diagonal, 0 diagonal.
+def plan(x=None, **kwargs) -> PaldPlan:
+    """Resolve a PaLD execution plan once; see ``repro.core.engine.plan``.
 
-    Padded points are infinitely far from everything: they never enter a real
-    pair's local focus (inf < d is false) and every real z is inside a padded
-    pair's focus but contributes to padded rows of C only.
-
-    The input is cast to ``dtype`` (float32 by default) *here*, before any
-    blocked arithmetic — this is the pipeline's one explicit downcast point;
-    nothing downstream changes precision again.
+    ``pald.plan(D)`` plans the distance pipeline, ``pald.plan(X,
+    kind="features", metric=...)`` the feature pipeline; shape-only planning
+    (``pald.plan(n=4096)``) works too, for inspection before data exists.
     """
-    D = jnp.asarray(D, dtype)
-    n = D.shape[0]
-    m = -(-n // block) * block
-    if m == n:
-        return D, n
-    P = jnp.full((m, m), jnp.inf, D.dtype)
-    P = P.at[:n, :n].set(D)
-    P = P.at[jnp.arange(m), jnp.arange(m)].set(0.0)
-    return P, n
+    return _engine_plan(x, **kwargs)
 
 
 def cohesion(
     D: jnp.ndarray,
     *,
     method: Method = "auto",
-    block: int | str = 128,
+    block: int | str | None = None,
     block_z: int | str | None = None,
     schedule: str = "dense",
     normalize: bool = True,
     z_chunk: int | None = None,
+    impl: str | None = None,
     ties: Ties = DEFAULT_TIES,
+    batch: int | None = None,
+    check: bool = False,
 ) -> jnp.ndarray:
     """Compute the PaLD cohesion matrix C from a distance matrix D.
+
+    D: (n, n) -> C: (n, n), or batched (B, n, n) -> (B, n, n) — every
+    method and schedule accepts the batched form; ``batch=`` bounds how many
+    items are vmapped per compiled call.
 
     Methods: "dense" (un-blocked vectorized), "pairwise" (blocked Fig. 5),
     "triplet" (block-symmetric), "kernel" (Pallas pipeline; with
@@ -85,7 +91,9 @@ def cohesion(
     — half the block-pair visits), or "auto" (measured crossover).  Feature
     input (no D yet) goes through ``pald.from_features`` instead, whose
     fused method never materializes D at all.
-    ``block="auto"`` resolves tiles via the tuning cache.
+    ``block="auto"`` resolves tiles via the tuning cache (default 128 for
+    the blocked paths); ``impl`` selects the kernel backend ('pallas',
+    'interpret', 'jnp' — kernel/fused paths only).
 
     ``ties`` fixes what an exact distance tie means — the SAME answer on
     every method/schedule/impl (DESIGN.md §9):
@@ -98,62 +106,71 @@ def cohesion(
       'ignore' Algorithm 1's sequential if/else: the higher-index point of
               the pair takes tied support.
     On tie-free distances all three modes return identical results.
-    """
-    validate_ties(ties)
-    n = D.shape[0]
-    if schedule not in ("dense", "tri"):
-        raise ValueError(f"unknown schedule {schedule!r}")
-    if method == "auto":
-        # an explicit tri request pins the kernel pipeline (the only method
-        # with a tri schedule); otherwise use the measured crossover
-        method = "kernel" if schedule == "tri" else _tuner.method_for(n)
-    if method not in ("dense", "pairwise", "triplet", "kernel"):
-        raise ValueError(f"unknown method {method!r}")
-    if schedule == "tri" and method != "kernel":
-        raise ValueError(
-            f"schedule='tri' is only available for method='kernel', got {method!r}"
-        )
-    if method == "dense":
-        D = jnp.asarray(D, jnp.float32)  # explicit boundary cast (see module doc)
-        C = _pairwise.pald_dense(D, z_chunk=z_chunk, normalize=False, ties=ties)
-        return C / max(n - 1, 1) if normalize else C
-    if block == "auto":
-        pass_ = {"pairwise": "pald", "triplet": "pald",
-                 "kernel": "pald_tri" if schedule == "tri" else "pald"}[method]
-        block, bz_auto = _tuner.resolve_blocks(n, pass_, ties=ties)
-        if block_z is None:
-            block_z = bz_auto
-    block = int(block)
-    Dp, n0 = pad_distance_matrix(D, block)  # casts to f32 (boundary cast)
-    nv = jnp.asarray(n0) if Dp.shape[0] != n0 else None
-    # normalization is applied here (not inside the blocked fns) so the padded
-    # size never leaks into the 1/(n-1) factor.
-    if method == "pairwise":
-        C = _pairwise.pald_blocked(Dp, block=block, n_valid=nv, ties=ties)
-    elif method == "triplet":
-        C = _triplet.pald_block_symmetric(Dp, block=block, n_valid=nv, ties=ties)
-    elif method == "kernel":
-        from repro.kernels import ops as _kops
 
-        kz = {} if block_z is None else {"block_z": block_z}
-        C = _kops.pald(Dp, block=block, n_valid=nv, schedule=schedule,
-                       ties=ties, **kz)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    C = C[:n0, :n0]
-    if normalize:
-        # max(., 1): n=1 has no pairs and an all-zero C; dividing by zero
-        # would turn that into nan
-        C = C / max(n0 - 1, 1)
-    return C
+    ``check=True`` adds deep input validation (finite, symmetric,
+    nonnegative) on top of the always-on shape/zero-diagonal checks.
+    """
+    p = _engine_plan(
+        D, kind="distance", method=method, schedule=schedule, block=block,
+        block_z=block_z, z_chunk=z_chunk, normalize=normalize, impl=impl,
+        ties=ties, batch=batch, check=check,
+    )
+    return p.execute(D)
+
+
+def from_features(
+    X: jnp.ndarray,
+    *,
+    metric: str = "euclidean",
+    method: str = "auto",
+    batch: int | None = None,
+    block: int | str = "auto",
+    block_z: int | str | None = None,
+    schedule: str = "dense",
+    normalize: bool = True,
+    impl: str | None = None,
+    ties: str = DEFAULT_TIES,
+    check: bool = False,
+) -> jnp.ndarray:
+    """PaLD cohesion straight from feature vectors.
+
+    X: (n, d) -> C: (n, n), or batched (B, n, d) -> (B, n, n).
+
+    method:  "fused" (default via "auto") runs the fused kernel pipeline —
+             distance tiles are computed in-register from feature tiles and
+             the full D matrix is never materialized in HBM;
+             "dense" / "pairwise" / "triplet" / "kernel" materialize D once
+             (``cdist_reference``) and run the corresponding distance
+             executor.
+    metric:  one of ``features.METRICS`` (sqeuclidean, euclidean, cosine,
+             manhattan).
+    batch:   for 3-D X, how many batch elements to vmap per compiled call
+             (None = the whole batch at once); bounds peak memory at
+             ``batch * n^2`` floats.
+    block:   kernel tile; "auto" consults the tuning cache under the
+             ``pald_fused`` pass, keyed by (n, d).
+    impl:    kernel backend, kernel/fused methods only ('pallas',
+             'interpret', 'jnp'); the pure-jnp blocked paths reject an
+             explicit impl rather than silently dropping it.
+    ties:    'drop' (default) / 'split' / 'ignore' — what an exact distance
+             tie means, identically on every method (see ``pald.cohesion``).
+             Quantized or duplicated feature rows produce exact ties in
+             every metric, so this matters for real embedding data;
+             'split' is the theoretically-faithful choice there.
+
+    Inputs of any float dtype are cast to float32 at the executor boundary —
+    float64 feature matrices are downcast explicitly (PaLD only consumes the
+    *order* of distances, which f32 preserves for any non-pathological data)
+    and the result dtype is always float32.
+    """
+    p = _engine_plan(
+        X, kind="features", metric=metric, method=method, schedule=schedule,
+        block=block, block_z=block_z, normalize=normalize, impl=impl,
+        ties=ties, batch=batch, check=check,
+    )
+    return p.execute(X)
 
 
 def local_depths(C: jnp.ndarray) -> jnp.ndarray:
     """l_x = sum_z c_xz (cohesion is *partitioned* local depth)."""
-    return jnp.sum(C, axis=1)
-
-
-# feature-space entry point (fused kernels; see core/features.py).  Imported
-# last: features defers its own pald import to call time, so the cycle is
-# never executed at module-load time.
-from .features import from_features  # noqa: E402,F401
+    return jnp.sum(C, axis=-1)

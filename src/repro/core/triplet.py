@@ -105,3 +105,19 @@ def pald_block_symmetric(
     if normalize:
         C = C / (n - 1)
     return C
+
+
+# ---------------------------------------------------------------------------
+# engine executor: the block-symmetric cell of the dispatch registry
+# (core/engine.py); one unbatched item in, the full per-item pipeline here.
+# ---------------------------------------------------------------------------
+from . import engine as _engine  # noqa: E402  (registry import, cycle-free)
+
+
+@_engine.register_executor("distance", "triplet", "dense")
+def _exec_triplet(D, plan):
+    Dp, n0 = _engine.pad_distance_matrix(D, plan.block)  # f32 boundary cast
+    nv = jnp.asarray(n0) if Dp.shape[0] != n0 else None
+    C = pald_block_symmetric(Dp, block=plan.block, n_valid=nv, ties=plan.ties)
+    C = C[:n0, :n0]
+    return C / max(n0 - 1, 1) if plan.normalize else C

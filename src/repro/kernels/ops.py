@@ -538,14 +538,8 @@ def pald_fused(
     impl = impl or ("pallas" if on_tpu() else "jnp")
     X = jnp.asarray(X, jnp.float32)
     n, d = X.shape
-    if block_z is None:
-        block_z = "auto" if block == "auto" else 512
-    if block == "auto" or block_z == "auto":
-        rb, rbz = _tuner.resolve_blocks(n, "pald_fused", impl=impl, d=d,
-                                        ties=ties)
-        block = rb if block == "auto" else block
-        block_z = rbz if block_z == "auto" else block_z
-    block, block_z = min(int(block), n), min(int(block_z), n)
+    block, block_z, _ = _tuner.resolve_fused_tiles(n, d, block, block_z,
+                                                   impl=impl, ties=ties)
     if impl == "jnp":
         Xp, n0 = pad_features(X, block)
         U = _focus_fused_jnp(Xp, metric=metric, block=block, block_z=block_z,
@@ -621,3 +615,39 @@ def pald_tri(
     if normalize:
         C = C / (n_in - 1)
     return C
+
+
+# --------------------------------------------------------------------------
+# engine executors: the kernel-pipeline cells of the dispatch registry
+# (repro.core.engine).  Each receives one unbatched item plus the resolved
+# plan; the plan's tiles/impl/ties were fixed once at plan() time, so these
+# bodies never consult the tuning cache themselves.
+# --------------------------------------------------------------------------
+from repro.core import engine as _engine  # noqa: E402  (registry import)
+
+
+def _kernel_exec(D, plan, pipeline):
+    Dp, n0 = _engine.pad_distance_matrix(D, plan.block)  # f32 boundary cast
+    nv = jnp.asarray(n0) if Dp.shape[0] != n0 else None
+    kz = {} if plan.block_z is None else {"block_z": plan.block_z}
+    C = pipeline(Dp, block=plan.block, n_valid=nv, impl=plan.impl,
+                 ties=plan.ties, **kz)
+    C = C[:n0, :n0]
+    return C / max(n0 - 1, 1) if plan.normalize else C
+
+
+@_engine.register_executor("distance", "kernel", "dense")
+def _exec_kernel_dense(D, plan):
+    return _kernel_exec(D, plan, pald)
+
+
+@_engine.register_executor("distance", "kernel", "tri")
+def _exec_kernel_tri(D, plan):
+    return _kernel_exec(D, plan, pald_tri)
+
+
+@_engine.register_executor("features", "fused", "dense")
+def _exec_fused(X, plan):
+    return pald_fused(X, metric=plan.metric, block=plan.block,
+                      block_z=plan.block_z, normalize=plan.normalize,
+                      impl=plan.impl, ties=plan.ties)

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import distributed
+from repro.core import distributed, engine
 from repro.core.distributed import shard_map_compat
 from repro.launch import hlo_analysis, mesh as meshlib
 
@@ -53,19 +53,24 @@ def run_cell(n: int, multi_pod: bool, strategy: str, *, dtype=jnp.float32,
 
     if strategy in ("allgather", "ring"):
         spec_in = P(tuple(axis_names), None)
+        lp = engine.plan_local(max(n // chips, 1), impl="jnp")
         body = functools.partial(
             distributed._allgather_body if strategy == "allgather"
             else distributed._ring_body,
-            axis=tuple(axis_names), n_valid=None, impl="jnp",
+            axis=tuple(axis_names), n_valid=None, plan=lp,
             **({"p": chips} if strategy == "ring" else {}),
         )
         out_spec = spec_in
     else:
         spec_in = P(row_axes, col_axis)
+        pr = 1
+        for a in row_axes:
+            pr *= sizes[a]
+        lp = engine.plan_local(max(n // pr, 1), impl="jnp")
         body = functools.partial(
             distributed._2d_body, row_axes=row_axes, col_axis=col_axis,
             stream_axis="pod" if (strategy == "2d+stream" and multi_pod) else None,
-            n_valid=None, impl="jnp", mesh_shape=sizes,
+            n_valid=None, mesh_shape=sizes, plan=lp,
         )
         out_spec = spec_in
 
@@ -80,6 +85,8 @@ def run_cell(n: int, multi_pod: bool, strategy: str, *, dtype=jnp.float32,
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax<0.5 returns [dict], newer dict
+        cost = cost[0] if cost else {}
     coll = hlo_analysis.collective_stats(compiled.as_text())
     mem = compiled.memory_analysis()
 

@@ -149,7 +149,7 @@ def _default_blocks(n: int, pass_: str) -> tuple[int, int]:
     return max(block, 1), max(block_z, 1)
 
 
-def resolve_blocks(
+def resolve_blocks_ex(
     n: int,
     pass_: str,
     *,
@@ -158,8 +158,12 @@ def resolve_blocks(
     path: str | None = None,
     d: int | None = None,
     ties: str | None = None,
-) -> tuple[int, int]:
-    """(block, block_z) for one pass at size n: cached, nearest, or default.
+) -> tuple[int, int, str]:
+    """(block, block_z, source) for one pass at size n.
+
+    ``source`` records the provenance for ``PaldPlan.explain()``:
+    ``"cache:<key>"`` exact hit, ``"nearest:<key>@n=<kn>"`` nearest-n hit
+    (log-space), ``"default"`` size-aware heuristic (cold cache).
 
     ``d`` (feature dimension) extends the key for the fused pass — tiles
     tuned at one d are not reused for another.  ``ties`` extends the key for
@@ -172,13 +176,71 @@ def resolve_blocks(
     keyed = _pass_key(pass_, d, ties)
     for pk in dict.fromkeys((keyed, base)):  # tie-mode cell first, then strict
         rec = lookup(backend, impl, n, pk, path)
+        source = f"cache:{_key(backend, impl, n, pk)}"
         if rec is None:
             near = lookup_nearest(backend, impl, n, pk, path)
-            rec = near[1] if near else None
+            if near:
+                rec = near[1]
+                source = f"nearest:{_key(backend, impl, near[0], pk)}"
         if rec and "block" in rec:
             return (max(min(int(rec["block"]), n), 1),
-                    max(min(int(rec.get("block_z", rec["block"])), n), 1))
-    return _default_blocks(n, pass_)
+                    max(min(int(rec.get("block_z", rec["block"])), n), 1),
+                    source)
+    b, bz = _default_blocks(n, pass_)
+    return b, bz, "default"
+
+
+def resolve_blocks(
+    n: int,
+    pass_: str,
+    *,
+    impl: str | None = None,
+    backend: str | None = None,
+    path: str | None = None,
+    d: int | None = None,
+    ties: str | None = None,
+) -> tuple[int, int]:
+    """(block, block_z) for one pass at size n: cached, nearest, or default.
+
+    Thin wrapper over ``resolve_blocks_ex`` (which also reports the
+    provenance of the answer)."""
+    b, bz, _ = resolve_blocks_ex(n, pass_, impl=impl, backend=backend,
+                                 path=path, d=d, ties=ties)
+    return b, bz
+
+
+def resolve_fused_tiles(
+    n: int,
+    d: int,
+    block,
+    block_z,
+    *,
+    impl: str | None = None,
+    backend: str | None = None,
+    ties: str | None = None,
+    path: str | None = None,
+) -> tuple[int, int, str | None]:
+    """The fused pipeline's tile defaults, in exactly one place.
+
+    ``block_z=None`` rides along with ``block`` ("auto" together, else the
+    512 legacy default); "auto" resolves under the ``pald_fused`` pass keyed
+    by (n, d, ties); both tiles clamp to n.  Shared by ``engine.plan`` and
+    ``kernels.ops.pald_fused`` so the resolved plan can never drift from
+    what the kernel entry point would have computed itself.
+
+    Returns (block, block_z, source) — ``source`` is the cache provenance
+    string when any "auto" was resolved, else None (fully explicit tiles).
+    """
+    if block_z is None:
+        block_z = "auto" if block == "auto" else 512
+    source = None
+    if block == "auto" or block_z == "auto":
+        rb, rbz, source = resolve_blocks_ex(
+            n, "pald_fused", impl=impl, backend=backend, d=d, ties=ties,
+            path=path)
+        block = rb if block == "auto" else block
+        block_z = rbz if block_z == "auto" else block_z
+    return min(int(block), n), min(int(block_z), n), source
 
 
 # ---------------------------------------------------------------------------
@@ -346,15 +408,26 @@ def tune_methods(
     return out
 
 
+def method_for_ex(n: int, *, backend: str | None = None,
+                  path: str | None = None) -> tuple[str, str]:
+    """(method, source) at size n — the provenance-reporting sibling of
+    ``method_for`` (source: "cache:<key>" / "nearest:<key>@..." /
+    "heuristic")."""
+    backend = backend or _default_backend()
+    rec = lookup(backend, _METHOD_IMPL, n, "method", path)
+    source = f"cache:{_key(backend, _METHOD_IMPL, n, 'method')}"
+    if rec is None:
+        near = lookup_nearest(backend, _METHOD_IMPL, n, "method", path)
+        if near:
+            rec = near[1]
+            source = f"nearest:{_key(backend, _METHOD_IMPL, near[0], 'method')}"
+    if rec and rec.get("method"):
+        return str(rec["method"]), source
+    return ("dense" if n <= 256 else "triplet"), "heuristic"
+
+
 def method_for(n: int, *, backend: str | None = None,
                path: str | None = None) -> str:
     """Best cohesion method at size n: measured crossover if available,
     else the seed heuristic (dense small, triplet large)."""
-    backend = backend or _default_backend()
-    rec = lookup(backend, _METHOD_IMPL, n, "method", path)
-    if rec is None:
-        near = lookup_nearest(backend, _METHOD_IMPL, n, "method", path)
-        rec = near[1] if near else None
-    if rec and rec.get("method"):
-        return str(rec["method"])
-    return "dense" if n <= 256 else "triplet"
+    return method_for_ex(n, backend=backend, path=path)[0]

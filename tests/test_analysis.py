@@ -96,3 +96,40 @@ def test_top_ties_clamps_k(two_cluster_C):
 def test_top_ties_k_zero_and_negative(two_cluster_C):
     assert analysis.top_ties(two_cluster_C, 3, k=0) == []
     assert analysis.top_ties(two_cluster_C, 3, k=-2) == []
+
+
+# ---------------------------------------------------------------------------
+# communities determinism: equal-size components must come back in a
+# data-defined order (smallest member first), not union-find-root order
+# ---------------------------------------------------------------------------
+def test_communities_equal_size_tiebreak_deterministic():
+    # three 2-cliques with identical tie strength: sizes all equal, so the
+    # order is entirely the tie-break's job
+    n = 6
+    C = np.full((n, n), 0.01)
+    np.fill_diagonal(C, 1.0)
+    for a, b in [(4, 5), (0, 1), (2, 3)]:
+        C[a, b] = C[b, a] = 0.9
+    comms = analysis.communities(C)
+    assert comms == [[0, 1], [2, 3], [4, 5]]
+    # permutation-relabelled input gives the relabelled (re-sorted) answer,
+    # independent of the edge iteration order union-find saw
+    perm = np.array([5, 3, 1, 0, 4, 2])
+    Cp = C[np.ix_(perm, perm)]
+    comms_p = analysis.communities(Cp)
+    inv = {int(p): i for i, p in enumerate(perm)}
+    expect = sorted(
+        (sorted(inv[m] for m in c) for c in comms), key=lambda g: (-len(g), g[0])
+    )
+    assert comms_p == expect
+
+
+def test_communities_size_still_dominates_tiebreak():
+    # a 3-clique containing the LARGEST index must still sort before a
+    # 2-clique containing index 0
+    n = 5
+    C = np.full((n, n), 0.01)
+    np.fill_diagonal(C, 1.0)
+    for a, b in [(2, 3), (3, 4), (2, 4), (0, 1)]:
+        C[a, b] = C[b, a] = 0.9
+    assert analysis.communities(C) == [[2, 3, 4], [0, 1]]

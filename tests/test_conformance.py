@@ -61,11 +61,17 @@ def test_dense_matches_reference(n):
 @pytest.mark.parametrize("block", BLOCKS)
 @pytest.mark.parametrize("method,schedule", BLOCKED_PATHS)
 def test_blocked_paths_match_reference(method, schedule, block, n):
+    """Each cell vs the oracle — and bitwise vs the explicit engine route
+    (one resolution, one executor: ``plan(...).execute`` IS the facade)."""
     _, D, Cref = _case(n)
     C = np.asarray(pald.cohesion(jnp.asarray(D), method=method,
                                  schedule=schedule, block=block))
     assert C.dtype == np.float32
     np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+    p = pald.plan(jnp.asarray(D), method=method, schedule=schedule,
+                  block=block)
+    Cp = np.asarray(p.execute(jnp.asarray(D)))
+    np.testing.assert_array_equal(C, Cp)  # bitwise: same plan, same executor
 
 
 # ---------------------------------------------------------------------------
@@ -185,8 +191,53 @@ def test_quantized_from_features_tie_modes(ties):
 
 
 # ---------------------------------------------------------------------------
-# batched API: (B, n, d) -> (B, n, n) under vmap, chunked or not
+# batched API: the engine's uniform (B, ...) layer on EVERY cell — distance
+# input (B, n, n) for all four methods incl. the Pallas tri pipeline, and
+# feature input (B, n, d) for the fused path.  Batched must equal the
+# per-item loop; chunked (batch=) must equal unchunked bit-for-bit.
 # ---------------------------------------------------------------------------
+BATCH_NS = (7, 33)
+BATCH_BS = (1, 3)
+
+
+@functools.lru_cache(maxsize=None)
+def _batch_case(n: int, B: int):
+    rng = np.random.default_rng(500 + 10 * n + B)
+    X = rng.normal(size=(B, n, 3))
+    D = np.sqrt(((X[:, :, None, :] - X[:, None, :, :]) ** 2).sum(-1))
+    for i in range(B):
+        np.fill_diagonal(D[i], 0.0)
+    return D.astype(np.float32)
+
+
+@pytest.mark.parametrize("B", BATCH_BS)
+@pytest.mark.parametrize("n", BATCH_NS)
+@pytest.mark.parametrize("method,schedule",
+                         [("dense", "dense")] + BLOCKED_PATHS)
+def test_batched_cohesion_matches_loop(method, schedule, n, B):
+    D = _batch_case(n, B)
+    kw = dict(method=method, schedule=schedule)
+    if method != "dense":
+        kw["block"] = 16
+    Cb = np.asarray(pald.cohesion(jnp.asarray(D), **kw))
+    assert Cb.shape == (B, n, n) and Cb.dtype == np.float32
+    for i in range(B):
+        Ci = np.asarray(pald.cohesion(jnp.asarray(D[i]), **kw))
+        np.testing.assert_allclose(Cb[i], Ci, rtol=1e-6, atol=1e-7)
+    # chunked execution is a pure re-chunking of the same computation
+    Cb2 = np.asarray(pald.cohesion(jnp.asarray(D), batch=2, **kw))
+    np.testing.assert_array_equal(Cb, Cb2)
+
+
+def test_batched_cohesion_rejects_bad_rank_and_batch():
+    with pytest.raises(ValueError):
+        pald.cohesion(jnp.zeros((2, 3, 4, 4)))
+    with pytest.raises(ValueError):
+        pald.cohesion(jnp.zeros((2, 4, 4)), batch=0)
+    with pytest.raises(ValueError):
+        pald.cohesion(jnp.zeros((2, 4, 5)))  # non-square items
+
+
 def test_batched_matches_loop():
     rng = np.random.default_rng(7)
     Xb = rng.normal(size=(4, 21, 3)).astype(np.float32)

@@ -1,0 +1,241 @@
+"""Unit tests for the execution-plan engine (core/engine.py).
+
+The conformance matrix (test_conformance.py) already proves every executor
+numerically; this file pins the *plan layer* itself: resolution-once
+semantics, knob validation at the one boundary, explain() provenance, the
+registry contract, and the distributed ``plan_local`` consumer.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import engine, pald
+
+
+def _D(n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 3))
+    D = np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1))
+    np.fill_diagonal(D, 0.0)
+    return jnp.asarray(D, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# plan resolution
+# ---------------------------------------------------------------------------
+def test_plan_is_frozen_and_reusable():
+    D = _D()
+    p = pald.plan(D, method="triplet", block=8)
+    with pytest.raises((AttributeError, TypeError)):  # frozen dataclass
+        p.block = 16
+    C1 = np.asarray(p.execute(D))
+    C2 = np.asarray(p.execute(D))
+    np.testing.assert_array_equal(C1, C2)
+    # same plan, different data of the same shape
+    C3 = np.asarray(p.execute(_D(seed=1)))
+    assert C3.shape == C1.shape and not np.array_equal(C3, C1)
+
+
+def test_plan_shape_only():
+    p = pald.plan(n=1024, method="pairwise")
+    assert p.n == 1024 and p.block is not None
+    assert p.padded_n % p.block == 0
+    pf = pald.plan(n=64, d=8, kind="features", metric="cosine")
+    assert pf.method == "fused" and pf.d == 8
+    with pytest.raises(ValueError):
+        pald.plan(kind="features", n=64)  # d missing
+    with pytest.raises(ValueError):
+        pald.plan()  # nothing to key resolution on
+
+
+def test_plan_auto_resolves_method_and_records_provenance():
+    p = pald.plan(_D(), method="auto")
+    assert p.method in ("dense", "pairwise", "triplet", "kernel")
+    assert p.method_source in ("heuristic",) or p.method_source.startswith(
+        ("cache:", "nearest:"))
+    pt = pald.plan(_D(), schedule="tri")
+    assert pt.method == "kernel" and pt.method_source == "schedule=tri"
+    pe = pald.plan(_D(), method="triplet", block=8)
+    assert pe.method_source == "explicit" and pe.block_source == "explicit"
+    pa = pald.plan(_D(), method="triplet", block="auto")
+    assert pa.block_source == "default" or pa.block_source.startswith(
+        ("cache:", "nearest:"))
+
+
+def test_explain_contract():
+    D = _D()
+    p = pald.plan(D, method="kernel", schedule="tri", block=8, block_z=8)
+    info = p.explain()
+    for key in ("kind", "method", "schedule", "impl", "block", "block_z",
+                "ties", "normalize", "n", "padded_n", "padded_shape",
+                "method_source", "block_source", "executor",
+                "est_vmem_bytes_per_step"):
+        assert key in info, key
+    assert info["method"] == "kernel" and info["schedule"] == "tri"
+    assert info["padded_n"] % 8 == 0
+    assert info["executor"].startswith("repro.kernels.ops.")
+    assert info["est_vmem_bytes_per_step"] > 0
+    pf = pald.plan(n=32, d=4, kind="features")
+    assert pf.explain()["padded_shape"][1] == 4
+
+
+def test_auto_method_pinned_by_path_specific_knobs():
+    """With method='auto', a dense-only or kernel-only knob pins the method
+    deterministically — legality must never depend on the input size or on
+    what the tuning cache happens to say on this machine."""
+    D = _D()
+    p = pald.plan(D, z_chunk=4)
+    assert p.method == "dense" and p.method_source == "z_chunk"
+    assert p.z_chunk == 4
+    p = pald.plan(D, impl="jnp")
+    assert p.method == "kernel" and p.method_source == "impl/block_z"
+    p = pald.plan(D, block_z=8)
+    assert p.method == "kernel" and p.block_z == 8
+    with pytest.raises(ValueError, match="explicit method"):
+        pald.plan(D, z_chunk=4, impl="jnp")  # pins contradict each other
+    # "auto" tiles are NOT a kernel preference: the fully-automatic call
+    # must still go through the measured method crossover
+    p = pald.plan(D, block="auto", block_z="auto")
+    assert p.method_source == "heuristic" or p.method_source.startswith(
+        ("cache:", "nearest:"))
+
+
+def test_block_z_auto_resolves_to_no_tile_on_jnp_blocked_paths():
+    """block_z='auto' on pairwise/triplet/dense means 'pick for me', and
+    the right pick is 'no z tile' — explain() shows None with no z
+    provenance, while an explicit int stays an error (contradiction)."""
+    D = _D()
+    for method in ("pairwise", "triplet"):
+        p = pald.plan(D, method=method, block=8, block_z="auto")
+        assert p.block_z is None and "z:" not in p.block_source
+        with pytest.raises(ValueError, match="block_z"):
+            pald.plan(D, method=method, block_z=8)
+    p = pald.plan(D, method="dense", block_z="auto")
+    assert p.block_z is None
+    # kernel genuinely has a z tile: explicit block + auto z keeps both,
+    # with provenance crediting only the resolved half
+    p = pald.plan(D, method="kernel", block=8, block_z="auto")
+    assert p.block == 8 and p.block_z is not None
+    assert p.block_source.startswith("explicit; z:")
+
+
+def test_plan_validation_rejects_contradictions():
+    D = _D()
+    cases = [
+        (dict(method="nope"), "unknown method"),
+        (dict(schedule="diag"), "unknown schedule"),
+        (dict(kind="graphs"), "unknown kind"),
+        (dict(schedule="tri", method="triplet"), "only available"),
+        (dict(method="dense", block_z=8), "block_z"),
+        (dict(method="pairwise", block_z=8), "block_z"),
+        (dict(method="triplet", z_chunk=4), "z_chunk"),
+        (dict(method="pairwise", impl="jnp"), "impl"),
+        (dict(metric="cosine"), "metric"),  # metric on distance kind
+        (dict(batch=0), "batch"),
+    ]
+    for kw, frag in cases:
+        with pytest.raises(ValueError, match=frag):
+            pald.plan(D, **kw)
+
+
+def test_always_on_input_checks():
+    with pytest.raises(ValueError, match="square"):
+        pald.cohesion(jnp.zeros((3, 4)))
+    with pytest.raises(ValueError, match="diagonal"):
+        pald.cohesion(jnp.eye(4))
+    bad = np.zeros((3, 3))
+    bad[1, 1] = np.nan  # nan diagonal counts as nonzero
+    with pytest.raises(ValueError, match="diagonal"):
+        pald.cohesion(jnp.asarray(bad))
+
+
+def test_check_true_deep_validation():
+    rng = np.random.default_rng(0)
+    A = np.abs(rng.normal(size=(6, 6)))
+    np.fill_diagonal(A, 0.0)
+    with pytest.raises(ValueError, match="symmetric"):
+        pald.cohesion(jnp.asarray(A), check=True)
+    D = A + A.T
+    assert pald.cohesion(jnp.asarray(D), check=True).shape == (6, 6)
+    with pytest.raises(ValueError, match="negative"):
+        pald.cohesion(jnp.asarray(-D), check=True)
+    Dn = D.copy()
+    Dn[0, 1] = Dn[1, 0] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        pald.cohesion(jnp.asarray(Dn), check=True)
+    with pytest.raises(ValueError, match="non-finite"):
+        pald.from_features(jnp.asarray([[1.0, np.nan], [0.0, 1.0]]),
+                           check=True)
+
+
+def test_execute_rejects_mismatched_item_shape():
+    p = pald.plan(_D(12), method="triplet", block=8)
+    with pytest.raises(ValueError, match="does not match the"):
+        p.execute(_D(10))
+
+
+# ---------------------------------------------------------------------------
+# registry contract
+# ---------------------------------------------------------------------------
+def test_default_registry_covers_every_public_cell():
+    cells = set(engine.available_executors())
+    for m in ("dense", "pairwise", "triplet", "kernel"):
+        assert ("distance", m, "dense") in cells
+        assert ("features", m, "dense") in cells
+    assert ("distance", "kernel", "tri") in cells
+    assert ("features", "kernel", "tri") in cells
+    assert ("features", "fused", "dense") in cells
+
+
+def test_register_and_lookup_custom_executor():
+    calls = []
+
+    @engine.register_executor("test-kind", "noop")
+    def _noop(x, plan):
+        calls.append(plan.method)
+        return x
+
+    try:
+        fn = engine.get_executor("test-kind", "noop", "dense")
+        assert fn is _noop
+        with pytest.raises(KeyError, match="no executor registered"):
+            engine.get_executor("test-kind", "missing", "dense")
+    finally:
+        del engine._EXECUTORS[("test-kind", "noop", "dense")]
+
+
+# ---------------------------------------------------------------------------
+# facades are the engine (bitwise), features side included
+# ---------------------------------------------------------------------------
+def test_from_features_facade_is_plan_execute():
+    rng = np.random.default_rng(2)
+    X = jnp.asarray(rng.normal(size=(18, 4)), jnp.float32)
+    for method in ("fused", "kernel", "triplet"):
+        C = np.asarray(pald.from_features(X, method=method, block=8,
+                                          block_z=8 if method != "triplet"
+                                          else None))
+        p = pald.plan(X, kind="features", method=method, block=8,
+                      block_z=8 if method != "triplet" else None)
+        np.testing.assert_array_equal(C, np.asarray(p.execute(X)))
+
+
+# ---------------------------------------------------------------------------
+# plan_local: the distributed shard-body consumer
+# ---------------------------------------------------------------------------
+def test_plan_local_resolves_tiles_and_forwards():
+    lp = engine.plan_local(64, impl="jnp", ties="drop")
+    assert lp.block >= 1 and lp.block_z >= 1 and lp.impl == "jnp"
+    D = _D(16)
+    U = np.asarray(lp.focus_general(D, D, D))
+    from repro.kernels import ops as kops
+    np.testing.assert_array_equal(
+        U, np.asarray(kops.focus_general(D, D, D, impl="jnp",
+                                         block=lp.block, block_z=lp.block_z)))
+    from repro.kernels.ref import weights_ref
+    W = weights_ref(jnp.asarray(U))
+    C = np.asarray(lp.cohesion_general(D, D, D, W))
+    np.testing.assert_array_equal(
+        C, np.asarray(kops.cohesion_general(D, D, D, W, impl="jnp",
+                                            block=lp.block,
+                                            block_z=lp.block_z)))
