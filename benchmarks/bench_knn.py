@@ -1,0 +1,46 @@
+"""Sparse k-NN PaLD vs the best dense path: the n x k sweep (ISSUE 5).
+
+Each n gets one row for the measured-best dense path (``pald.plan`` with
+``method="auto"`` — the tuning-cache crossover pick) and one row per k for
+``method="knn"``.  The knn timing is the full API cost: neighbor
+selection + sparse cohesion + dense scatter, so the speedup column is
+what a caller switching ``method=`` actually observes.
+
+Dense cost grows O(n^3); at the largest n each dense cell is measured
+with a single post-warmup run (``iters=1``) to keep the --fast suite
+bounded, which is noisier but the gap measured here is orders of
+magnitude, not percent.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import pald
+
+from .common import random_distance_matrix, time_fn
+
+
+def run(ns=(1024, 4096), ks=(16, 32, 64), iters: int = 2) -> list[dict]:
+    rows: list[dict] = []
+    for n in ns:
+        D = jnp.asarray(random_distance_matrix(n))
+        it = 1 if n >= 4096 else iters
+        p = pald.plan(D)
+        t_dense = time_fn(lambda: p.execute(D), iters=it)
+        rows.append({"n": n, "k": "-", "method": f"dense/{p.method}",
+                     "seconds": round(t_dense, 4), "speedup_vs_dense": 1.0})
+        for k in ks:
+            if k > n - 1:
+                continue
+            pk = pald.plan(D, method="knn", k=k)
+            t = time_fn(lambda: pk.execute(D), iters=max(it, 2))
+            rows.append({"n": n, "k": k, "method": "knn",
+                         "seconds": round(t, 4),
+                         "speedup_vs_dense": round(t_dense / t, 1)})
+    return rows
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run(), header="knn: sparse k-NN PaLD vs best dense path")

@@ -19,6 +19,9 @@ forgotten; now every climb feeds the dispatcher.
         --n 1024 --pass cohesion_tri [--impl jnp] \
         [--blocks 64,128,256] [--block-z 256,512] [--cache PATH]
 
+(``--pass pald_fused`` keys on ``--d``, ``--pass pald_knn`` on ``--k``;
+non-default ``--ties`` modes get their own cells.)
+
 ``methods``: measure the method crossover (dense/pairwise/triplet) across
 n and persist the per-n winner, replacing the hard-coded n<=256 heuristic
 behind ``pald.cohesion(method="auto")``.
@@ -102,6 +105,8 @@ def run_blocks(args) -> None:
         kw["blocks_z"] = _csv_ints(args.block_z)
     if getattr(args, "pass") == "pald_fused":
         kw["d"] = args.d
+    if getattr(args, "pass") == "pald_knn":
+        kw["k"] = args.k
     rec = autotune.tune(
         args.n, getattr(args, "pass"), impl=args.impl, path=args.cache,
         iters=args.iters, ties=args.ties, **kw,
@@ -149,11 +154,13 @@ def main() -> None:
     blocks.add_argument("--pass", required=True,
                         choices=("focus", "cohesion", "focus_tri",
                                  "cohesion_tri", "pald", "pald_tri",
-                                 "pald_fused"))
+                                 "pald_fused", "pald_knn"))
     blocks.add_argument("--impl", default=None,
                         choices=(None, "jnp", "interpret", "pallas"))
     blocks.add_argument("--d", type=int, default=8,
                         help="feature dim (pald_fused cells key on it)")
+    blocks.add_argument("--k", type=int, default=16,
+                        help="neighborhood size (pald_knn cells key on it)")
     blocks.add_argument("--ties", default="drop",
                         choices=("drop", "split", "ignore"),
                         help="tie mode (non-default modes get their own cells)")

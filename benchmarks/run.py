@@ -8,6 +8,7 @@ Sections:
     table1  pairwise vs triplet           (bench_variants)
     table1b dense vs tri kernel schedule  (bench_variants.run_kernels)
     table1c fused features vs materialize (bench_variants.run_fused)
+    knn     sparse k-NN vs best dense     (bench_knn)
     dispatch plan+execute overhead        (bench_variants.run_dispatch)
     batched  (B,n,n) engine throughput    (bench_variants.run_batched)
     fig9+   scaling + comm model          (bench_scaling)
@@ -53,8 +54,8 @@ def main() -> None:
     args = ap.parse_args()
 
     t0 = time.time()
-    from . import (bench_blocksize, bench_optimizations, bench_scaling,
-                   bench_text_analysis, bench_variants, common)
+    from . import (bench_blocksize, bench_knn, bench_optimizations,
+                   bench_scaling, bench_text_analysis, bench_variants, common)
 
     sections: dict[str, dict] = {}
 
@@ -80,6 +81,9 @@ def main() -> None:
         section("ties",
                 "ties: split/ignore tile-body overhead vs strict drop (--fast)",
                 lambda: bench_variants.run_ties(ns=(256, 512, 1024)))
+        section("knn",
+                "knn: sparse k-NN PaLD vs best dense path (n x k, --fast)",
+                lambda: bench_knn.run(ns=(1024, 4096), ks=(16, 32, 64)))
         section("dispatch",
                 "engine: plan+execute dispatch overhead vs direct call (--fast)",
                 lambda: bench_variants.run_dispatch(ns=(256, 512)))
@@ -102,6 +106,10 @@ def main() -> None:
         section("ties",
                 "ties: split/ignore tile-body overhead vs strict drop",
                 bench_variants.run_ties)
+        section("knn",
+                "knn: sparse k-NN PaLD vs best dense path (n x k)",
+                lambda: bench_knn.run(ns=(1024, 4096, 8192),
+                                      ks=(16, 32, 64, 128)))
         section("dispatch",
                 "engine: plan+execute dispatch overhead vs direct call",
                 lambda: bench_variants.run_dispatch(ns=(256, 512, 1024)))

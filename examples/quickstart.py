@@ -97,6 +97,16 @@ def main() -> None:
     print(f"tie modes on quantized data: max spread {spread:.4f}, "
           f"split mass {mass:.1f} (= n(n-1)/2 exactly)")
 
+    # --- sparse k-NN restriction (the large-n escape hatch) ---------------
+    # method="knn" restricts conflict foci to each point's k nearest
+    # neighbors: O(n*k^2) work instead of O(n^3), exact at k = n-1
+    # (examples/pald_knn_clusters.py runs it at n = 50,000)
+    Cknn = pald.cohesion(jnp.asarray(D), method="knn", k=len(X) - 1)
+    Cdense = pald.cohesion(jnp.asarray(D), method="dense")
+    assert np.array_equal(np.asarray(Cknn), np.asarray(Cdense))  # bitwise at full k
+    err = float(jnp.abs(pald.cohesion(jnp.asarray(D), method="knn", k=10) - C).max())
+    print(f"knn restriction: exact at k=n-1 ✓, max error {err:.4f} at k=10")
+
     # strongest ties of point 0 (inside the tight community)
     print("top ties of point 0:", analysis.top_ties(np.asarray(C), 0, k=3))
 

@@ -1,4 +1,4 @@
 """PaLD core: the paper's contribution as a composable JAX module."""
-from . import analysis, engine, features, pairwise, pald, reference, triplet  # noqa: F401
+from . import analysis, engine, features, knn, pairwise, pald, reference, triplet  # noqa: F401
 from .features import cdist_reference  # noqa: F401
 from .pald import cohesion, from_features, local_depths, plan  # noqa: F401

@@ -296,25 +296,51 @@ def pald_distributed(
 ) -> jnp.ndarray:
     """Compute the PaLD cohesion matrix on a device mesh.
 
-    D is a host/global array; it is padded to shard evenly, placed according
-    to the strategy, processed, and returned unsharded (n, n).
+    Args:
+        D: host/global (n, n) distance matrix; padded internally to shard
+            evenly, placed according to the strategy, processed, returned
+            unsharded.
+        mesh: the ``jax.sharding.Mesh`` to run on.
+        strategy: "allgather", "ring", "2d", or "auto" (module docstring
+            has the communication/memory tradeoffs); "2d" requires a 2-D
+            mesh, optionally with ``pod_stream=True`` on the slow axis.
+        row_axes / col_axis: which mesh axes shard rows/columns; default
+            all-but-last / last.
+        pod_stream: stream the inter-pod row slab ("2d" only).
+        normalize: apply the 1/(n-1) factor, like ``pald.cohesion``.
+        impl: per-device kernel backend (None = backend default).
+        comm_dtype: ``jnp.bfloat16`` moves/gathers distances in bf16
+            (halving every collective) and compares in bf16 — PaLD
+            depends only on the ORDER of distances, so this is exact
+            whenever no two distances fall in the same bf16 ulp.
+            Distances that collide round to an exact TIE, so the explicit
+            ``ties`` mode governs them: the bf16 result equals
+            single-device PaLD on the bf16-cast matrix under the same
+            ``ties`` (tests/test_ties.py), instead of silently depending
+            on which kernel the shard body dispatches to.  §Perf 3.
+        block / block_z: per-device kernel tiles; ``"auto"`` (default)
+            resolves them from the persistent tuning cache
+            (``repro.tuning``), keyed by the per-device problem size.
+        ties: tie-handling mode on every shard body (see
+            ``pald.cohesion``).
 
-    ``block``/``block_z`` are the per-device kernel tiles; ``"auto"``
-    (default) resolves them from the persistent tuning cache
-    (``repro.tuning``), keyed by the per-device problem size.
+    Returns:
+        (n, n) float32 cohesion matrix, equal to single-device
+        ``pald.cohesion(D, ties=ties)`` for any strategy.
 
-    ``ties`` fixes the tie-handling mode on every shard body (see
-    ``pald.cohesion``); the result equals single-device
-    ``pald.cohesion(D, ties=ties)`` for any strategy.
+    Raises:
+        ValueError: unknown strategy/ties, or a strategy/mesh-shape
+            mismatch.
 
-    ``comm_dtype=jnp.bfloat16`` moves/gathers distances in bf16 (halving
-    every collective) and compares in bf16 — PaLD depends only on the
-    ORDER of distances, so this is exact whenever no two distances fall in
-    the same bf16 ulp.  Distances that collide round to an exact TIE, so
-    the explicit ``ties`` mode governs them: the bf16 result equals
-    single-device PaLD on the bf16-cast matrix under the same ``ties``
-    (tests/test_ties.py), instead of silently depending on which kernel the
-    shard body dispatches to.  §Perf 3.
+    Example:
+        >>> import numpy as np, jax, jax.numpy as jnp
+        >>> from jax.sharding import Mesh
+        >>> rng = np.random.default_rng(0); X = rng.normal(size=(16, 3))
+        >>> D = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
+        >>> mesh = Mesh(np.asarray(jax.devices()[:1]), ("dev",))
+        >>> C = pald_distributed(jnp.asarray(D), mesh, strategy="ring")
+        >>> C.shape
+        (16, 16)
     """
     validate_ties(ties)
     axis_names = list(mesh.axis_names)
@@ -408,21 +434,44 @@ def pald_distributed_from_features(
 ) -> jnp.ndarray:
     """Distributed PaLD straight from row-sharded feature vectors.
 
-    X (n, d) is zero-padded to shard evenly over the flattened mesh, row-
-    sharded, and each device computes its distance rows locally — the only
+    X is zero-padded to shard evenly over the flattened mesh, row-sharded,
+    and each device computes its distance rows locally — the only
     O(n)-scaled communication is feature movement (n*d words), an n/d-fold
-    reduction over the distance-sharded strategies.  Strategies:
+    reduction over the distance-sharded strategies.
 
-    allgather   one all-gather of X; each device holds (n, d) features and
-                the (n, n) distances it derives — memory n^2/device, like
-                the distance allgather, but comm drops from n^2 to n*d.
-    ring        X blocks rotate via ppermute; distance row slabs are
-                recomputed per step from the (m, d) block in flight —
-                memory O(n^2/P), comm 2 n*d words total.
+    Args:
+        X: host/global (n, d) feature matrix.
+        mesh: the ``jax.sharding.Mesh`` to run on (flattened over all
+            axes).
+        metric: one of ``features.METRICS``.
+        strategy: "allgather" — one all-gather of X; each device holds
+            (n, d) features and the (n, n) distances it derives (memory
+            n^2/device, but comm drops from n^2 to n*d); or "ring"
+            (the "auto" default) — X blocks rotate via ppermute and
+            distance row slabs are recomputed per step from the (m, d)
+            block in flight (memory O(n^2/P), comm 2 n*d words total).
+            The full distance matrix is never communicated; ``allgather``
+            is the only strategy that materializes it (per device, by
+            construction).
+        normalize / impl / block / block_z / ties: as in
+            ``pald_distributed``; ``ties`` behaves exactly as in
+            ``pald.from_features``.
 
-    The full distance matrix is never communicated; ``allgather`` is the
-    only strategy that materializes it (per device, by construction).
-    ``ties`` behaves exactly as in ``pald.from_features``.
+    Returns:
+        (n, n) float32 cohesion matrix, equal to single-device
+        ``pald.from_features(X, metric=metric, ties=ties)``.
+
+    Raises:
+        ValueError: unknown strategy, metric or ties mode.
+
+    Example:
+        >>> import numpy as np, jax, jax.numpy as jnp
+        >>> from jax.sharding import Mesh
+        >>> X = np.random.default_rng(0).normal(size=(16, 3))
+        >>> mesh = Mesh(np.asarray(jax.devices()[:1]), ("dev",))
+        >>> C = pald_distributed_from_features(jnp.asarray(X), mesh)
+        >>> C.shape
+        (16, 16)
     """
     validate_ties(ties)
     if strategy == "auto":

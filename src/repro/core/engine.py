@@ -59,14 +59,14 @@ __all__ = [
     "pad_distance_matrix",
 ]
 
-DISTANCE_METHODS = ("dense", "pairwise", "triplet", "kernel")
+DISTANCE_METHODS = ("dense", "pairwise", "triplet", "kernel", "knn")
 FEATURE_METHODS = ("fused",) + DISTANCE_METHODS
 SCHEDULES = ("dense", "tri")
 
 # methods whose executors take an impl= knob (kernel pipelines); the pure-jnp
 # blocked paths have exactly one implementation, so an explicit impl request
 # there is a caller error, not something to drop silently
-_IMPL_METHODS = ("kernel", "fused")
+_IMPL_METHODS = ("kernel", "fused", "knn")
 
 
 def pad_distance_matrix(
@@ -165,6 +165,7 @@ class PaldPlan:
     check: bool                   # deep input validation on execute
     n: int                        # per-item point count
     d: int | None                 # feature dimension (features kind)
+    k: int | None = None          # neighborhood size (knn method only)
     # provenance (explain)
     method_source: str = "explicit"
     block_source: str = "explicit"
@@ -220,10 +221,26 @@ class PaldPlan:
         return -(-self.n // self.block) * self.block
 
     def explain(self) -> dict[str, Any]:
-        """The resolved plan as a plain dict: what will run, which tiles,
-        where they came from (cache hit / nearest-n / default), the padded
-        shape, and a rough VMEM-per-grid-step estimate.  Stable keys — bench
-        provenance rows and debug logs rely on them."""
+        """The resolved plan as a plain dict — the debuggability surface.
+
+        Returns:
+            Dict with STABLE keys (bench provenance rows and debug logs
+            rely on them): the resolved ``kind`` / ``method`` /
+            ``schedule`` / ``impl`` / ``block`` / ``block_z`` /
+            ``z_chunk`` / ``ties`` / ``metric`` / ``normalize`` /
+            ``batch`` / ``n`` / ``d`` / ``k``, the ``padded_n`` /
+            ``padded_shape`` the executor will see, ``method_source`` and
+            ``block_source`` provenance strings ("explicit",
+            "cache:<key>", "nearest:<key>", "default", ...), the
+            fully-qualified ``executor`` callable, and
+            ``est_vmem_bytes_per_step`` (a planning aid, not a promise).
+
+        Example:
+            >>> from repro.core import pald
+            >>> info = pald.plan(n=256, method="triplet", block=64).explain()
+            >>> info["method"], info["block"], info["padded_n"]
+            ('triplet', 64, 256)
+        """
         fn = get_executor(self.kind, self.method, self.schedule)
         return {
             "kind": self.kind,
@@ -239,6 +256,7 @@ class PaldPlan:
             "batch": self.batch,
             "n": self.n,
             "d": self.d,
+            "k": self.k,
             "padded_n": self.padded_n,
             "padded_shape": ((self.padded_n, self.padded_n)
                              if self.kind == "distance"
@@ -259,6 +277,10 @@ def _est_vmem_per_step(p: PaldPlan) -> int | None:
         return 4 * p.n * p.n * zc
     b = p.block
     m = p.padded_n
+    if p.method == "knn":
+        # (b, k, k) gathered tile + (b, k, k) comparison cube + (b, k) rows
+        kk = p.k or 1
+        return 4 * (2 * b * kk * kk + 3 * b * kk + b * (kk + 1))
     if p.method in ("pairwise", "triplet"):
         # (b, b, n) support cube + two (b, n) row slabs
         return 4 * (b * b * m + 2 * b * m)
@@ -360,12 +382,14 @@ def _shape_of(x, n, d, kind):
 
 def _default_kernel_impl(method: str) -> str:
     """Backend-default impl per pipeline (mirrors kernels/ops): the fused
-    path prefers the vectorized jnp fallback off-TPU, the D-consuming kernel
-    pipeline prefers bit-faithful interpret execution."""
+    and knn paths prefer the vectorized jnp fallback off-TPU (they exist
+    for large n, where interpret-mode kernel emulation is prohibitive),
+    the D-consuming kernel pipeline prefers bit-faithful interpret
+    execution."""
     on_tpu = jax.default_backend() == "tpu"
     if on_tpu:
         return "pallas"
-    return "jnp" if method == "fused" else "interpret"
+    return "jnp" if method in ("fused", "knn") else "interpret"
 
 
 def plan(
@@ -385,6 +409,7 @@ def plan(
     ties: str = DEFAULT_TIES,
     batch: int | None = None,
     check: bool = False,
+    k: int | None = None,
 ) -> PaldPlan:
     """Resolve every knob exactly once and return a frozen ``PaldPlan``.
 
@@ -437,6 +462,14 @@ def plan(
             # an explicit tri request pins the kernel pipeline (the only
             # method with a tri schedule)
             method, method_source = "kernel", "schedule=tri"
+        elif k is not None:
+            # a neighborhood size is a knn request on either kind — the
+            # sparse approximation must be opted into, never auto-selected
+            if z_chunk is not None:
+                raise ValueError(
+                    "k= pins method='knn' but z_chunk= pins method='dense'; "
+                    "pass an explicit method")
+            method, method_source = "knn", "k"
         elif kind == "features":
             method, method_source = "fused", "default"
         elif z_chunk is not None:
@@ -458,8 +491,24 @@ def plan(
                          f"(expected one of {('auto',) + allowed})")
     if schedule == "tri" and method != "kernel":
         raise ValueError(
-            f"schedule='tri' is only available for method='kernel', "
-            f"got {method!r}")
+            f"schedule='tri' is only available for method='kernel' (the "
+            f"Pallas upper-triangular pipeline), got method={method!r}; "
+            f"pass method='kernel' or drop schedule=")
+
+    # -- neighborhood size (knn only) ---------------------------------------
+    if method == "knn":
+        if k is None:
+            raise ValueError(
+                "method='knn' needs k= (neighborhood size, 1 <= k <= n-1); "
+                "at k = n-1 the result equals the dense methods exactly")
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        k = min(int(k), max(n - 1, 0))
+    elif k is not None:
+        raise ValueError(
+            f"k= is only valid with method='knn' (got method={method!r}); "
+            "the dense/pairwise/triplet/kernel paths always rank every "
+            "point against every other — drop k=, or pass method='knn'")
 
     # -- impl --------------------------------------------------------------
     if method in _IMPL_METHODS:
@@ -468,13 +517,15 @@ def plan(
         # silently dropping an explicit request would let a caller believe
         # it exercised a path it didn't
         raise ValueError(
-            f"impl={impl!r} is only configurable for the kernel/fused "
+            f"impl={impl!r} is only configurable for the kernel/fused/knn "
             f"pipelines; method={method!r} has exactly one implementation")
 
     # -- per-method knob surface -------------------------------------------
     if z_chunk is not None and method != "dense":
-        raise ValueError("z_chunk= only applies to method='dense' "
-                         "(the blocked paths stream z by block_z tiles)")
+        raise ValueError(
+            f"z_chunk= only applies to method='dense' (the blocked paths "
+            f"stream z by block_z tiles), got method={method!r}; drop "
+            f"z_chunk= or pass method='dense'")
     if method == "dense":
         if block_z not in (None, "auto"):
             raise ValueError("block_z= does not apply to method='dense' "
@@ -495,12 +546,31 @@ def plan(
         # not a dropped knob; explain() shows block_z=None with no z
         # provenance, and no tuning-cache scan is wasted on it
         block_z = None
+    if method == "knn":
+        if block_z not in (None, "auto"):
+            raise ValueError(
+                "block_z= does not apply to method='knn' (the third axis "
+                "is the k neighbors themselves); tune block=, the row tile")
+        block_z = None
 
     # -- tiles -------------------------------------------------------------
     block_source = "explicit"
     if block is None:
-        block = "auto" if method == "fused" else 128
+        block = "auto" if method in ("fused", "knn") else 128
         block_source = "default"
+    if method == "knn":
+        if block == "auto":
+            block, _, src = _tuner.resolve_blocks_ex(
+                n, "pald_knn", ties=ties, k=k, impl=impl)
+            block_source = src
+        block = max(min(int(block), max(n, 1)), 1)
+        return PaldPlan(
+            kind=kind, method=method, schedule=schedule, impl=impl,
+            block=block, block_z=None, z_chunk=None, ties=ties,
+            metric=metric, normalize=normalize, batch=batch, check=check,
+            n=n, d=d, k=k, method_source=method_source,
+            block_source=block_source,
+        )
     if method == "fused":
         # one authority for the fused tile defaults, shared with
         # kernels/ops.pald_fused (tuning.resolve_fused_tiles) — the plan can
@@ -579,6 +649,7 @@ def _materialize_then(schedule: str):
 
 
 for _m in DISTANCE_METHODS:
-    register_executor("features", _m, "dense")(_materialize_then("dense"))
+    if _m != "knn":  # features-knn never materializes D; kernels/ops owns it
+        register_executor("features", _m, "dense")(_materialize_then("dense"))
 register_executor("features", "kernel", "tri")(_materialize_then("tri"))
 del _m

@@ -8,6 +8,7 @@
     C = pald.cohesion(D, method="kernel",
                       schedule="tri")         # upper-tri kernel pipeline
     C = pald.cohesion(D, method="dense")      # un-blocked vectorized baseline
+    C = pald.cohesion(D, method="knn", k=32)  # sparse O(n k^2) restriction
     C = pald.cohesion(Db)                     # batched: (B, n, n) -> (B, n, n)
     C = pald.from_features(X, metric="cosine")  # fused, from feature vectors
 
@@ -56,11 +57,40 @@ __all__ = ["cohesion", "from_features", "plan", "local_depths",
 
 
 def plan(x=None, **kwargs) -> PaldPlan:
-    """Resolve a PaLD execution plan once; see ``repro.core.engine.plan``.
+    """Resolve a PaLD execution plan exactly once.
 
     ``pald.plan(D)`` plans the distance pipeline, ``pald.plan(X,
     kind="features", metric=...)`` the feature pipeline; shape-only planning
     (``pald.plan(n=4096)``) works too, for inspection before data exists.
+
+    Args:
+        x: optional input array the plan is keyed on — a (n, n) / (B, n, n)
+            distance matrix or, with ``kind="features"``, a (n, d) /
+            (B, n, d) feature matrix.  Omit it and pass ``n=`` (and ``d=``)
+            for shape-only planning.
+        **kwargs: every knob of ``cohesion`` / ``from_features`` (method,
+            schedule, block, block_z, z_chunk, metric, normalize, impl,
+            ties, batch, check, k) plus ``kind``/``n``/``d``; full
+            semantics in ``repro.core.engine.plan``.
+
+    Returns:
+        A frozen ``PaldPlan``.  ``plan.execute(x)`` runs it (reusable
+        across calls, threads and same-shape inputs); ``plan.explain()``
+        reports every resolved knob with its provenance.
+
+    Raises:
+        ValueError: on contradictory or unknown knobs — validation rejects
+            them at this one boundary instead of silently dropping any
+            (each message names the legal alternatives).
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> D = jnp.asarray([[0., 1., 2.], [1., 0., 1.5], [2., 1.5, 0.]])
+        >>> p = plan(D, method="triplet", block=2)
+        >>> p.explain()["method"]
+        'triplet'
+        >>> p.execute(D).shape
+        (3, 3)
     """
     return _engine_plan(x, **kwargs)
 
@@ -78,42 +108,69 @@ def cohesion(
     ties: Ties = DEFAULT_TIES,
     batch: int | None = None,
     check: bool = False,
+    k: int | None = None,
 ) -> jnp.ndarray:
     """Compute the PaLD cohesion matrix C from a distance matrix D.
 
-    D: (n, n) -> C: (n, n), or batched (B, n, n) -> (B, n, n) — every
-    method and schedule accepts the batched form; ``batch=`` bounds how many
-    items are vmapped per compiled call.
+    Args:
+        D: (n, n) distance matrix with an exactly-zero diagonal, or a
+            batched (B, n, n) stack — every method and schedule accepts
+            the batched form.  Any float dtype; cast to float32 once at
+            the executor boundary.
+        method: "dense" (un-blocked vectorized), "pairwise" (blocked
+            Fig. 5), "triplet" (block-symmetric), "kernel" (Pallas
+            pipeline), "knn" (sparse O(n*k^2) neighborhood restriction,
+            needs ``k=``; exact at k = n-1), or "auto" (measured
+            crossover from the tuning cache; never picks the knn
+            approximation).
+        block: tile size for the blocked paths; "auto" resolves via the
+            tuning cache.  ``method="dense"`` has no tile and ignores it.
+        block_z: z-axis tile (kernel pipeline only).
+        schedule: "dense", or "tri" (kernel only) — the upper-triangular
+            block schedule, half the block-pair visits of both passes.
+        normalize: apply the 1/(n-1) factor (Eq. 3.3), making row sums
+            equal local depths; on by default.
+        z_chunk: third-point streaming chunk (dense method only).
+        impl: kernel backend — 'pallas' (TPU), 'interpret' (bit-faithful
+            CPU kernel execution), 'jnp' (vectorized fallback);
+            kernel/fused/knn paths only.
+        ties: what an exact distance tie means — the SAME answer on every
+            method/schedule/impl (DESIGN.md §9, docs/guides.md):
+            'drop' (default) a tied z supports neither point (strict
+            comparisons, cheapest); 'split' ties split support 0.5/0.5
+            incl. fractional focus-boundary membership (conserves total
+            cohesion mass on any input); 'ignore' Algorithm 1's
+            sequential if/else (higher index wins).  On tie-free
+            distances all three agree.
+        batch: for (B, n, n) input, how many items are vmapped per
+            compiled call (None = all); bounds peak memory.
+        check: add deep input validation (finite, symmetric, nonnegative)
+            on top of the always-on shape/zero-diagonal checks.
+        k: neighborhood size, ``method="knn"`` only (k >= 1, clamped to
+            n-1).  Passing ``k=`` alone pins ``method="knn"``.
 
-    Methods: "dense" (un-blocked vectorized), "pairwise" (blocked Fig. 5),
-    "triplet" (block-symmetric), "kernel" (Pallas pipeline; with
-    ``schedule="tri"`` both passes run the upper-triangular block schedule
-    — half the block-pair visits), or "auto" (measured crossover).  Feature
-    input (no D yet) goes through ``pald.from_features`` instead, whose
-    fused method never materializes D at all.
-    ``block="auto"`` resolves tiles via the tuning cache (default 128 for
-    the blocked paths); ``impl`` selects the kernel backend ('pallas',
-    'interpret', 'jnp' — kernel/fused paths only).
+    Returns:
+        C as float32, shaped like D ((n, n) or (B, n, n)).  C[x, z] is
+        the support z lends x across all of x's conflicts; row sums are
+        the local depths (``pald.local_depths``).
 
-    ``ties`` fixes what an exact distance tie means — the SAME answer on
-    every method/schedule/impl (DESIGN.md §9):
-      'drop'  (default) a tied z supports neither point of the pair; strict
-              comparisons everywhere (the paper's "ignore equality" applied
-              branch-free) — cheapest, and exact on tie-free input;
-      'split' a tie splits support 0.5/0.5 and a z exactly on the focus
-              boundary joins with weight 0.5 (the theoretical formulation;
-              conserves total cohesion mass on any input);
-      'ignore' Algorithm 1's sequential if/else: the higher-index point of
-              the pair takes tied support.
-    On tie-free distances all three modes return identical results.
+    Raises:
+        ValueError: non-square/ill-shaped D, a nonzero diagonal,
+            ``check=True`` violations, or contradictory knobs (e.g.
+            ``k=`` off the knn method, ``schedule="tri"`` off the kernel
+            method) — each message names the legal alternatives.
 
-    ``check=True`` adds deep input validation (finite, symmetric,
-    nonnegative) on top of the always-on shape/zero-diagonal checks.
+    Example:
+        >>> import jax.numpy as jnp
+        >>> D = jnp.asarray([[0., 1., 4.], [1., 0., 2.], [4., 2., 0.]])
+        >>> C = cohesion(D)
+        >>> C.shape, bool(C[0, 1] > C[0, 2])   # 1 is 0's strong partner
+        ((3, 3), True)
     """
     p = _engine_plan(
         D, kind="distance", method=method, schedule=schedule, block=block,
         block_z=block_z, z_chunk=z_chunk, normalize=normalize, impl=impl,
-        ties=ties, batch=batch, check=check,
+        ties=ties, batch=batch, check=check, k=k,
     )
     return p.execute(D)
 
@@ -131,46 +188,81 @@ def from_features(
     impl: str | None = None,
     ties: str = DEFAULT_TIES,
     check: bool = False,
+    k: int | None = None,
 ) -> jnp.ndarray:
     """PaLD cohesion straight from feature vectors.
 
-    X: (n, d) -> C: (n, n), or batched (B, n, d) -> (B, n, n).
+    Args:
+        X: (n, d) feature matrix or batched (B, n, d) stack.  Any float
+            dtype — cast to float32 once at the executor boundary (PaLD
+            only consumes the ORDER of distances, which f32 preserves for
+            any non-pathological data).
+        metric: one of ``features.METRICS`` (sqeuclidean, euclidean,
+            cosine, manhattan).
+        method: "fused" (the "auto" default) computes distance tiles
+            in-register from feature tiles — the full D matrix never
+            exists in HBM; "knn" selects k-nearest neighborhoods with
+            row-chunked distance slabs (D never materialized either) and
+            runs the sparse O(n*k^2) restriction; "dense" / "pairwise" /
+            "triplet" / "kernel" materialize D once (``cdist_reference``)
+            and run the corresponding distance executor.
+        batch: for 3-D X, how many batch elements to vmap per compiled
+            call (None = all at once); bounds peak memory at
+            ``batch * n^2`` floats.
+        block: kernel tile; "auto" consults the tuning cache (the
+            ``pald_fused`` pass is keyed by (n, d), the knn pass by
+            (n, k)).
+        block_z: z tile, fused/kernel methods only.
+        schedule: "dense", or "tri" with ``method="kernel"``.
+        normalize: apply the 1/(n-1) factor; on by default.
+        impl: kernel backend ('pallas', 'interpret', 'jnp');
+            kernel/fused/knn methods only — the pure-jnp blocked paths
+            reject an explicit impl rather than silently dropping it.
+        ties: 'drop' (default) / 'split' / 'ignore' — what an exact
+            distance tie means, identically on every method (see
+            ``pald.cohesion``).  Quantized or duplicated feature rows
+            produce exact ties in every metric, so this matters for real
+            embedding data; 'split' is the theoretically-faithful choice
+            there.
+        check: deep input validation (finiteness) on top of shape checks.
+        k: neighborhood size for ``method="knn"``.
 
-    method:  "fused" (default via "auto") runs the fused kernel pipeline —
-             distance tiles are computed in-register from feature tiles and
-             the full D matrix is never materialized in HBM;
-             "dense" / "pairwise" / "triplet" / "kernel" materialize D once
-             (``cdist_reference``) and run the corresponding distance
-             executor.
-    metric:  one of ``features.METRICS`` (sqeuclidean, euclidean, cosine,
-             manhattan).
-    batch:   for 3-D X, how many batch elements to vmap per compiled call
-             (None = the whole batch at once); bounds peak memory at
-             ``batch * n^2`` floats.
-    block:   kernel tile; "auto" consults the tuning cache under the
-             ``pald_fused`` pass, keyed by (n, d).
-    impl:    kernel backend, kernel/fused methods only ('pallas',
-             'interpret', 'jnp'); the pure-jnp blocked paths reject an
-             explicit impl rather than silently dropping it.
-    ties:    'drop' (default) / 'split' / 'ignore' — what an exact distance
-             tie means, identically on every method (see ``pald.cohesion``).
-             Quantized or duplicated feature rows produce exact ties in
-             every metric, so this matters for real embedding data;
-             'split' is the theoretically-faithful choice there.
+    Returns:
+        C as float32: (n, n) for 2-D X, (B, n, n) for batched input.
 
-    Inputs of any float dtype are cast to float32 at the executor boundary —
-    float64 feature matrices are downcast explicitly (PaLD only consumes the
-    *order* of distances, which f32 preserves for any non-pathological data)
-    and the result dtype is always float32.
+    Raises:
+        ValueError: unknown metric/method, contradictory knobs, or
+            ``check=True`` violations.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> X = jnp.asarray([[0.0, 0.0], [0.1, 0.0], [5.0, 5.0]])
+        >>> C = from_features(X, metric="euclidean")
+        >>> C.shape
+        (3, 3)
     """
     p = _engine_plan(
         X, kind="features", metric=metric, method=method, schedule=schedule,
         block=block, block_z=block_z, normalize=normalize, impl=impl,
-        ties=ties, batch=batch, check=check,
+        ties=ties, batch=batch, check=check, k=k,
     )
     return p.execute(X)
 
 
 def local_depths(C: jnp.ndarray) -> jnp.ndarray:
-    """l_x = sum_z c_xz (cohesion is *partitioned* local depth)."""
+    """Local depths from a cohesion matrix (PaLD *partitions* local depth).
+
+    Args:
+        C: (..., n, n) cohesion matrix from ``cohesion``/``from_features``.
+
+    Returns:
+        (..., n) row sums l_x = sum_z c_xz.  With the default
+        ``normalize=True`` upstream, sum(l) == n/2 exactly.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> D = jnp.asarray([[0., 1.], [1., 0.]])
+        >>> float(local_depths(cohesion(D)).sum())
+        1.0
+    """
     return jnp.sum(C, axis=-1)

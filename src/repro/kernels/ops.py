@@ -49,6 +49,8 @@ __all__ = [
     "pald",
     "pald_tri",
     "pald_fused",
+    "pald_knn",
+    "knn_values",
     "focus",
     "cohesion_from_weights",
     "focus_general",
@@ -618,6 +620,167 @@ def pald_tri(
 
 
 # --------------------------------------------------------------------------
+# sparse k-NN pipeline (O(n * k^2) cohesion; core/knn.py has the semantics).
+# The jnp fallback streams the gathered (block, k, k) neighbor tiles chunk
+# by chunk (O(block * k^2) live); the Pallas path stages the full gathered
+# cube in HBM (O(n * k^2)) and lets the kernel iterate (block, k) tiles.
+# --------------------------------------------------------------------------
+from repro.core import knn as _knn  # noqa: E402
+
+
+def _gather_tiles(x, idxc, kind: str, metric: str):
+    if kind == "distance":
+        return _knn.gather_tile_from_distances(x, idxc)
+    return _knn.gather_tile_from_features(x, idxc, metric)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "metric", "block", "ties"))
+def _knn_values_jnp(x, dn_p, idx_p, *, kind: str, metric: str, block: int,
+                    ties: str = DEFAULT_TIES):
+    """Blocked-jnp fallback: lax.map over row chunks of the padded graph;
+    each chunk gathers its own (block, k, k) tile and runs the shared
+    ``knn_values_tile`` body."""
+    m, k = dn_p.shape
+    offs = jnp.arange(m // block) * block
+
+    def chunk(off):
+        dnc = jax.lax.dynamic_slice(dn_p, (off, 0), (block, k))
+        idxc = jax.lax.dynamic_slice(idx_p, (off, 0), (block, k))
+        g = _gather_tiles(x, idxc, kind, metric)
+        ow = None
+        if ties == "ignore":
+            ow = (off + jnp.arange(block))[:, None] > idxc
+        return _knn.knn_values_tile(dnc, g, ow, ties)
+
+    return jax.lax.map(chunk, offs).reshape(m, k + 1)
+
+
+def knn_values(
+    x,
+    graph: "_knn.NeighborGraph",
+    *,
+    kind: str = "distance",
+    metric: str = "euclidean",
+    block: int | str = "auto",
+    impl: str | None = None,
+    ties: str = DEFAULT_TIES,
+) -> jnp.ndarray:
+    """Sparse (n, k+1) cohesion values for a prebuilt neighbor graph.
+
+    Args:
+        x: the gather source the graph was built from — the (n, n)
+            distance matrix (``kind="distance"``) or the (n, d) feature
+            matrix (``kind="features"``; neighbor-to-neighbor tiles are
+            recomputed from features so D never materializes).
+        graph: ``core.knn.NeighborGraph`` over the same ``x``.
+        block: row-tile size; ``"auto"`` resolves via the tuning cache
+            under the ``pald_knn:k<k>`` pass.
+        impl: 'pallas' (TPU), 'interpret' (bit-faithful kernel on CPU) or
+            'jnp' (vectorized fallback, the CPU speed path); None =
+            backend default.
+        ties: tie mode shared with every other path (``core/ties.py``).
+
+    Returns:
+        (n, k+1) float32 values, column 0 = self support, un-normalized.
+    """
+    validate_ties(ties)
+    impl = impl or _default_impl()
+    x = jnp.asarray(x, jnp.float32)
+    n, k = graph.indices.shape
+    if k == 0:  # n == 1 (or an explicit empty graph): no pairs, no support
+        return jnp.zeros((n, 1), jnp.float32)
+    if block == "auto":
+        block, _ = _tuner.resolve_blocks(n, "pald_knn", impl=impl, ties=ties,
+                                         k=k)
+    block = max(min(int(block), n), 1)
+    m = -(-n // block) * block
+    dn_p = _pad2(graph.distances.astype(jnp.float32), m, k, jnp.inf)
+    idx_p = _pad2(graph.indices, m, k, 0)
+    if impl == "jnp":
+        vals = _knn_values_jnp(x, dn_p, idx_p, kind=kind, metric=metric,
+                               block=block, ties=ties)
+        return vals[:n]
+    from .pald_knn import knn_values_pallas
+
+    g = _gather_tiles(x, idx_p, kind, metric)          # (m, k, k), real k
+    kp = k if impl == "interpret" else -(-k // 128) * 128
+    if kp != k:
+        # lane-pad the neighbor axis AFTER gathering (a pre-pad gather
+        # would stage and recompute a (kp/k)^2-times-larger cube): +inf
+        # pair distances, index 0, zero gathered distances — the kernel
+        # masks every padded column out of the focus count and pair
+        # weights via k_valid
+        dn_p = _pad2(dn_p, m, kp, jnp.inf)
+        idx_p = _pad2(idx_p, m, kp, 0)
+        g = jnp.pad(g, ((0, 0), (0, kp - k), (0, kp - k)))
+    vals = knn_values_pallas(dn_p, g, idx_p, block=block, k_valid=k,
+                             ties=ties, interpret=impl == "interpret")
+    return vals[:n, :k + 1]
+
+
+def pald_knn(
+    x,
+    *,
+    k: int,
+    kind: str = "distance",
+    metric: str = "euclidean",
+    block: int | str = "auto",
+    impl: str | None = None,
+    ties: str = DEFAULT_TIES,
+    normalize: bool = False,
+    row_chunk: int = 1024,
+    graph: "_knn.NeighborGraph | None" = None,
+) -> tuple["_knn.NeighborGraph", jnp.ndarray]:
+    """Full sparse k-NN PaLD: neighbor selection + sparse cohesion values.
+
+    Args:
+        x: (n, n) distances (``kind="distance"``) or (n, d) features
+            (``kind="features"`` — D is never materialized: selection is
+            row-chunked and cohesion tiles are recomputed from features).
+        k: neighborhood size; clamped to n-1.  NOTE: unlike the engine
+            executor behind ``pald.cohesion(method="knn")``, this entry
+            point always runs the sparse machinery, even at k = n-1 — the
+            executor short-circuits that case to the exact dense path.
+        graph: optional prebuilt NeighborGraph (skips selection — useful
+            when scoring multiple tie modes on one neighborhood).
+        normalize: divide values by (n-1), matching the dense pipelines.
+        (Other knobs: see ``knn_values``.)
+
+    Returns:
+        (graph, values): the NeighborGraph used and the (n, k+1) sparse
+        cohesion values (column 0 = self).  ``core.knn.scatter_dense``
+        expands them to the dense (n, n) C; ``core.knn.communities``
+        consumes them directly.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> D = jnp.asarray([[0., 1., 4.], [1., 0., 2.], [4., 2., 0.]])
+        >>> g, vals = pald_knn(D, k=1)
+        >>> vals.shape
+        (3, 2)
+    """
+    validate_ties(ties)
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    k = min(int(k), max(n - 1, 0))
+    if graph is None:
+        if kind == "distance":
+            graph = _knn.knn_from_distances(x, k)
+        elif kind == "features":
+            graph = _knn.knn_from_features(x, k, metric=metric,
+                                           row_chunk=row_chunk)
+        else:
+            raise ValueError(f"unknown kind {kind!r} "
+                             "(expected 'distance' or 'features')")
+    vals = knn_values(x, graph, kind=kind, metric=metric, block=block,
+                      impl=impl, ties=ties)
+    if normalize:
+        vals = vals / max(n - 1, 1)
+    return graph, vals
+
+
+# --------------------------------------------------------------------------
 # engine executors: the kernel-pipeline cells of the dispatch registry
 # (repro.core.engine).  Each receives one unbatched item plus the resolved
 # plan; the plan's tiles/impl/ties were fixed once at plan() time, so these
@@ -651,3 +814,43 @@ def _exec_fused(X, plan):
     return pald_fused(X, metric=plan.metric, block=plan.block,
                       block_z=plan.block_z, normalize=plan.normalize,
                       impl=plan.impl, ties=plan.ties)
+
+
+# -- sparse k-NN cells ------------------------------------------------------
+# At k >= n-1 every point is every other point's neighbor: the restriction
+# is the identity, and gathering the (n, n-1, n-1) neighbor cube would be
+# strictly more work than the dense computation it reproduces.  The
+# executors therefore run the exact dense path there — which also makes
+# `cohesion(D, method="knn", k=n-1)` agree with `method="dense"` bitwise,
+# the anchor of the knn→dense convergence contract (test_conformance.py).
+# ``ops.pald_knn`` itself never short-circuits, so the sparse machinery
+# stays testable at full k.
+def _knn_dense_fallback(D, plan):
+    return _engine.get_executor("distance", "dense", "dense")(D, plan)
+
+
+@_engine.register_executor("distance", "knn", "dense")
+def _exec_knn_distance(D, plan):
+    D = jnp.asarray(D, jnp.float32)
+    n = D.shape[0]
+    if plan.k >= n - 1:
+        return _knn_dense_fallback(D, plan)
+    graph, vals = pald_knn(D, k=plan.k, kind="distance", block=plan.block,
+                           impl=plan.impl, ties=plan.ties)
+    C = _knn.scatter_dense(graph, vals)
+    return C / max(n - 1, 1) if plan.normalize else C
+
+
+@_engine.register_executor("features", "knn", "dense")
+def _exec_knn_features(X, plan):
+    X = jnp.asarray(X, jnp.float32)
+    n = X.shape[0]
+    if plan.k >= n - 1:
+        from repro.core.features import cdist_reference
+
+        return _knn_dense_fallback(cdist_reference(X, metric=plan.metric),
+                                   plan)
+    graph, vals = pald_knn(X, k=plan.k, kind="features", metric=plan.metric,
+                           block=plan.block, impl=plan.impl, ties=plan.ties)
+    C = _knn.scatter_dense(graph, vals)
+    return C / max(n - 1, 1) if plan.normalize else C

@@ -34,19 +34,24 @@ _MEM: dict[str, tuple[float, dict]] = {}  # abspath -> (mtime, data)
 
 # passes understood by `tune`; each maps to one kernel-pipeline entry point
 PASSES = ("focus", "cohesion", "focus_tri", "cohesion_tri", "pald",
-          "pald_tri", "pald_fused")
+          "pald_tri", "pald_fused", "pald_knn")
 
 
-def _pass_key(pass_: str, d: int | None, ties: str | None = None) -> str:
+def _pass_key(pass_: str, d: int | None, ties: str | None = None,
+              k: int | None = None) -> str:
     """Feature-fused cells depend on the feature dimension too: the optimal
     tile moves with d (the in-register distance compute scales with it), so
-    d joins the cache key as a ``:d<d>`` suffix on the pass name.  Non-default
+    d joins the cache key as a ``:d<d>`` suffix on the pass name.  The
+    sparse knn pass depends on the neighborhood size the same way (the
+    (block, k, k) tile scales with k^2), keyed ``:k<k>``.  Non-default
     tie modes change the tile bodies (extra equality masks for 'split', the
     index-tiebreak input for 'ignore'), so they get their own cells via a
     ``:t-<mode>`` suffix; the default 'drop' keeps the legacy key so existing
     caches stay valid."""
     if d is not None:
         pass_ = f"{pass_}:d{int(d)}"
+    if k is not None:
+        pass_ = f"{pass_}:k{int(k)}"
     if ties and ties != "drop":
         pass_ = f"{pass_}:t-{ties}"
     return pass_
@@ -158,6 +163,7 @@ def resolve_blocks_ex(
     path: str | None = None,
     d: int | None = None,
     ties: str | None = None,
+    k: int | None = None,
 ) -> tuple[int, int, str]:
     """(block, block_z, source) for one pass at size n.
 
@@ -166,14 +172,15 @@ def resolve_blocks_ex(
     (log-space), ``"default"`` size-aware heuristic (cold cache).
 
     ``d`` (feature dimension) extends the key for the fused pass — tiles
-    tuned at one d are not reused for another.  ``ties`` extends the key for
+    tuned at one d are not reused for another; ``k`` does the same for the
+    sparse knn pass (``pald_knn:k<k>``).  ``ties`` extends the key for
     non-default tie modes (their tile bodies differ); a miss on a tie-mode
     cell falls back to the strict cell's entry before the size heuristic,
     since the optima rarely move much."""
     backend = backend or _default_backend()
     impl = impl or _default_impl(backend)
-    base = _pass_key(pass_, d)
-    keyed = _pass_key(pass_, d, ties)
+    base = _pass_key(pass_, d, k=k)
+    keyed = _pass_key(pass_, d, ties, k=k)
     for pk in dict.fromkeys((keyed, base)):  # tie-mode cell first, then strict
         rec = lookup(backend, impl, n, pk, path)
         source = f"cache:{_key(backend, impl, n, pk)}"
@@ -199,13 +206,14 @@ def resolve_blocks(
     path: str | None = None,
     d: int | None = None,
     ties: str | None = None,
+    k: int | None = None,
 ) -> tuple[int, int]:
     """(block, block_z) for one pass at size n: cached, nearest, or default.
 
     Thin wrapper over ``resolve_blocks_ex`` (which also reports the
     provenance of the answer)."""
     b, bz, _ = resolve_blocks_ex(n, pass_, impl=impl, backend=backend,
-                                 path=path, d=d, ties=ties)
+                                 path=path, d=d, ties=ties, k=k)
     return b, bz
 
 
@@ -296,8 +304,11 @@ def _synthetic_inputs(n: int, seed: int = 0, with_weights: bool = False,
 
 
 def _runner(pass_: str, D, W, X, block: int, block_z: int, impl: str,
-            ties: str = "drop"):
+            ties: str = "drop", k: int | None = None):
     from repro.kernels import ops
+    if pass_ == "pald_knn":
+        return ops.pald_knn(D, k=k or 16, block=block, impl=impl,
+                            ties=ties)[1]
     if pass_ == "focus":
         return ops.focus_general(D, D, D, block=block, block_z=block_z,
                                  impl=impl, ties=ties)
@@ -335,18 +346,25 @@ def tune(
     iters: int = 3,
     d: int | None = None,
     ties: str = "drop",
+    k: int | None = None,
 ) -> dict:
     """Measure the candidate grid for one (n, pass, impl) cell and record the
     argmin.  Returns the record that was (or would be) cached.
 
     For ``pass_="pald_fused"`` the feature dimension ``d`` (default 8) joins
     the cache key — the fused tiles trade in-register distance compute
-    against revisit traffic, and that tradeoff moves with d.  Non-default
-    ``ties`` modes are keyed separately too (their tile bodies differ)."""
+    against revisit traffic, and that tradeoff moves with d.  For
+    ``pass_="pald_knn"`` the neighborhood size ``k`` (default 16) joins it
+    the same way (``pald_knn:k<k>``); that pass has no z tile, so only the
+    row-block axis of the grid is swept.  Non-default ``ties`` modes are
+    keyed separately too (their tile bodies differ)."""
     backend = backend or _default_backend()
     impl = impl or _default_impl(backend)
     if pass_ == "pald_fused" and d is None:
         d = 8
+    if pass_ == "pald_knn":
+        k = k or 16
+        blocks_z = (0,)  # no z tile: don't re-time identical cells
     D, W, X = _synthetic_inputs(
         n, seed, with_weights=pass_ in ("cohesion", "cohesion_tri"),
         d=d if d is not None else 8, with_distances=pass_ != "pald_fused",
@@ -354,7 +372,7 @@ def tune(
     rows = []
     for b in sorted({min(b, n) for b in blocks}):
         for bz in sorted({min(z, n) for z in blocks_z}):
-            t = time_fn(lambda: _runner(pass_, D, W, X, b, bz, impl, ties),
+            t = time_fn(lambda: _runner(pass_, D, W, X, b, bz, impl, ties, k),
                         iters=iters)
             rows.append({"block": b, "block_z": bz, "seconds": round(t, 6)})
     best = min(rows, key=lambda r: r["seconds"])
@@ -367,7 +385,8 @@ def tune(
     }
     if save:
         save_entry(backend, impl, n,
-                   _pass_key(pass_, d if pass_ == "pald_fused" else None, ties),
+                   _pass_key(pass_, d if pass_ == "pald_fused" else None, ties,
+                             k=k if pass_ == "pald_knn" else None),
                    record, path)
     return record
 

@@ -117,6 +117,45 @@ def test_materialized_methods_from_features(metric):
 
 
 # ---------------------------------------------------------------------------
+# sparse knn cells: the dense-agreement story.  method="knn" is an
+# APPROXIMATION for k < n-1 (its own oracle lives in tests/test_knn.py);
+# what belongs in the conformance matrix is the convergence contract:
+# at k = n-1 the neighborhood restriction is the identity and the result
+# must equal method="dense" BITWISE (the executor runs the dense path
+# outright there), with the error decaying monotonically on the way.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", NS)
+def test_knn_full_k_matches_dense_bitwise(n):
+    _, D, _ = _case(n)
+    Cd = np.asarray(pald.cohesion(jnp.asarray(D), method="dense"))
+    Ck = np.asarray(pald.cohesion(jnp.asarray(D), method="knn",
+                                  k=max(n - 1, 1)))
+    np.testing.assert_array_equal(Ck, Cd)
+
+
+@pytest.mark.parametrize("n", (33, 130))
+def test_knn_converges_to_dense(n):
+    _, D, Cref = _case(n)
+    last = np.inf
+    for k in (max(n // 8, 1), n // 2, n - 2):
+        C = np.asarray(pald.cohesion(jnp.asarray(D), method="knn", k=k))
+        err = np.abs(C - Cref).max()
+        assert err <= last + 1e-7
+        last = err
+    assert last < 5e-3  # k = n-2: only the last-rank pair set differs
+
+
+@pytest.mark.parametrize("metric", features.METRICS)
+def test_knn_from_features_full_k_matches_dense(metric):
+    X, _, _ = _case(33)
+    Cd = np.asarray(pald.from_features(jnp.asarray(X), metric=metric,
+                                       method="dense"))
+    Ck = np.asarray(pald.from_features(jnp.asarray(X), metric=metric,
+                                       method="knn", k=32))
+    np.testing.assert_array_equal(Ck, Cd)
+
+
+# ---------------------------------------------------------------------------
 # tie-heavy axis: integer distances, quantized embeddings, duplicated rows —
 # × every ties mode × every (method, schedule).  Inputs are integer-valued
 # so all distance arithmetic is exact in f32 and the f64 oracle sees the

@@ -139,6 +139,30 @@ def test_plan_validation_rejects_contradictions():
             pald.plan(D, **kw)
 
 
+def test_validation_errors_name_the_legal_alternatives():
+    """Knob-validation errors are the API's discovery surface: each one
+    must say what WOULD be legal, not just reject (ISSUE 5)."""
+    D = _D()
+    cases = [
+        # (kwargs, fragments that must all appear in the message)
+        (dict(method="dense", k=3),
+         ["only valid with method='knn'", "drop k=", "method='knn'"]),
+        (dict(method="knn"), ["needs k=", "1 <= k <= n-1"]),
+        (dict(method="knn", k=3, schedule="tri"),
+         ["only available for method='kernel'", "drop schedule="]),
+        (dict(method="triplet", z_chunk=4),
+         ["only applies to method='dense'", "method='dense'"]),
+        (dict(method="pairwise", impl="jnp"), ["kernel/fused/knn"]),
+        (dict(method="knn", k=3, block_z=8), ["tune block="]),
+        (dict(method="nope"), ["expected one of"]),
+    ]
+    for kw, frags in cases:
+        with pytest.raises(ValueError) as ei:
+            pald.plan(D, **kw)
+        for frag in frags:
+            assert frag in str(ei.value), (kw, frag, str(ei.value))
+
+
 def test_always_on_input_checks():
     with pytest.raises(ValueError, match="square"):
         pald.cohesion(jnp.zeros((3, 4)))

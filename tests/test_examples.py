@@ -32,6 +32,12 @@ def test_serve_lm_smoke():
     assert "[serve]" in r.stdout
 
 
+def test_pald_knn_clusters_small():
+    r = _run(["examples/pald_knn_clusters.py", "--n", "2000"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "no strong tie ever crosses communities" in r.stdout
+
+
 @pytest.mark.slow
 def test_pald_text_analysis_small():
     r = _run(["examples/pald_text_analysis.py", "--max-tokens", "384"])

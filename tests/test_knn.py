@@ -1,0 +1,368 @@
+"""Sparse k-NN PaLD subsystem (core/knn.py, kernels/pald_knn.py, engine).
+
+Covers the ISSUE-5 edge-case checklist: k >= n-1 equals dense bitwise
+(and the sparse machinery itself converges to dense), k = 1, duplicated
+points under all three ``ties=`` modes, batched (B, n, d) / (B, n, n)
+input, plan-validation errors for illegal knob combos, and the
+selection/tile contracts (deterministic tie-break, impl bit-faithfulness,
+lane-padding masks)."""
+import functools
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import features, knn, pald
+from repro.core.ties import TIE_MODES
+from repro.kernels import ops
+
+
+def _D(n=20, seed=0, d=3):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d))
+    D = np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1))
+    np.fill_diagonal(D, 0.0)
+    return jnp.asarray(D, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# entry-wise numpy reference of the documented knn semantics (core/knn.py
+# module docstring): directed pairs (x, y in N_k(x)), candidates {x} ∪ N_k(x)
+# ---------------------------------------------------------------------------
+def pald_knn_reference(D, k, ties="drop"):
+    D = np.asarray(D, np.float64)
+    n = D.shape[0]
+    C = np.zeros((n, n))
+    for x in range(n):
+        row = np.where(np.arange(n) == x, np.inf, D[x])
+        order = np.lexsort((np.arange(n), row))  # (distance, index) ties
+        nbr = [int(i) for i in order[:k]]
+        cand = [x] + nbr
+        for y in nbr:
+            dxy = D[x, y]
+
+            def fw(dxz, dyz):
+                s = (dxz < dxy) or (dyz < dxy)
+                if ties != "split":
+                    return float(s)
+                return 1.0 if s else (0.5 if (dxz == dxy or dyz == dxy)
+                                      else 0.0)
+
+            U = sum(fw(D[x, z], D[y, z]) for z in cand)
+            if U == 0:
+                continue
+            w = 1.0 / U
+            for z in cand:
+                do, dt = D[x, z], D[y, z]
+                if ties == "drop":
+                    s = float(do < dt and do < dxy)
+                elif ties == "ignore":
+                    s = float((do < dt or (do == dt and x > y)) and do < dxy)
+                else:
+                    s = (float(do < dt) + 0.5 * (do == dt)) * (
+                        float(do < dxy) + 0.5 * (do == dxy))
+                C[x, z] += s * w
+    return C / max(n - 1, 1)
+
+
+@functools.lru_cache(maxsize=None)
+def _tied_case():
+    """Duplicated integer points: exact ties in every comparison class."""
+    rng = np.random.default_rng(3)
+    base = rng.integers(-4, 5, size=(10, 3)).astype(np.float32)
+    X = np.vstack([base, base[:5]])
+    D = np.asarray(features.cdist_reference(X, metric="sqeuclidean"),
+                   np.float64)
+    return X, D
+
+
+# ---------------------------------------------------------------------------
+# selection
+# ---------------------------------------------------------------------------
+def test_knn_selection_sorted_and_self_free():
+    D = _D(23)
+    g = knn.knn_from_distances(D, k=6)
+    assert g.indices.shape == (23, 6) and g.distances.shape == (23, 6)
+    idx, dist = np.asarray(g.indices), np.asarray(g.distances)
+    for x in range(23):
+        assert x not in idx[x]
+        assert (np.diff(dist[x]) >= 0).all()  # sorted ascending
+        np.testing.assert_array_equal(dist[x], np.asarray(D)[x, idx[x]])
+
+
+def test_knn_selection_tie_break_is_lower_index():
+    # three points all at distance 1 from point 0: k=2 must pick 1 and 2
+    D = np.ones((4, 4)) - np.eye(4)
+    g = knn.knn_from_distances(jnp.asarray(D), k=2)
+    np.testing.assert_array_equal(np.asarray(g.indices)[0], [1, 2])
+    np.testing.assert_array_equal(np.asarray(g.indices)[3], [0, 1])
+
+
+def test_knn_from_features_matches_from_distances():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(37, 4)).astype(np.float32)
+    D = features.cdist_reference(X, metric="euclidean")
+    gd = knn.knn_from_distances(D, k=5)
+    # small row_chunk exercises the chunked (and row-padded) path
+    gf = knn.knn_from_features(jnp.asarray(X), k=5, metric="euclidean",
+                               row_chunk=8)
+    np.testing.assert_array_equal(np.asarray(gd.indices),
+                                  np.asarray(gf.indices))
+    np.testing.assert_allclose(np.asarray(gd.distances),
+                               np.asarray(gf.distances), rtol=1e-6, atol=1e-6)
+
+
+def test_knn_selection_rejects_k_beyond_n_minus_1():
+    with pytest.raises(ValueError, match="exceeds"):
+        knn.knn_from_distances(_D(5), k=5)
+    with pytest.raises(ValueError, match="exceeds"):
+        knn.knn_from_features(jnp.zeros((5, 2)), k=7)
+
+
+# ---------------------------------------------------------------------------
+# dense agreement: the k -> n-1 convergence story
+# ---------------------------------------------------------------------------
+def test_k_at_least_n_minus_1_is_dense_bitwise():
+    """At k >= n-1 the restriction is the identity; the executor runs the
+    exact dense path, so the result is BITWISE equal (k is clamped)."""
+    D = _D(20)
+    Cd = np.asarray(pald.cohesion(D, method="dense"))
+    for k in (19, 25, 10_000):
+        Ck = np.asarray(pald.cohesion(D, method="knn", k=k))
+        np.testing.assert_array_equal(Ck, Cd)
+
+
+def test_sparse_machinery_at_full_k_converges_to_dense():
+    """ops.pald_knn never short-circuits — the sparse machinery itself
+    must reproduce dense PaLD at k = n-1 (up to summation order)."""
+    D = _D(20)
+    Cd = np.asarray(pald.cohesion(D, method="dense"))
+    g, vals = ops.pald_knn(D, k=19, normalize=True)
+    Cs = np.asarray(knn.scatter_dense(g, vals))
+    np.testing.assert_allclose(Cs, Cd, rtol=1e-5, atol=1e-6)
+
+
+def test_error_shrinks_as_k_grows():
+    D = _D(24)
+    Cd = np.asarray(pald.cohesion(D, method="dense"))
+    errs = [np.abs(np.asarray(pald.cohesion(D, method="knn", k=k)) - Cd).max()
+            for k in (4, 12, 23)]
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 1e-5  # k = n-1
+
+
+# ---------------------------------------------------------------------------
+# reference conformance (tie-free and tie-heavy x all modes x impls)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k", (1, 4, 11))
+def test_knn_matches_reference_tie_free(k):
+    D = _D(17, seed=5)
+    Cref = pald_knn_reference(np.asarray(D), k)
+    C = np.asarray(pald.cohesion(D, method="knn", k=k))
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("ties", TIE_MODES)
+@pytest.mark.parametrize("impl", ("jnp", "interpret"))
+def test_knn_duplicates_all_tie_modes(ties, impl):
+    _, D = _tied_case()
+    Cref = pald_knn_reference(D, 6, ties)
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method="knn", k=6,
+                                 ties=ties, impl=impl))
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("ties", TIE_MODES)
+def test_knn_from_features_duplicates(ties):
+    X, D = _tied_case()
+    Cref = pald_knn_reference(D, 6, ties)
+    C = np.asarray(pald.from_features(jnp.asarray(X), metric="sqeuclidean",
+                                      method="knn", k=6, ties=ties))
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+
+
+def test_impls_are_bit_faithful_to_each_other():
+    D = _D(33)
+    for ties in TIE_MODES:
+        _, vj = ops.pald_knn(D, k=7, impl="jnp", ties=ties)
+        _, vi = ops.pald_knn(D, k=7, impl="interpret", ties=ties)
+        np.testing.assert_array_equal(np.asarray(vj), np.asarray(vi))
+
+
+def test_kernel_lane_padding_mask():
+    """Padded neighbor columns (the TPU lane-alignment path) must be
+    masked out of the focus count and pair weights: values computed on a
+    k-padded graph with k_valid set equal the unpadded ones."""
+    from repro.kernels.pald_knn import knn_values_pallas
+
+    D = _D(16, seed=9)
+    g = knn.knn_from_distances(D, k=5)
+    m, k = 16, 5
+    kp = 8
+    dn_p = jnp.pad(g.distances, ((0, 0), (0, kp - k)),
+                   constant_values=jnp.inf)
+    idx_p = jnp.pad(g.indices, ((0, 0), (0, kp - k)))
+    gt = knn.gather_tile_from_distances(D, g.indices)
+    vals = knn_values_pallas(g.distances, gt, g.indices, block=8, k_valid=k,
+                             ties="drop", interpret=True)
+    for gt_p in (
+        # production order: gather real k, zero-pad the tile afterwards
+        jnp.pad(gt, ((0, 0), (0, kp - k), (0, kp - k))),
+        # junk order: gather through the padded (index-0) columns
+        knn.gather_tile_from_distances(D, idx_p),
+    ):
+        vals_p = knn_values_pallas(dn_p, gt_p, idx_p, block=8, k_valid=k,
+                                   ties="drop", interpret=True)[:, :k + 1]
+        np.testing.assert_array_equal(np.asarray(vals_p), np.asarray(vals))
+
+
+# ---------------------------------------------------------------------------
+# edge cases: k = 1, tiny n, block tiling
+# ---------------------------------------------------------------------------
+def test_k1_only_nearest_neighbor_pairs():
+    D = _D(12, seed=2)
+    Cref = pald_knn_reference(np.asarray(D), 1)
+    C = np.asarray(pald.cohesion(D, method="knn", k=1))
+    np.testing.assert_allclose(C, Cref, rtol=1e-5, atol=1e-6)
+    # row x is supported only at x and its single neighbor
+    assert (np.count_nonzero(C, axis=1) <= 2).all()
+
+
+def test_tiny_n_fixed_points():
+    assert np.all(np.asarray(pald.cohesion(jnp.zeros((1, 1)),
+                                           method="knn", k=1)) == 0.0)
+    D2 = jnp.asarray([[0.0, 2.0], [2.0, 0.0]])
+    np.testing.assert_array_equal(
+        np.asarray(pald.cohesion(D2, method="knn", k=1)),
+        np.asarray(pald.cohesion(D2, method="dense")))
+
+
+@pytest.mark.parametrize("block", (4, 7, 64))
+def test_block_tiling_is_pure_chunking(block):
+    """The row tile is a memory knob, never a semantics knob."""
+    D = _D(33)
+    base = np.asarray(pald.cohesion(D, method="knn", k=6, block=16))
+    np.testing.assert_array_equal(
+        base, np.asarray(pald.cohesion(D, method="knn", k=6, block=block)))
+
+
+# ---------------------------------------------------------------------------
+# batched input through the engine's uniform (B, ...) layer
+# ---------------------------------------------------------------------------
+def test_batched_knn_distance_and_features():
+    rng = np.random.default_rng(11)
+    Xb = rng.normal(size=(3, 21, 3)).astype(np.float32)
+    Db = np.stack([np.asarray(features.cdist_reference(Xb[i])) for i in range(3)])
+    Cb = np.asarray(pald.cohesion(jnp.asarray(Db), method="knn", k=5))
+    assert Cb.shape == (3, 21, 21)
+    for i in range(3):
+        Ci = np.asarray(pald.cohesion(jnp.asarray(Db[i]), method="knn", k=5))
+        np.testing.assert_allclose(Cb[i], Ci, rtol=1e-6, atol=1e-7)
+    Cf = np.asarray(pald.from_features(jnp.asarray(Xb), method="knn", k=5))
+    assert Cf.shape == (3, 21, 21)
+    np.testing.assert_allclose(Cf, Cb, rtol=1e-5, atol=1e-6)
+    # chunked batching is a pure re-chunking
+    Cb2 = np.asarray(pald.cohesion(jnp.asarray(Db), method="knn", k=5,
+                                   batch=2))
+    np.testing.assert_array_equal(Cb, Cb2)
+
+
+# ---------------------------------------------------------------------------
+# plan layer: resolution, validation, explain
+# ---------------------------------------------------------------------------
+def test_k_pins_method_knn():
+    p = pald.plan(_D(), k=5)
+    assert p.method == "knn" and p.method_source == "k" and p.k == 5
+    assert p.block_z is None and p.impl is not None
+    pf = pald.plan(jnp.zeros((8, 3)), kind="features", k=3)
+    assert pf.method == "knn" and pf.metric == "euclidean"
+
+
+def test_k_clamps_to_n_minus_1():
+    p = pald.plan(_D(12), method="knn", k=100)
+    assert p.k == 11
+    assert p.explain()["k"] == 11
+
+
+def test_knn_validation_errors_name_alternatives():
+    D = _D(8)
+    with pytest.raises(ValueError, match="only valid with method='knn'"):
+        pald.plan(D, method="dense", k=3)
+    with pytest.raises(ValueError, match="needs k="):
+        pald.plan(D, method="knn")
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        pald.plan(D, method="knn", k=0)
+    with pytest.raises(ValueError, match="only available for method='kernel'"):
+        pald.plan(D, method="knn", k=3, schedule="tri")
+    with pytest.raises(ValueError, match="block_z= does not apply"):
+        pald.plan(D, method="knn", k=3, block_z=8)
+    with pytest.raises(ValueError, match="z_chunk= only applies"):
+        pald.plan(D, method="knn", k=3, z_chunk=4)
+    with pytest.raises(ValueError, match="explicit method"):
+        pald.plan(D, k=3, z_chunk=4)
+
+
+def test_knn_explain_contract():
+    p = pald.plan(_D(16), method="knn", k=4, block=8)
+    info = p.explain()
+    assert info["method"] == "knn" and info["k"] == 4
+    assert info["executor"].startswith("repro.kernels.ops.")
+    assert info["est_vmem_bytes_per_step"] > 0
+    # non-knn plans expose k=None, so the explain schema is uniform
+    assert pald.plan(_D(16), method="dense").explain()["k"] is None
+
+
+def test_knn_registered_cells():
+    from repro.core import engine
+
+    cells = set(engine.available_executors())
+    assert ("distance", "knn", "dense") in cells
+    assert ("features", "knn", "dense") in cells
+
+
+def test_knn_tuning_pass_key():
+    from repro.tuning.autotune import _pass_key
+
+    assert _pass_key("pald_knn", None, k=32) == "pald_knn:k32"
+    assert _pass_key("pald_knn", None, "split", k=8) == "pald_knn:k8:t-split"
+
+
+# ---------------------------------------------------------------------------
+# sparse-side utilities
+# ---------------------------------------------------------------------------
+def test_scatter_dense_layout_and_depths():
+    D = _D(14)
+    g, vals = ops.pald_knn(D, k=4, normalize=True)
+    C = np.asarray(knn.scatter_dense(g, vals))
+    v = np.asarray(vals)
+    idx = np.asarray(g.indices)
+    np.testing.assert_array_equal(np.diag(C), v[:, 0])
+    for x in range(14):
+        np.testing.assert_array_equal(C[x, idx[x]], v[x, 1:])
+    np.testing.assert_allclose(np.asarray(knn.local_depths(vals)),
+                               C.sum(axis=1), rtol=1e-6)
+
+
+def test_sparse_communities_recover_clusters():
+    """The regime the knn restriction is designed for (Baron et al.): with
+    k at least the community size, strong-tie components recover the
+    mixture; at ANY k no component ever spans two true clusters (purity —
+    the cross-cluster pairs are never neighbors, so they can never form a
+    strong tie)."""
+    rng = np.random.default_rng(0)
+    npc, c, d = 25, 4, 8
+    centers = rng.normal(size=(c, d)) * 12.0
+    X = np.concatenate([centers[i] + rng.normal(size=(npc, d))
+                        for i in range(c)])
+    labels = np.repeat(np.arange(c), npc)
+    for k in (8, 24):
+        g, vals = ops.pald_knn(jnp.asarray(X, jnp.float32), k=k,
+                               kind="features", normalize=True)
+        comms = knn.communities(g, vals)
+        for comm in comms:  # purity holds at every k
+            assert len({labels[m] for m in comm}) == 1
+        if k >= npc - 1:  # recovery needs neighborhoods covering communities
+            big = sorted(comms, key=len, reverse=True)[:c]
+            assert {labels[comm[0]] for comm in big} == set(range(c))
+            assert all(len(comm) >= 0.7 * npc for comm in big)
