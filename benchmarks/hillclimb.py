@@ -109,16 +109,21 @@ def run_blocks(args) -> None:
         kw["k"] = args.k
     rec = autotune.tune(
         args.n, getattr(args, "pass"), impl=args.impl, path=args.cache,
-        iters=args.iters, ties=args.ties, **kw,
+        iters=args.iters, ties=args.ties, time_budget=args.budget, **kw,
     )
     cache = autotune.cache_path(args.cache)
     print(f"# tuned {getattr(args, 'pass')} n={args.n} "
           f"impl={args.impl or 'default'} ties={args.ties}")
     for row in rec["grid"]:
-        mark = " <- best" if (row["block"], row["block_z"]) == (
-            rec["block"], rec["block_z"]) else ""
-        print(f"  block={row['block']:5d} block_z={row['block_z']:5d} "
-              f"{row['seconds']*1e3:10.2f} ms{mark}")
+        head = f"  block={row['block']:5d} block_z={row['block_z']:5d} "
+        if "seconds" in row:
+            mark = " <- best" if (row["block"], row["block_z"]) == (
+                rec["block"], rec["block_z"]) else ""
+            print(f"{head}{row['seconds']*1e3:10.2f} ms{mark}")
+        elif row.get("failed"):
+            print(f"{head}    FAILED: {row['error']}")
+        else:
+            print(f"{head}   skipped ({row['skipped']})")
     print(f"# cached under {cache}")
 
 
@@ -168,6 +173,9 @@ def main() -> None:
     blocks.add_argument("--block-z", default=None, help="csv candidate z tiles")
     blocks.add_argument("--iters", type=int, default=3)
     blocks.add_argument("--cache", default=None, help="tuning cache path")
+    blocks.add_argument("--budget", type=float, default=None,
+                        help="wall-seconds budget for the whole sweep; "
+                             "remaining candidates record skipped rows")
 
     methods = sub.add_parser("methods", help="tune the method crossover into the cache")
     methods.add_argument("--ns", default="64,128,256,512,1024")

@@ -293,6 +293,7 @@ def pald_distributed(
     block: int | str = "auto",
     block_z: int | str = "auto",
     ties: str = DEFAULT_TIES,
+    on_error: str = "raise",
 ) -> jnp.ndarray:
     """Compute the PaLD cohesion matrix on a device mesh.
 
@@ -323,6 +324,11 @@ def pald_distributed(
             (``repro.tuning``), keyed by the per-device problem size.
         ties: tie-handling mode on every shard body (see
             ``pald.cohesion``).
+        on_error: "raise" (default) or "fallback" — with "fallback", a
+            shard body whose per-device kernel fails at trace/lowering
+            time degrades across the remaining impls
+            (``core/resilience.guarded_general``) instead of crashing the
+            whole sharded run.
 
     Returns:
         (n, n) float32 cohesion matrix, equal to single-device
@@ -384,7 +390,8 @@ def pald_distributed(
     # call's actual rectangle.
     m_dev = m // (p if strategy in ("allgather", "ring") else pr)
     local_plan = _engine.plan_local(m_dev, impl=impl, ties=ties,
-                                    block=block, block_z=block_z)
+                                    block=block, block_z=block_z,
+                                    on_error=on_error)
 
     mesh_shape = sizes
     if strategy == "allgather":
@@ -431,6 +438,7 @@ def pald_distributed_from_features(
     block: int | str = "auto",
     block_z: int | str = "auto",
     ties: str = DEFAULT_TIES,
+    on_error: str = "raise",
 ) -> jnp.ndarray:
     """Distributed PaLD straight from row-sharded feature vectors.
 
@@ -453,7 +461,7 @@ def pald_distributed_from_features(
             The full distance matrix is never communicated; ``allgather``
             is the only strategy that materializes it (per device, by
             construction).
-        normalize / impl / block / block_z / ties: as in
+        normalize / impl / block / block_z / ties / on_error: as in
             ``pald_distributed``; ``ties`` behaves exactly as in
             ``pald.from_features``.
 
@@ -490,7 +498,8 @@ def pald_distributed_from_features(
     n_valid = n0 if m != n0 else None
 
     local_plan = _engine.plan_local(m // p, impl=impl, ties=ties,
-                                    block=block, block_z=block_z)
+                                    block=block, block_z=block_z,
+                                    on_error=on_error)
 
     if strategy == "allgather":
         body = functools.partial(

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 
 from repro.tuning import autotune as _tuner
 
+from . import resilience as _res
 from .ties import DEFAULT_TIES, validate_ties
 
 __all__ = [
@@ -57,6 +58,7 @@ __all__ = [
     "get_executor",
     "available_executors",
     "pad_distance_matrix",
+    "run_batched",
 ]
 
 DISTANCE_METHODS = ("dense", "pairwise", "triplet", "kernel", "knn")
@@ -139,6 +141,32 @@ def available_executors() -> list[tuple[str, str, str]]:
     return sorted(_EXECUTORS)
 
 
+def run_batched(fn, x, plan: "PaldPlan", batch: int | None = None):
+    """The engine's uniform batch layer: run executor ``fn`` over ``x``.
+
+    2-D input goes straight through; 3-D input is vmapped in chunks of
+    ``batch`` items (None = the whole batch in one compiled call).
+    Chunking is a pure re-partition of the same computation — results are
+    bitwise-equal for any chunk size (asserted in test_conformance.py),
+    which is what makes the OOM batch-halving retry in ``core/resilience``
+    a value-preserving degradation.
+
+    Shared by ``PaldPlan.execute`` and the degradation-chain steps so a
+    fallback attempt batches exactly like the primary attempt did.
+    """
+    if x.ndim == 2:
+        return fn(x, plan)
+    B = x.shape[0]
+    eff = B if batch is None else min(batch, B)
+    _res.fault_point("engine.batch", batch=eff, n=plan.n, kind=plan.kind,
+                     method=plan.method, impl=plan.impl)
+    single = lambda xi: fn(xi, plan)  # noqa: E731
+    if eff >= B:
+        return jax.vmap(single)(x)
+    chunks = [jax.vmap(single)(x[s:s + eff]) for s in range(0, B, eff)]
+    return jnp.concatenate(chunks, axis=0)
+
+
 # ---------------------------------------------------------------------------
 # the plan
 # ---------------------------------------------------------------------------
@@ -166,9 +194,17 @@ class PaldPlan:
     n: int                        # per-item point count
     d: int | None                 # feature dimension (features kind)
     k: int | None = None          # neighborhood size (knn method only)
+    on_error: str = "raise"       # "raise" | "fallback" (degradation chain)
     # provenance (explain)
     method_source: str = "explicit"
     block_source: str = "explicit"
+    # structured degradation events appended by core/resilience when
+    # on_error="fallback" degrades an execution; surfaced in explain().
+    # init=False keeps the frozen plan hashable/replace()-safe: derived
+    # plans start with a fresh empty log while the guard records on the
+    # plan the caller holds.
+    _events: list = dataclasses.field(
+        default_factory=list, init=False, compare=False, repr=False)
 
     # -- execution ---------------------------------------------------------
     def execute(self, x) -> jnp.ndarray:
@@ -179,19 +215,22 @@ class PaldPlan:
         (method, schedule) cell: items are vmapped in chunks of ``batch=``
         (None = whole batch in one compiled call), which bounds peak memory
         at ``batch * n^2`` floats regardless of the underlying executor.
+
+        With ``on_error="fallback"`` a failing execution degrades instead
+        of raising: OOM on the batched call retries with halved ``batch``
+        (re-chunking is bitwise-equal), any other executor failure walks
+        the cell's degradation chain (``core/resilience``) re-executing
+        with identical ties/normalize semantics.  Every degradation is
+        recorded in ``explain()["degradations"]``.
         """
         x = jnp.asarray(x)
         _check_input(x, self)
+        if self.on_error == "fallback":
+            return _res.execute_plan(self, x)
+        _res.fault_point("engine.execute", kind=self.kind, method=self.method,
+                         schedule=self.schedule, impl=self.impl)
         fn = get_executor(self.kind, self.method, self.schedule)
-        if x.ndim == 2:
-            return fn(x, self)
-        B = x.shape[0]
-        single = lambda xi: fn(xi, self)  # noqa: E731
-        if self.batch is None or self.batch >= B:
-            return jax.vmap(single)(x)
-        chunks = [jax.vmap(single)(x[s:s + self.batch])
-                  for s in range(0, B, self.batch)]
-        return jnp.concatenate(chunks, axis=0)
+        return run_batched(fn, x, self, self.batch)
 
     # -- distributed shard-body primitives ---------------------------------
     # The shard bodies in core/distributed.py call the rectangular kernel
@@ -200,16 +239,26 @@ class PaldPlan:
     def focus_general(self, DXZ, DYZ, DXY) -> jnp.ndarray:
         from repro.kernels import ops as _kops
 
-        return _kops.focus_general(DXZ, DYZ, DXY, block=self.block,
-                                   block_z=self.block_z, impl=self.impl,
-                                   ties=self.ties)
+        def call(impl):
+            return _kops.focus_general(DXZ, DYZ, DXY, block=self.block,
+                                       block_z=self.block_z, impl=impl,
+                                       ties=self.ties)
+
+        if self.on_error == "fallback":
+            return _res.guarded_general(self, "focus_general", call)
+        return call(self.impl)
 
     def cohesion_general(self, DXZ, DYZ, DXY, W, *, xwins=None) -> jnp.ndarray:
         from repro.kernels import ops as _kops
 
-        return _kops.cohesion_general(DXZ, DYZ, DXY, W, block=self.block,
-                                      block_z=self.block_z, impl=self.impl,
-                                      ties=self.ties, xwins=xwins)
+        def call(impl):
+            return _kops.cohesion_general(DXZ, DYZ, DXY, W, block=self.block,
+                                          block_z=self.block_z, impl=impl,
+                                          ties=self.ties, xwins=xwins)
+
+        if self.on_error == "fallback":
+            return _res.guarded_general(self, "cohesion_general", call)
+        return call(self.impl)
 
     # -- introspection -----------------------------------------------------
     @property
@@ -228,7 +277,9 @@ class PaldPlan:
             rely on them): the resolved ``kind`` / ``method`` /
             ``schedule`` / ``impl`` / ``block`` / ``block_z`` /
             ``z_chunk`` / ``ties`` / ``metric`` / ``normalize`` /
-            ``batch`` / ``n`` / ``d`` / ``k``, the ``padded_n`` /
+            ``batch`` / ``n`` / ``d`` / ``k`` / ``on_error`` (plus
+            ``degradations``, the guarded-execution event log), the
+            ``padded_n`` /
             ``padded_shape`` the executor will see, ``method_source`` and
             ``block_source`` provenance strings ("explicit",
             "cache:<key>", "nearest:<key>", "default", ...), the
@@ -261,10 +312,16 @@ class PaldPlan:
             "padded_shape": ((self.padded_n, self.padded_n)
                              if self.kind == "distance"
                              else (self.padded_n, self.d)),
+            "on_error": self.on_error,
             "method_source": self.method_source,
             "block_source": self.block_source,
             "executor": f"{fn.__module__}.{fn.__qualname__}",
             "est_vmem_bytes_per_step": _est_vmem_per_step(self),
+            # structured degradation events recorded by guarded execution
+            # (on_error="fallback"): dicts with cell / cause / error /
+            # fallback / retries, in occurrence order.  Empty on a plan
+            # that never degraded.
+            "degradations": list(self._events),
         }
 
 
@@ -410,6 +467,7 @@ def plan(
     batch: int | None = None,
     check: bool = False,
     k: int | None = None,
+    on_error: str = "raise",
 ) -> PaldPlan:
     """Resolve every knob exactly once and return a frozen ``PaldPlan``.
 
@@ -421,6 +479,10 @@ def plan(
     silently dropping knobs (``schedule='tri'`` off the kernel pipeline,
     ``block_z``/``impl`` on a path that has no such degree of freedom,
     ``z_chunk`` off the dense method, unknown metrics/methods/tie modes).
+    ``on_error`` selects the failure semantics: ``"raise"`` (default)
+    propagates the first executor failure unchanged, ``"fallback"`` walks
+    the cell's degradation chain (``core/resilience``) and records every
+    degradation in ``explain()["degradations"]``.
 
     One deliberate exception: ``block=`` is accepted AND ignored by
     ``method='dense'`` (the un-blocked path has no tile), so the common
@@ -433,6 +495,11 @@ def plan(
                          "(expected 'distance' or 'features')")
     if schedule not in SCHEDULES:
         raise ValueError(f"unknown schedule {schedule!r}")
+    if on_error not in _res.ON_ERROR_MODES:
+        raise ValueError(f"unknown on_error {on_error!r} (expected one of "
+                         f"{_res.ON_ERROR_MODES}): 'raise' propagates the "
+                         "first executor failure, 'fallback' walks the "
+                         "degradation chain")
     n, d = _shape_of(x, n, d, kind)
     if batch is not None and batch < 1:
         raise ValueError(f"batch must be >= 1, got {batch}")
@@ -534,7 +601,8 @@ def plan(
             kind=kind, method=method, schedule=schedule, impl=None,
             block=None, block_z=None, z_chunk=z_chunk, ties=ties,
             metric=metric, normalize=normalize, batch=batch, check=check,
-            n=n, d=d, method_source=method_source, block_source="n/a",
+            n=n, d=d, on_error=on_error, method_source=method_source,
+            block_source="n/a",
         )
     if method in ("pairwise", "triplet"):
         if block_z not in (None, "auto"):
@@ -568,7 +636,7 @@ def plan(
             kind=kind, method=method, schedule=schedule, impl=impl,
             block=block, block_z=None, z_chunk=None, ties=ties,
             metric=metric, normalize=normalize, batch=batch, check=check,
-            n=n, d=d, k=k, method_source=method_source,
+            n=n, d=d, k=k, on_error=on_error, method_source=method_source,
             block_source=block_source,
         )
     if method == "fused":
@@ -596,7 +664,8 @@ def plan(
         kind=kind, method=method, schedule=schedule, impl=impl,
         block=block, block_z=block_z, z_chunk=None, ties=ties,
         metric=metric, normalize=normalize, batch=batch, check=check,
-        n=n, d=d, method_source=method_source, block_source=block_source,
+        n=n, d=d, on_error=on_error, method_source=method_source,
+        block_source=block_source,
     )
 
 
@@ -607,6 +676,7 @@ def plan_local(
     ties: str = DEFAULT_TIES,
     block: int | str = "auto",
     block_z: int | str = "auto",
+    on_error: str = "raise",
 ) -> PaldPlan:
     """Plan for the rectangular per-device bodies of ``core/distributed``.
 
@@ -617,6 +687,9 @@ def plan_local(
     collectives overlap against).
     """
     validate_ties(ties)
+    if on_error not in _res.ON_ERROR_MODES:
+        raise ValueError(f"unknown on_error {on_error!r} (expected one of "
+                         f"{_res.ON_ERROR_MODES})")
     block_source = "explicit"
     if block == "auto" or block_z == "auto":
         rb, rbz, src = _tuner.resolve_blocks_ex(max(int(n), 1), "cohesion",
@@ -628,8 +701,8 @@ def plan_local(
         kind="distance", method="kernel", schedule="dense", impl=impl,
         block=int(block), block_z=int(block_z), z_chunk=None, ties=ties,
         metric=None, normalize=False, batch=None, check=False,
-        n=max(int(n), 1), d=None, method_source="shard-body",
-        block_source=block_source,
+        n=max(int(n), 1), d=None, on_error=on_error,
+        method_source="shard-body", block_source=block_source,
     )
 
 

@@ -128,6 +128,9 @@ def cdist_reference(X: jnp.ndarray, Y: jnp.ndarray | None = None,
     dot-product formulation of d(x, x) is only zero up to fp noise), so it
     composes with ``pald.cohesion`` without spurious self-distances.
     """
+    from .resilience import fault_point
+
+    fault_point("features.cdist", metric=metric)
     X = jnp.asarray(X, jnp.float32)
     square = Y is None
     Y = X if square else jnp.asarray(Y, jnp.float32)

@@ -70,8 +70,8 @@ def plan(x=None, **kwargs) -> PaldPlan:
             for shape-only planning.
         **kwargs: every knob of ``cohesion`` / ``from_features`` (method,
             schedule, block, block_z, z_chunk, metric, normalize, impl,
-            ties, batch, check, k) plus ``kind``/``n``/``d``; full
-            semantics in ``repro.core.engine.plan``.
+            ties, batch, check, k, on_error) plus ``kind``/``n``/``d``;
+            full semantics in ``repro.core.engine.plan``.
 
     Returns:
         A frozen ``PaldPlan``.  ``plan.execute(x)`` runs it (reusable
@@ -109,6 +109,7 @@ def cohesion(
     batch: int | None = None,
     check: bool = False,
     k: int | None = None,
+    on_error: str = "raise",
 ) -> jnp.ndarray:
     """Compute the PaLD cohesion matrix C from a distance matrix D.
 
@@ -148,6 +149,14 @@ def cohesion(
             on top of the always-on shape/zero-diagonal checks.
         k: neighborhood size, ``method="knn"`` only (k >= 1, clamped to
             n-1).  Passing ``k=`` alone pins ``method="knn"``.
+        on_error: "raise" (default) propagates the first executor failure
+            unchanged; "fallback" degrades instead of crashing — OOM on a
+            batched call halves ``batch`` down to 1, any other failure
+            walks the cell's degradation chain (impl walk, then the
+            blocked jnp paths, then the numpy reference oracle) with
+            identical ties/normalize semantics.  Degradations are
+            recorded in ``plan(...).explain()["degradations"]`` and warn
+            once per cause (``resilience.DegradationWarning``).
 
     Returns:
         C as float32, shaped like D ((n, n) or (B, n, n)).  C[x, z] is
@@ -170,7 +179,7 @@ def cohesion(
     p = _engine_plan(
         D, kind="distance", method=method, schedule=schedule, block=block,
         block_z=block_z, z_chunk=z_chunk, normalize=normalize, impl=impl,
-        ties=ties, batch=batch, check=check, k=k,
+        ties=ties, batch=batch, check=check, k=k, on_error=on_error,
     )
     return p.execute(D)
 
@@ -189,6 +198,7 @@ def from_features(
     ties: str = DEFAULT_TIES,
     check: bool = False,
     k: int | None = None,
+    on_error: str = "raise",
 ) -> jnp.ndarray:
     """PaLD cohesion straight from feature vectors.
 
@@ -226,6 +236,10 @@ def from_features(
             there.
         check: deep input validation (finiteness) on top of shape checks.
         k: neighborhood size for ``method="knn"``.
+        on_error: "raise" (default) or "fallback" — identical failure
+            semantics to ``pald.cohesion``; the feature cells degrade
+            through the materialize-D compositions before the reference
+            oracle.
 
     Returns:
         C as float32: (n, n) for 2-D X, (B, n, n) for batched input.
@@ -244,7 +258,7 @@ def from_features(
     p = _engine_plan(
         X, kind="features", metric=metric, method=method, schedule=schedule,
         block=block, block_z=block_z, normalize=normalize, impl=impl,
-        ties=ties, batch=batch, check=check, k=k,
+        ties=ties, batch=batch, check=check, k=k, on_error=on_error,
     )
     return p.execute(X)
 

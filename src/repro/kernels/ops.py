@@ -34,6 +34,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.resilience import fault_point
 from repro.core.ties import (DEFAULT_TIES, focus_weight, index_xwins,
                              square_xwins, support_weight, validate_ties)
 from repro.tuning import autotune as _tuner
@@ -367,6 +368,7 @@ def focus_general(DXZ, DYZ, DXY, *, block=128, block_z=512,
                   impl: str | None = None, ties: str = DEFAULT_TIES):
     validate_ties(ties)
     impl = impl or _default_impl()
+    fault_point("ops.focus_general", impl=impl, ties=ties)
     block, block_z = _resolve_blocks(max(DXZ.shape), "focus", block, block_z,
                                      impl, ties)
     if impl == "jnp":
@@ -393,6 +395,7 @@ def cohesion_general(DXZ, DYZ, DXY, W, *, block=128, block_z=512,
     global row identities itself (distributed callers own the offsets)."""
     validate_ties(ties)
     impl = impl or _default_impl()
+    fault_point("ops.cohesion_general", impl=impl, ties=ties)
     block, block_z = _resolve_blocks(max(DXZ.shape), "cohesion", block, block_z,
                                      impl, ties)
     if ties == "ignore" and xwins is None:
@@ -538,6 +541,7 @@ def pald_fused(
 
     validate_ties(ties)
     impl = impl or ("pallas" if on_tpu() else "jnp")
+    fault_point("ops.pald_fused", impl=impl, ties=ties)
     X = jnp.asarray(X, jnp.float32)
     n, d = X.shape
     block, block_z, _ = _tuner.resolve_fused_tiles(n, d, block, block_z,
@@ -589,6 +593,7 @@ def pald_tri(
     """
     validate_ties(ties)
     impl = impl or ("pallas" if on_tpu() else "interpret")
+    fault_point("ops.pald_tri", impl=impl, ties=ties)
     n_in = D.shape[0]
     bf, bzf = _resolve_blocks(n_in, "focus_tri", block, block_z, impl, ties)
     bc, bzc = _resolve_blocks(n_in, "cohesion_tri", block, block_z, impl, ties)
@@ -686,6 +691,7 @@ def knn_values(
     """
     validate_ties(ties)
     impl = impl or _default_impl()
+    fault_point("ops.knn_values", impl=impl, ties=ties)
     x = jnp.asarray(x, jnp.float32)
     n, k = graph.indices.shape
     if k == 0:  # n == 1 (or an explicit empty graph): no pairs, no support

@@ -1,0 +1,11 @@
+"""Test-support utilities shipped with the library.
+
+``repro.testing.faults`` is the fault-injection harness: context managers
+that arm the named fault points threaded through the engine and kernels
+(``core/resilience.fault_point``), simulate OOM, and corrupt or lock the
+tuning cache — the machinery behind ``tests/test_faults.py`` and available
+to downstream consumers hardening their own integration.
+"""
+from . import faults  # noqa: F401
+
+__all__ = ["faults"]

@@ -1,0 +1,204 @@
+"""Fault-injection harness for the guarded-execution layer.
+
+Context managers that arm the named fault points threaded through the
+engine dispatch, the kernel entry points and the feature front-end
+(``repro.core.resilience.fault_point``), plus tuning-cache corruption and
+locking helpers.  Each manager yields the armed ``FaultRule`` so a test
+can assert on ``rule.trips`` afterwards; disarming is exception-safe.
+
+    from repro.testing import faults
+
+    with faults.failing("engine.execute"):
+        pald.cohesion(D, on_error="fallback")       # chain rescues it
+
+    with faults.fail_kernel(impl="interpret", nth=2):
+        ...                                          # 2nd kernel call dies
+
+    with faults.simulate_oom(max_batch=2):
+        plan.execute(Db)                             # halves batch to 2
+
+    with faults.corrupt_tuning_cache(path):
+        pald.plan(n=256)                             # quarantine, not crash
+
+Injection sites (substring-matched): ``engine.execute`` (primary dispatch,
+strict and fallback modes), ``engine.batch`` (the chunked-vmap layer, with
+``batch=`` context for OOM predicates), ``ops.focus_general`` /
+``ops.cohesion_general`` / ``ops.pald_tri`` / ``ops.pald_fused`` /
+``ops.knn_values`` (kernel entry points, with the *resolved* ``impl=`` so
+rules can target one backend), ``features.cdist`` (the materialize-D
+front-end) and ``resilience.step`` (each degradation-chain rung).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+from typing import Callable, Iterator
+
+from repro.core import resilience as _res
+from repro.core.resilience import FaultRule, simulated_oom
+
+__all__ = [
+    "failing",
+    "fail_kernel",
+    "simulate_oom",
+    "corrupt_tuning_cache",
+    "locked_tuning_cache",
+    "reset",
+    "write_cache",
+]
+
+
+def reset() -> None:
+    """Fresh harness state: disarm every rule, forget warn-once keys."""
+    with _res._RULES_LOCK:
+        _res._RULES.clear()
+    _res.reset_warnings()
+
+
+@contextlib.contextmanager
+def failing(
+    site: str = "",
+    *,
+    exc: Callable[[], BaseException] | None = None,
+    match: dict | None = None,
+    pred: Callable[..., bool] | None = None,
+    nth: int = 1,
+    times: int | None = None,
+) -> Iterator[FaultRule]:
+    """Arm one generic fault rule for the ``with`` body.
+
+    ``site`` substring-matches the fault-point name ("" = every site);
+    ``match`` requires exact equality on context kwargs (e.g.
+    ``impl="interpret"``); ``pred`` is an arbitrary predicate over
+    ``(site=..., **ctx)``; ``nth`` is the 1-based matching call at which
+    tripping starts; ``times`` caps the number of trips (None = every
+    matching call).  ``exc`` is a zero-arg exception factory (default: a
+    RuntimeError naming the site).
+    """
+    if exc is None:
+        def exc(s=site):  # noqa: E731 - default factory names the site
+            return RuntimeError(f"injected fault at {s or '<any site>'}")
+    rule = _res.arm(FaultRule(exc=exc, site=site, match=match, pred=pred,
+                              nth=nth, times=times))
+    try:
+        yield rule
+    finally:
+        _res.disarm(rule)
+
+
+@contextlib.contextmanager
+def fail_kernel(
+    impl: str | None = None,
+    *,
+    nth: int = 1,
+    times: int | None = None,
+    exc: Callable[[], BaseException] | None = None,
+) -> Iterator[FaultRule]:
+    """Make the Nth kernel entry-point call raise.
+
+    Matches every ``ops.*`` fault point; ``impl=`` narrows to one backend
+    — the sites report the *resolved* impl, so ``impl="pallas"`` faults
+    exactly the calls a real Pallas lowering failure would kill while the
+    interpret/jnp fallback attempts run clean.
+    """
+    match = None if impl is None else {"impl": impl}
+    with failing("ops.", exc=exc, match=match, nth=nth, times=times) as rule:
+        yield rule
+
+
+@contextlib.contextmanager
+def simulate_oom(
+    site: str = "engine.batch",
+    *,
+    max_batch: int | None = None,
+    nth: int = 1,
+    times: int | None = None,
+) -> Iterator[FaultRule]:
+    """Raise a ``RESOURCE_EXHAUSTED``-shaped error at ``site``.
+
+    With ``max_batch=``, only batched calls whose chunk bound exceeds it
+    trip — modelling a device that fits ``max_batch`` items: the guard's
+    halving retry then converges to a batch the "device" accepts, instead
+    of failing forever.
+    """
+    pred = None
+    if max_batch is not None:
+        def pred(site, batch=None, **ctx):  # noqa: A002 - fault-point ctx
+            return batch is not None and batch > max_batch
+    with failing(site, exc=simulated_oom, pred=pred, nth=nth,
+                 times=times) as rule:
+        yield rule
+
+
+@contextlib.contextmanager
+def corrupt_tuning_cache(
+    path: str | None = None,
+    garbage: str = '{"tpu|pallas|1024|pald": {"block": 256, "bl',
+) -> Iterator[str]:
+    """Replace the tuning cache file with garbled bytes for the body.
+
+    The default garbage is a truncated JSON object — the realistic
+    kill-the-writer corruption.  The original file (if any) is restored on
+    exit, the quarantine sidecars the body produced are removed, and the
+    in-memory memo is invalidated both ways so the corruption is actually
+    observed.  Yields the cache path.
+    """
+    from repro.tuning import autotune as _tuner
+
+    p = os.path.abspath(_tuner.cache_path(path))
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    original = None
+    if os.path.exists(p):
+        with open(p) as f:
+            original = f.read()
+    with open(p, "w") as f:
+        f.write(garbage)
+    _tuner._MEM.pop(p, None)
+    try:
+        yield p
+    finally:
+        _tuner._MEM.pop(p, None)
+        _tuner._QUARANTINE_WARNED.discard(p)
+        for name in os.listdir(os.path.dirname(p)):
+            full = os.path.join(os.path.dirname(p), name)
+            if full.startswith(p + ".corrupt-"):
+                os.remove(full)
+        if original is None:
+            if os.path.exists(p):
+                os.remove(p)
+        else:
+            with open(p, "w") as f:
+                f.write(original)
+
+
+@contextlib.contextmanager
+def locked_tuning_cache(path: str | None = None) -> Iterator[str]:
+    """Hold the exclusive ``save_entry`` lock for the ``with`` body.
+
+    A concurrent ``save_entry`` on the same cache must wait (or, past its
+    ``lock_timeout``, warn and write unlocked) — the harness side of the
+    two-writer race tests.  No-op yield on platforms without fcntl.
+    """
+    from repro.tuning import autotune as _tuner
+
+    p = os.path.abspath(_tuner.cache_path(path))
+    if _tuner.fcntl is None:  # pragma: no cover - non-POSIX platform
+        yield p
+        return
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    with open(p + ".lock", "w") as lf:
+        _tuner.fcntl.flock(lf, _tuner.fcntl.LOCK_EX)
+        try:
+            yield p
+        finally:
+            _tuner.fcntl.flock(lf, _tuner.fcntl.LOCK_UN)
+
+
+def write_cache(path: str, records: dict) -> str:
+    """Write a well-formed cache file (test fixture helper)."""
+    p = os.path.abspath(path)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    with open(p, "w") as f:
+        json.dump(records, f, indent=1, sort_keys=True)
+    return p

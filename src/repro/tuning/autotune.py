@@ -22,15 +22,23 @@ Cache location: ``$REPRO_TUNE_CACHE`` or ``~/.cache/repro_pald/blocktune.json``.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import time
+import warnings
 from typing import Iterable, Sequence
 
 import numpy as np
 
+try:  # POSIX only; the save lock degrades to plain atomic writes without it
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX platform
+    fcntl = None
+
 _CACHE_ENV = "REPRO_TUNE_CACHE"
 _MEM: dict[str, tuple[float, dict]] = {}  # abspath -> (mtime, data)
+_QUARANTINE_WARNED: set[str] = set()  # abspaths that already warned
 
 # passes understood by `tune`; each maps to one kernel-pipeline entry point
 PASSES = ("focus", "cohesion", "focus_tri", "cohesion_tri", "pald",
@@ -76,6 +84,44 @@ def _split_key(key: str) -> tuple[str, str, int, str]:
     return backend, impl, int(n), pass_
 
 
+def _quarantine(p: str, exc: Exception) -> str | None:
+    """Move a corrupt cache aside to ``<path>.corrupt-<ts>`` and warn once.
+
+    A truncated/garbled JSON must not be silently treated as an empty
+    cache forever — the corrupt bytes are preserved for inspection, the
+    path starts fresh, and the one warning names both."""
+    dest = f"{p}.corrupt-{time.strftime('%Y%m%dT%H%M%S')}"
+    try:
+        os.replace(p, dest)
+    except OSError:  # racing writer already replaced it; nothing to move
+        dest = None
+    if p not in _QUARANTINE_WARNED:
+        _QUARANTINE_WARNED.add(p)
+        where = f"; corrupt file preserved at {dest}" if dest else ""
+        warnings.warn(
+            f"tuning cache {p} is corrupt ({type(exc).__name__}: {exc}); "
+            f"starting a fresh cache{where}", stacklevel=3)
+    return dest
+
+
+def _read_cache_file(p: str) -> dict:
+    """One fresh read of the cache file (no mtime memo): {} when missing,
+    quarantine + {} when corrupt."""
+    try:
+        with open(p) as f:
+            data = json.load(f)
+        if not isinstance(data, dict):
+            raise ValueError(
+                f"expected a JSON object of records, got "
+                f"{type(data).__name__}")
+    except OSError:
+        return {}
+    except ValueError as exc:
+        _quarantine(p, exc)
+        return {}
+    return data
+
+
 def load_cache(path: str | None = None) -> dict:
     p = os.path.abspath(cache_path(path))
     try:
@@ -85,27 +131,66 @@ def load_cache(path: str | None = None) -> dict:
     hit = _MEM.get(p)
     if hit and hit[0] == mtime:
         return hit[1]
-    try:
-        with open(p) as f:
-            data = json.load(f)
-    except (OSError, ValueError):
-        return {}
-    _MEM[p] = (mtime, data)
+    data = _read_cache_file(p)
+    try:  # the quarantine may have moved the file away
+        _MEM[p] = (os.path.getmtime(p), data)
+    except OSError:
+        _MEM.pop(p, None)
     return data
 
 
+@contextlib.contextmanager
+def _save_lock(p: str, timeout: float):
+    """Exclusive advisory lock on ``<path>.lock`` for the save RMW cycle.
+
+    Yields True when the lock is held.  On a non-POSIX platform (no fcntl)
+    or when ``timeout`` expires (a peer died holding the lock, or is
+    tuning a pathologically slow cell) the save proceeds UNLOCKED with a
+    warning — losing a peer's concurrent entry beats deadlocking the
+    tuner.  The sidecar (never the data file) is locked so the atomic
+    ``os.replace`` of the data never invalidates anyone's lock fd."""
+    if fcntl is None:
+        yield False
+        return
+    with open(p + ".lock", "w") as lf:
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                fcntl.flock(lf, fcntl.LOCK_EX | fcntl.LOCK_NB)
+                break
+            except OSError:
+                if time.monotonic() >= deadline:
+                    warnings.warn(
+                        f"could not lock tuning cache {p} within {timeout}s; "
+                        "saving without the lock (a concurrent writer's "
+                        "entry may be lost)", stacklevel=4)
+                    yield False
+                    return
+                time.sleep(0.02)
+        try:
+            yield True
+        finally:
+            fcntl.flock(lf, fcntl.LOCK_UN)
+
+
 def save_entry(backend: str, impl: str, n: int, pass_: str, record: dict,
-               path: str | None = None) -> str:
-    """Merge one record into the cache (atomic write); returns the key."""
+               path: str | None = None, *, lock_timeout: float = 10.0) -> str:
+    """Merge one record into the cache (atomic write); returns the key.
+
+    The read-modify-write cycle runs under an ``fcntl`` lock and re-reads
+    the file fresh inside it, so two concurrent tuners (e.g. parallel
+    ``hillclimb`` processes) merge instead of losing each other's rows.
+    """
     p = os.path.abspath(cache_path(path))
-    data = dict(load_cache(path))
     key = _key(backend, impl, n, pass_)
-    data[key] = record
     os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
-    tmp = p + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(data, f, indent=1, sort_keys=True)
-    os.replace(tmp, p)
+    with _save_lock(p, lock_timeout):
+        data = _read_cache_file(p)  # fresh under the lock: merge, not clobber
+        data[key] = record
+        tmp = f"{p}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, p)
     _MEM[p] = (os.path.getmtime(p), data)
     return key
 
@@ -141,6 +226,15 @@ def _default_backend() -> str:
 
 def _default_impl(backend: str) -> str:
     return "pallas" if backend == "tpu" else "jnp"
+
+
+def _valid_tile(v) -> bool:
+    """A usable cached tile: an integral number > 0 (bool excluded).  A
+    hand-edited or bit-flipped cache must degrade to defaults at lookup,
+    never raise mid-``plan()``."""
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        return False
+    return float(v) == int(v) and int(v) > 0
 
 
 def _default_blocks(n: int, pass_: str) -> tuple[int, int]:
@@ -181,20 +275,30 @@ def resolve_blocks_ex(
     impl = impl or _default_impl(backend)
     base = _pass_key(pass_, d, k=k)
     keyed = _pass_key(pass_, d, ties, k=k)
+    quarantined = None
     for pk in dict.fromkeys((keyed, base)):  # tie-mode cell first, then strict
         rec = lookup(backend, impl, n, pk, path)
-        source = f"cache:{_key(backend, impl, n, pk)}"
+        key = _key(backend, impl, n, pk)
+        source = f"cache:{key}"
         if rec is None:
             near = lookup_nearest(backend, impl, n, pk, path)
             if near:
                 rec = near[1]
-                source = f"nearest:{_key(backend, impl, near[0], pk)}"
-        if rec and "block" in rec:
-            return (max(min(int(rec["block"]), n), 1),
-                    max(min(int(rec.get("block_z", rec["block"])), n), 1),
-                    source)
+                key = _key(backend, impl, near[0], pk)
+                source = f"nearest:{key}"
+        if isinstance(rec, dict) and "block" in rec:
+            bz_rec = rec.get("block_z", rec["block"])
+            if _valid_tile(rec["block"]) and _valid_tile(bz_rec):
+                return (max(min(int(rec["block"]), n), 1),
+                        max(min(int(bz_rec), n), 1),
+                        source)
+            # wrong-typed / non-positive tiles: fall through to defaults
+            # with the quarantine provenance instead of raising mid-plan()
+            quarantined = quarantined or f"quarantined:{key}"
+        elif rec is not None:
+            quarantined = quarantined or f"quarantined:{key}"
     b, bz = _default_blocks(n, pass_)
-    return b, bz, "default"
+    return b, bz, quarantined or "default"
 
 
 def resolve_blocks(
@@ -347,6 +451,7 @@ def tune(
     d: int | None = None,
     ties: str = "drop",
     k: int | None = None,
+    time_budget: float | None = None,
 ) -> dict:
     """Measure the candidate grid for one (n, pass, impl) cell and record the
     argmin.  Returns the record that was (or would be) cached.
@@ -357,7 +462,15 @@ def tune(
     ``pass_="pald_knn"`` the neighborhood size ``k`` (default 16) joins it
     the same way (``pald_knn:k<k>``); that pass has no z tile, so only the
     row-block axis of the grid is swept.  Non-default ``ties`` modes are
-    keyed separately too (their tile bodies differ)."""
+    keyed separately too (their tile bodies differ).
+
+    The sweep is guarded per candidate: a crashing candidate records a
+    ``{"failed": True, "error": ...}`` row and the grid continues; once
+    ``time_budget`` (wall seconds for the whole sweep, checked between
+    candidates — a single in-flight measurement cannot be preempted)
+    is exceeded, remaining candidates record ``{"skipped": "over-budget"}``
+    rows.  The argmin is taken over the successful rows only; if every
+    candidate failed, RuntimeError (nothing worth caching)."""
     backend = backend or _default_backend()
     impl = impl or _default_impl(backend)
     if pass_ == "pald_fused" and d is None:
@@ -370,12 +483,33 @@ def tune(
         d=d if d is not None else 8, with_distances=pass_ != "pald_fused",
     )
     rows = []
+    t0 = time.monotonic()
+    over_budget = False
     for b in sorted({min(b, n) for b in blocks}):
         for bz in sorted({min(z, n) for z in blocks_z}):
-            t = time_fn(lambda: _runner(pass_, D, W, X, b, bz, impl, ties, k),
-                        iters=iters)
-            rows.append({"block": b, "block_z": bz, "seconds": round(t, 6)})
-    best = min(rows, key=lambda r: r["seconds"])
+            if over_budget:
+                rows.append({"block": b, "block_z": bz,
+                             "skipped": "over-budget"})
+                continue
+            try:
+                t = time_fn(
+                    lambda: _runner(pass_, D, W, X, b, bz, impl, ties, k),
+                    iters=iters)
+            except Exception as exc:  # noqa: BLE001 - one bad candidate
+                rows.append({"block": b, "block_z": bz, "failed": True,
+                             "error": f"{type(exc).__name__}: {exc}"})
+            else:
+                rows.append({"block": b, "block_z": bz,
+                             "seconds": round(t, 6)})
+            if time_budget is not None and time.monotonic() - t0 > time_budget:
+                over_budget = True
+    ok = [r for r in rows if "seconds" in r]
+    if not ok:
+        raise RuntimeError(
+            f"every candidate failed for (n={n}, pass={pass_!r}, "
+            f"impl={impl!r}); first error: "
+            f"{next(r['error'] for r in rows if r.get('failed'))}")
+    best = min(ok, key=lambda r: r["seconds"])
     record = {
         "block": best["block"],
         "block_z": best["block_z"],
@@ -413,14 +547,22 @@ def tune_methods(
     out = []
     for n in ns:
         D, _, _X = _synthetic_inputs(n)
-        timings = {}
+        timings, failed = {}, {}
         for m in methods:
-            timings[m] = round(
-                time_fn(lambda: pald.cohesion(D, method=m), iters=iters), 6
-            )
+            try:
+                timings[m] = round(
+                    time_fn(lambda: pald.cohesion(D, method=m), iters=iters),
+                    6)
+            except Exception as exc:  # noqa: BLE001 - one bad method
+                failed[m] = f"{type(exc).__name__}: {exc}"
+        if not timings:
+            raise RuntimeError(
+                f"every method failed at n={n}: {failed}")
         best = min(timings, key=timings.get)
         record = {"method": best, "timings": timings,
                   "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S")}
+        if failed:
+            record["failed"] = failed
         if save:
             save_entry(backend, _METHOD_IMPL, n, "method", record, path)
         out.append({"n": n, **record})
@@ -434,15 +576,24 @@ def method_for_ex(n: int, *, backend: str | None = None,
     "heuristic")."""
     backend = backend or _default_backend()
     rec = lookup(backend, _METHOD_IMPL, n, "method", path)
-    source = f"cache:{_key(backend, _METHOD_IMPL, n, 'method')}"
+    key = _key(backend, _METHOD_IMPL, n, "method")
+    source = f"cache:{key}"
     if rec is None:
         near = lookup_nearest(backend, _METHOD_IMPL, n, "method", path)
         if near:
             rec = near[1]
-            source = f"nearest:{_key(backend, _METHOD_IMPL, near[0], 'method')}"
-    if rec and rec.get("method"):
-        return str(rec["method"]), source
-    return ("dense" if n <= 256 else "triplet"), "heuristic"
+            key = _key(backend, _METHOD_IMPL, near[0], "method")
+            source = f"nearest:{key}"
+    fallback = "dense" if n <= 256 else "triplet"
+    if rec is None:
+        return fallback, "heuristic"
+    # auto-selectable methods only: an edited/corrupted record must not
+    # make plan() pick knn (needs k=) or an unknown string — fall to the
+    # heuristic with quarantine provenance instead of raising mid-plan()
+    m = rec.get("method") if isinstance(rec, dict) else None
+    if m in ("dense", "pairwise", "triplet", "kernel"):
+        return str(m), source
+    return fallback, f"quarantined:{key}"
 
 
 def method_for(n: int, *, backend: str | None = None,

@@ -263,3 +263,81 @@ def test_plan_local_resolves_tiles_and_forwards():
         C, np.asarray(kops.cohesion_general(D, D, D, W, impl="jnp",
                                             block=lp.block,
                                             block_z=lp.block_z)))
+
+
+# ---------------------------------------------------------------------------
+# on_error: the guarded-execution knob at the plan layer (ISSUE 6)
+# ---------------------------------------------------------------------------
+def test_on_error_knob_is_validated_at_plan_time():
+    D = _D()
+    for bad in ("retry", "ignore", "", None, 3):
+        with pytest.raises((ValueError, TypeError),
+                           match="unknown on_error|expected one of"):
+            pald.plan(D, on_error=bad)
+    with pytest.raises(ValueError, match="'raise', 'fallback'"):
+        engine.plan_local(32, on_error="never")
+
+
+def test_on_error_threads_through_every_facade():
+    D = _D()
+    X = jnp.asarray(np.random.default_rng(0).normal(size=(12, 3)),
+                    jnp.float32)
+    assert pald.plan(D, on_error="fallback").on_error == "fallback"
+    assert engine.plan_local(32, on_error="fallback").on_error == "fallback"
+    # facade one-shots accept it too (they build the plan internally)
+    np.testing.assert_array_equal(
+        np.asarray(pald.cohesion(D, on_error="fallback")),
+        np.asarray(pald.cohesion(D)))
+    np.testing.assert_array_equal(
+        np.asarray(pald.from_features(X, on_error="fallback")),
+        np.asarray(pald.from_features(X)))
+
+
+def test_strict_mode_propagates_the_original_error_object():
+    from repro.testing import faults
+    D = _D()
+    p = pald.plan(D, method="kernel")  # on_error="raise" is the default
+    boom = ValueError("lowering exploded")
+    with faults.failing("engine.execute", exc=lambda: boom):
+        with pytest.raises(ValueError) as ei:
+            p.execute(D)
+    assert ei.value is boom  # untouched: no wrapping, no chain walk
+    assert p.explain()["degradations"] == []
+    faults.reset()
+
+
+def test_fallback_exhausted_message_names_cell_and_chain():
+    """The terminal error is the debugging surface: it must carry the
+    failing cell, the primary cause, and every step that was attempted."""
+    from repro.core import resilience
+    from repro.testing import faults
+    D = _D(17)
+    p = pald.plan(D, method="kernel", on_error="fallback")
+    with faults.failing(""):  # every site: nothing can rescue it
+        with pytest.raises(resilience.FallbackExhausted) as ei:
+            p.execute(D)
+    msg = str(ei.value)
+    for frag in ("every fallback failed for cell",
+                 "('distance', 'kernel', 'dense')",
+                 "primary raised RuntimeError",
+                 "degradation chain attempted",
+                 "reference"):
+        assert frag in msg, (frag, msg)
+    assert isinstance(ei.value.__cause__, RuntimeError)
+    faults.reset()
+
+
+def test_oom_retry_floor_is_recorded_before_degrading():
+    """An OOM that persists at batch=1 must say so (the "oom-floor" event)
+    rather than looping forever or reporting a generic failure."""
+    from repro.testing import faults
+    D = _D(12)
+    Db = jnp.stack([D, D, D])
+    p = pald.plan(D, method="kernel", batch=2, on_error="fallback")
+    with faults.simulate_oom():  # every batch size "fails to fit"
+        C = p.execute(Db)
+    causes = [e["cause"] for e in p.explain()["degradations"]]
+    assert "oom-floor" in causes
+    np.testing.assert_allclose(np.asarray(C), np.asarray(p.execute(Db)),
+                               rtol=1e-5, atol=1e-6)
+    faults.reset()

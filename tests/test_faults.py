@@ -1,0 +1,324 @@
+"""Fault-injection tests: guarded execution under forced failures.
+
+Driven by the ``repro.testing.faults`` harness, this file proves the
+acceptance contract of the resilience layer (DESIGN.md §13):
+
+* with Pallas forced to fail, every registered (kind, method, schedule)
+  cell in fallback mode returns results bitwise-equal to its un-faulted
+  run, with a recorded degradation event where a degradation happened;
+* ``on_error="raise"`` (the default) re-raises the original exception;
+* injected OOM on a batched call succeeds after halving ``batch`` —
+  bitwise-equal, because re-chunking is a pure re-partition;
+* exhausting the whole chain raises ``FallbackExhausted`` whose message
+  names the cell, the original error, and every attempted step.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine, pald, resilience
+from repro.testing import faults
+
+
+@pytest.fixture(autouse=True)
+def _fresh_harness():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+def _D(n=17, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 3))
+    D = np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1))
+    np.fill_diagonal(D, 0.0)
+    return jnp.asarray(D, jnp.float32)
+
+
+def _X(n=17, d=3, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(n, d)),
+                       jnp.float32)
+
+
+def _plan_for_cell(kind, method, schedule, *, n=17, d=3,
+                   on_error="fallback"):
+    kw = dict(kind=kind, method=method, schedule=schedule, n=n,
+              on_error=on_error)
+    if method == "knn":
+        kw["k"] = 5
+    if kind == "features":
+        kw["d"] = d
+    return pald.plan(**kw)
+
+
+def _input_for(kind):
+    return _X() if kind == "features" else _D()
+
+
+CELLS = engine.available_executors()
+_IDS = ["-".join(c) for c in CELLS]
+
+
+# ---------------------------------------------------------------------------
+# the acceptance sweep: every registered cell
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cell", CELLS, ids=_IDS)
+def test_pallas_fault_bitwise_identical_everywhere(cell):
+    """Failing every pallas-impl call leaves every cell's fallback-mode
+    result bitwise-equal to its un-faulted run — off-TPU trivially (no
+    pallas dispatch, no degradation), on TPU via the recorded chain."""
+    x = _input_for(cell[0])
+    baseline = np.asarray(_plan_for_cell(*cell).execute(x))
+    p = _plan_for_cell(*cell)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.fail_kernel(impl="pallas"):
+            out = np.asarray(p.execute(x))
+    np.testing.assert_array_equal(out, baseline)
+    events = p.explain()["degradations"]
+    if jax.default_backend() == "tpu":
+        assert events and events[-1]["cause"] == "executor-failure"
+    else:
+        assert events == []
+
+
+@pytest.mark.parametrize("cell", CELLS, ids=_IDS)
+def test_primary_failure_walks_chain_with_identical_semantics(cell):
+    """Kill each cell's primary dispatch once: the chain must rescue it,
+    record exactly one degradation event, and the result must be
+    bitwise-equal to an un-faulted run of the very step that rescued it
+    (the identical-ties/normalize re-execution contract) and tightly close
+    to the primary's own un-faulted answer."""
+    x = _input_for(cell[0])
+    clean = _plan_for_cell(*cell)
+    baseline = np.asarray(clean.execute(x))
+    p = _plan_for_cell(*cell)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.failing("engine.execute", times=1) as rule:
+            out = np.asarray(p.execute(x))
+    assert rule.trips == 1
+    events = p.explain()["degradations"]
+    assert len(events) == 1
+    evt = events[0]
+    assert evt["cause"] == "executor-failure"
+    assert evt["cell"] == cell
+    assert "injected fault" in evt["error"]
+    # bitwise against the rescuing step, re-run without faults
+    step = next(s for s in resilience.chain_for(p)
+                if s.label == evt["fallback"])
+    expected = np.asarray(step.run(x, clean, None))
+    np.testing.assert_array_equal(out, expected)
+    # and numerically the same answer as the primary would have given
+    np.testing.assert_allclose(out, baseline, rtol=1e-5, atol=1e-6)
+
+
+def test_fallback_plan_without_faults_changes_nothing():
+    D = _D()
+    strict = np.asarray(pald.cohesion(D, method="kernel"))
+    p = pald.plan(D, method="kernel", on_error="fallback")
+    np.testing.assert_array_equal(np.asarray(p.execute(D)), strict)
+    assert p.explain()["degradations"] == []
+
+
+# ---------------------------------------------------------------------------
+# strict mode: pre-existing semantics, untouched
+# ---------------------------------------------------------------------------
+def test_strict_mode_reraises_the_original_exception():
+    D = _D()
+    with faults.failing("engine.execute",
+                       exc=lambda: RuntimeError("kernel exploded")):
+        with pytest.raises(RuntimeError, match="kernel exploded"):
+            pald.cohesion(D, method="kernel")  # on_error defaults to raise
+
+
+def test_strict_mode_does_not_retry_oom():
+    B = jnp.stack([_D(seed=s) for s in range(4)])
+    p = pald.plan(_D(), method="kernel", batch=4)
+    with faults.simulate_oom(max_batch=1):
+        with pytest.raises(RuntimeError, match="RESOURCE_EXHAUSTED"):
+            p.execute(B)
+
+
+def test_unknown_on_error_rejected_at_plan_time():
+    with pytest.raises(ValueError, match="on_error"):
+        pald.plan(n=16, on_error="retry")
+    with pytest.raises(ValueError, match="on_error"):
+        engine.plan_local(16, on_error="never")
+
+
+# ---------------------------------------------------------------------------
+# OOM-aware batching
+# ---------------------------------------------------------------------------
+def test_oom_halves_batch_until_it_fits_bitwise():
+    B = jnp.stack([_D(seed=s) for s in range(5)])
+    clean = pald.plan(_D(), method="kernel", batch=4, on_error="fallback")
+    baseline = np.asarray(clean.execute(B))
+    p = pald.plan(_D(), method="kernel", batch=4, on_error="fallback")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.simulate_oom(max_batch=1):  # "device" fits 1 item
+            out = np.asarray(p.execute(B))
+    np.testing.assert_array_equal(out, baseline)  # re-chunking is bitwise
+    events = p.explain()["degradations"]
+    assert [e["cause"] for e in events] == ["oom", "oom"]  # 4 -> 2 -> 1
+    assert [e["batch"] for e in events] == [2, 1]
+
+
+def test_oom_at_the_floor_degrades_to_the_chain():
+    B = jnp.stack([_D(seed=s) for s in range(4)])
+    clean = pald.plan(_D(), method="kernel", batch=4, on_error="fallback")
+    baseline = np.asarray(clean.execute(B))
+    p = pald.plan(_D(), method="kernel", batch=4, on_error="fallback")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.simulate_oom():  # every batched call OOMs, batch=1 too
+            out = np.asarray(p.execute(B))
+    causes = [e["cause"] for e in p.explain()["degradations"]]
+    assert "oom-floor" in causes  # the retry floor was hit and recorded
+    final = p.explain()["degradations"][-1]
+    # only the reference oracle doesn't go through the batch layer
+    assert final["cause"] == "executor-failure"
+    assert final["fallback"] == "reference"
+    np.testing.assert_allclose(out, baseline, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# exhaustion: the error message is the debugging surface
+# ---------------------------------------------------------------------------
+def test_fallback_exhausted_names_cell_cause_and_every_step():
+    D = _D()
+    p = pald.plan(D, method="kernel", on_error="fallback")
+    with faults.failing(""):  # every site: primary, chain steps, reference
+        with pytest.raises(resilience.FallbackExhausted) as ei:
+            p.execute(D)
+    msg = str(ei.value)
+    for frag in (
+        "every fallback failed for cell",
+        "('distance', 'kernel', 'dense')",
+        "primary raised RuntimeError: injected fault",
+        "degradation chain attempted",
+        "impl:jnp",
+        "method:triplet",
+        "method:dense",
+        "reference",
+    ):
+        assert frag in msg, f"missing {frag!r} in {msg!r}"
+    # chained from the original failure: the root cause stays on the trace
+    assert isinstance(ei.value.__cause__, RuntimeError)
+
+
+def test_features_chain_exhausts_when_distance_frontend_is_dead():
+    """Every non-fused features path (materialize compositions AND the
+    reference oracle) funnels through cdist — killing it must exhaust."""
+    X = _X()
+    p = pald.plan(X, kind="features", method="pairwise", on_error="fallback")
+    with faults.failing("features.cdist"):
+        with pytest.raises(resilience.FallbackExhausted) as ei:
+            p.execute(X)
+    assert "('features', 'pairwise', 'dense')" in str(ei.value)
+
+
+def test_knn_chain_is_impl_only():
+    """No other path shares knn's sparse semantics: its chain must never
+    degrade onto a dense method (which would silently change cost and,
+    below k=n-1, values)."""
+    p = _plan_for_cell("distance", "knn", "dense")
+    labels = [s.label for s in resilience.chain_for(p)]
+    assert labels and all(lb.startswith("impl:") for lb in labels)
+
+
+# ---------------------------------------------------------------------------
+# degradation events + once-per-cause warnings
+# ---------------------------------------------------------------------------
+def test_degradation_warns_once_per_cause_then_stays_quiet():
+    D = _D()
+    p = pald.plan(D, method="kernel", on_error="fallback")
+    with faults.failing("engine.execute"):
+        with pytest.warns(resilience.DegradationWarning,
+                          match="degraded to impl:jnp"):
+            p.execute(D)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # any further warning -> failure
+            p.execute(D)  # same cause again: logged in events, not warned
+    assert len(p.explain()["degradations"]) == 2
+
+
+def test_explain_surfaces_on_error_and_degradations():
+    p = pald.plan(n=16, method="kernel", on_error="fallback")
+    info = p.explain()
+    assert info["on_error"] == "fallback"
+    assert info["degradations"] == []
+    # events are snapshots: mutating the returned list must not alias
+    info["degradations"].append("junk")
+    assert p.explain()["degradations"] == []
+
+
+# ---------------------------------------------------------------------------
+# distributed shard bodies route through the same guard
+# ---------------------------------------------------------------------------
+def test_distributed_shard_bodies_degrade_across_impls():
+    from jax.sharding import Mesh
+
+    from repro.core import distributed
+
+    D = _D(n=32, seed=3)
+    mesh = Mesh(np.asarray(jax.devices()[:4]), ("dev",))
+    baseline = np.asarray(
+        distributed.pald_distributed(D, mesh, strategy="ring"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.failing("ops.", match={"impl": "jnp"}) as rule:
+            out = np.asarray(distributed.pald_distributed(
+                D, mesh, strategy="ring", on_error="fallback"))
+    assert rule.trips >= 1  # the shard bodies really hit the fault
+    np.testing.assert_allclose(out, baseline, rtol=1e-5, atol=1e-6)
+
+
+def test_distributed_strict_mode_still_raises():
+    from jax.sharding import Mesh
+
+    from repro.core import distributed
+
+    D = _D(n=32, seed=3)
+    mesh = Mesh(np.asarray(jax.devices()[:4]), ("dev",))
+    with faults.failing("ops.", match={"impl": "jnp"}):
+        with pytest.raises(RuntimeError, match="injected fault"):
+            distributed.pald_distributed(D, mesh, strategy="ring")
+
+
+# ---------------------------------------------------------------------------
+# corrupted tuning state: provenance changes, values never
+# ---------------------------------------------------------------------------
+def test_corrupt_tuning_cache_changes_only_provenance(tmp_path, monkeypatch):
+    cache = tmp_path / "blocktune.json"
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(cache))
+    D = _D(n=20, seed=7)
+    p_fresh = pald.plan(D, method="kernel", block="auto")
+    baseline = np.asarray(p_fresh.execute(D))
+    assert p_fresh.explain()["block_source"] == "default"
+
+    # truncated JSON: quarantined at load, resolution falls to the same
+    # defaults -> bitwise-identical values
+    cache.write_text('{"truncated": ')
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        p_corrupt = pald.plan(D, method="kernel", block="auto")
+    np.testing.assert_array_equal(np.asarray(p_corrupt.execute(D)), baseline)
+    assert p_corrupt.explain()["block_source"] == "default"
+    assert list(tmp_path.glob("*.corrupt-*")), "corrupt file not quarantined"
+
+    # wrong-typed record: provenance flips to quarantined:<key>, values not
+    backend = jax.default_backend()
+    bad = {"block": -8, "block_z": "nope"}
+    faults.write_cache(str(cache), {
+        f"{backend}|jnp|20|pald": bad,
+        f"{backend}|interpret|20|pald": bad,
+    })
+    p_bad = pald.plan(D, method="kernel", block="auto")
+    assert p_bad.explain()["block_source"].startswith("quarantined:")
+    np.testing.assert_array_equal(np.asarray(p_bad.execute(D)), baseline)

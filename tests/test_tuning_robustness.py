@@ -1,0 +1,225 @@
+"""Robustness of the persistent tuning cache (tuning/autotune.py).
+
+Satellites of the guarded-execution PR: corrupt-cache quarantine, the
+locked merge-on-save RMW cycle (two concurrent hillclimb processes must
+not lose each other's entries), record validation at lookup, and the
+per-candidate failure/time budgets of ``tune``.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+from pathlib import Path
+
+import pytest
+
+import repro
+from repro.testing import faults
+from repro.tuning import autotune
+
+
+@pytest.fixture(autouse=True)
+def _fresh_harness():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+def _path(tmp_path, name="blocktune.json"):
+    return str(tmp_path / name)
+
+
+# ---------------------------------------------------------------------------
+# corrupt JSON: warn once, quarantine, start fresh
+# ---------------------------------------------------------------------------
+def test_truncated_cache_is_quarantined_not_swallowed(tmp_path):
+    p = _path(tmp_path)
+    Path(p).write_text('{"cpu|jnp|256|pald": {"block": 64, "bl')  # truncated
+    with pytest.warns(UserWarning, match="corrupt"):
+        assert autotune.load_cache(p) == {}
+    moved = list(tmp_path.glob("blocktune.json.corrupt-*"))
+    assert len(moved) == 1
+    assert moved[0].read_text().startswith('{"cpu|jnp|256|pald"')
+    assert not os.path.exists(p)  # fresh start
+    # the path works normally again
+    autotune.save_entry("cpu", "jnp", 64, "pald",
+                        {"block": 32, "block_z": 32}, p)
+    assert "cpu|jnp|64|pald" in autotune.load_cache(p)
+
+
+def test_corrupt_cache_warns_exactly_once(tmp_path):
+    p = _path(tmp_path)
+    Path(p).write_text("not json at all")
+    with pytest.warns(UserWarning, match="corrupt"):
+        autotune.load_cache(p)
+    Path(p).write_text("still not json")
+    autotune._MEM.pop(os.path.abspath(p), None)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a second warning would fail
+        assert autotune.load_cache(p) == {}
+
+
+def test_non_object_json_is_corrupt_too(tmp_path):
+    p = _path(tmp_path)
+    Path(p).write_text("[1, 2, 3]")  # valid JSON, wrong shape
+    with pytest.warns(UserWarning, match="corrupt"):
+        assert autotune.load_cache(p) == {}
+
+
+# ---------------------------------------------------------------------------
+# save_entry: locked merge-on-save
+# ---------------------------------------------------------------------------
+def test_two_processes_merge_instead_of_losing_entries(tmp_path):
+    """The regression this PR fixes: two concurrent writers used to race
+    the read-modify-write cycle and clobber each other's entries."""
+    p = _path(tmp_path)
+    src = str(Path(next(iter(repro.__path__))).resolve().parent)
+    script = textwrap.dedent("""
+        import sys
+        from repro.tuning import autotune
+        tag, path = sys.argv[1], sys.argv[2]
+        for i in range(1, 16):
+            autotune.save_entry("cpu", tag, i, "pald",
+                                {"block": 8, "block_z": 8}, path)
+    """)
+    env = {**os.environ, "PYTHONPATH": src}
+    procs = [subprocess.Popen([sys.executable, "-c", script, tag, p], env=env)
+             for tag in ("writer-a", "writer-b")]
+    for proc in procs:
+        assert proc.wait(timeout=120) == 0
+    data = json.loads(Path(p).read_text())
+    assert len(data) == 30  # every entry from both writers survived
+
+
+def test_save_entry_merges_a_peers_entry_written_meanwhile(tmp_path):
+    p = _path(tmp_path)
+    autotune.save_entry("cpu", "jnp", 64, "pald",
+                        {"block": 32, "block_z": 32}, p)
+    # a peer process writes behind our back (bypassing this process's memo)
+    data = json.loads(Path(p).read_text())
+    data["cpu|jnp|128|pald"] = {"block": 64, "block_z": 64}
+    Path(p).write_text(json.dumps(data))
+    autotune.save_entry("cpu", "jnp", 256, "pald",
+                        {"block": 128, "block_z": 128}, p)
+    merged = json.loads(Path(p).read_text())
+    assert set(merged) == {"cpu|jnp|64|pald", "cpu|jnp|128|pald",
+                           "cpu|jnp|256|pald"}
+
+
+def test_save_under_held_lock_times_out_with_warning_but_writes(tmp_path):
+    p = _path(tmp_path)
+    with faults.locked_tuning_cache(p):
+        with pytest.warns(UserWarning, match="could not lock"):
+            autotune.save_entry("cpu", "jnp", 64, "pald",
+                                {"block": 32, "block_z": 32}, p,
+                                lock_timeout=0.2)
+    assert "cpu|jnp|64|pald" in json.loads(Path(p).read_text())
+
+
+# ---------------------------------------------------------------------------
+# record validation at lookup: quarantined provenance, never a raise
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bad", [
+    {"block": -8, "block_z": 64},       # non-positive
+    {"block": 0, "block_z": 64},        # zero
+    {"block": "64", "block_z": 64},     # wrong type
+    {"block": True, "block_z": 64},     # bool is not a tile
+    {"block": 64, "block_z": 2.5},      # non-integral float
+    {"no_block_at_all": 1},             # missing the tile entirely
+])
+def test_invalid_tile_records_fall_back_with_quarantine_provenance(
+        tmp_path, bad):
+    p = _path(tmp_path)
+    key = "cpu|jnp|128|pald"
+    faults.write_cache(p, {key: bad})
+    b, bz, src = autotune.resolve_blocks_ex(128, "pald", impl="jnp",
+                                            backend="cpu", path=p)
+    db, dbz = autotune._default_blocks(128, "pald")
+    assert (b, bz) == (db, dbz)  # the values a fresh cache would give
+    assert src == f"quarantined:{key}"
+
+
+def test_valid_float_tiles_still_accepted(tmp_path):
+    p = _path(tmp_path)  # JSON round-trips may produce 64.0
+    faults.write_cache(p, {"cpu|jnp|128|pald": {"block": 64.0,
+                                                "block_z": 128.0}})
+    b, bz, src = autotune.resolve_blocks_ex(128, "pald", impl="jnp",
+                                            backend="cpu", path=p)
+    assert (b, bz) == (64, 128)
+    assert src.startswith("cache:")
+
+
+def test_invalid_method_record_falls_back_to_heuristic(tmp_path):
+    p = _path(tmp_path)
+    for bogus in ({"method": "knn"}, {"method": "warp-drive"},
+                  {"method": 3}, "not-even-a-dict"):
+        faults.write_cache(p, {"cpu|-|128|method": bogus})
+        m, src = autotune.method_for_ex(128, backend="cpu", path=p)
+        assert m == "dense"  # the n<=256 heuristic
+        assert src == "quarantined:cpu|-|128|method"
+
+
+def test_plan_survives_an_invalid_cached_record(tmp_path, monkeypatch):
+    """The end-to-end contract: a poisoned cache must never raise
+    mid-plan()."""
+    from repro.core import pald
+    p = _path(tmp_path)
+    monkeypatch.setenv("REPRO_TUNE_CACHE", p)
+    import jax
+    backend = jax.default_backend()
+    faults.write_cache(p, {
+        f"{backend}|jnp|64|pald": {"block": "poison"},
+        f"{backend}|interpret|64|pald": {"block": "poison"},
+        f"{backend}|-|64|method": {"method": "poison"},
+    })
+    plan = pald.plan(n=64, method="auto", block="auto")
+    assert plan.method == "dense"  # the heuristic, not the poisoned record
+    pk = pald.plan(n=64, method="kernel", block="auto")
+    assert pk.explain()["block_source"].startswith("quarantined:")
+
+
+# ---------------------------------------------------------------------------
+# tune(): per-candidate failure and time budgets
+# ---------------------------------------------------------------------------
+def test_failed_candidate_records_a_row_and_grid_continues(tmp_path):
+    with faults.failing("ops.focus_general", times=1):
+        rec = autotune.tune(16, "pald", impl="jnp", blocks=(8, 16),
+                            blocks_z=(16,), iters=1, save=False)
+    failed = [r for r in rec["grid"] if r.get("failed")]
+    ok = [r for r in rec["grid"] if "seconds" in r]
+    assert len(failed) == 1 and "injected fault" in failed[0]["error"]
+    assert ok and rec["block"] in {r["block"] for r in ok}
+
+
+def test_all_candidates_failing_raises_instead_of_caching(tmp_path):
+    p = _path(tmp_path)
+    with faults.failing("ops."):
+        with pytest.raises(RuntimeError, match="every candidate failed"):
+            autotune.tune(16, "pald", impl="jnp", blocks=(8, 16),
+                          blocks_z=(16,), iters=1, path=p)
+    assert autotune.load_cache(p) == {}  # nothing worth caching was cached
+
+
+def test_time_budget_skips_the_remaining_candidates():
+    rec = autotune.tune(16, "pald", impl="jnp", blocks=(8, 16, 32),
+                        blocks_z=(16,), iters=1, save=False,
+                        time_budget=0.0)
+    assert [r for r in rec["grid"] if "seconds" in r][0] == rec["grid"][0]
+    assert all(r.get("skipped") == "over-budget" for r in rec["grid"][1:])
+    assert rec["block"] == rec["grid"][0]["block"]
+
+
+def test_tune_methods_survives_one_failing_method(tmp_path):
+    p = _path(tmp_path)
+    # kill only the kernel method's entry points; dense/pairwise are pure
+    # jnp paths with no ops fault point, so they keep timing normally
+    with faults.failing("ops."):
+        out = autotune.tune_methods(
+            ns=(16,), methods=("dense", "kernel"), iters=1, path=p)
+    rec = out[0]
+    assert rec["method"] == "dense"
+    assert "kernel" in rec["failed"]
+    cached = autotune.load_cache(p)["cpu|-|16|method"]
+    assert cached["method"] == "dense"
