@@ -20,7 +20,9 @@ forgotten; now every climb feeds the dispatcher.
         [--blocks 64,128,256] [--block-z 256,512] [--cache PATH]
 
 (``--pass pald_fused`` keys on ``--d``, ``--pass pald_knn`` on ``--k``;
-non-default ``--ties`` modes get their own cells.)
+non-default ``--ties`` modes get their own ``:t-<mode>`` cells and
+``--weight <name>`` tunes any registered weight functional into its own
+``:w-<name>`` cell.)
 
 ``methods``: measure the method crossover (dense/pairwise/triplet) across
 n and persist the per-n winner, replacing the hard-coded n<=256 heuristic
@@ -96,6 +98,7 @@ def run_cell(args) -> None:
 
 
 def run_blocks(args) -> None:
+    from repro.core.weights import resolve_weight
     from repro.tuning import autotune
 
     kw = {}
@@ -107,13 +110,20 @@ def run_blocks(args) -> None:
         kw["d"] = args.d
     if getattr(args, "pass") == "pald_knn":
         kw["k"] = args.k
+    if args.weight and args.ties != "drop":
+        raise SystemExit("--weight and --ties are contradictory; "
+                         "--ties is sugar for the built-in modes")
+    # a registered functional tunes (and caches, under :w-<name>) exactly
+    # like a tie mode: the functional IS the static knob the kernels key on
+    ties = resolve_weight(args.weight) if args.weight else args.ties
     rec = autotune.tune(
         args.n, getattr(args, "pass"), impl=args.impl, path=args.cache,
-        iters=args.iters, ties=args.ties, time_budget=args.budget, **kw,
+        iters=args.iters, ties=ties, time_budget=args.budget, **kw,
     )
     cache = autotune.cache_path(args.cache)
+    wname = args.weight or args.ties
     print(f"# tuned {getattr(args, 'pass')} n={args.n} "
-          f"impl={args.impl or 'default'} ties={args.ties}")
+          f"impl={args.impl or 'default'} weight={wname}")
     for row in rec["grid"]:
         head = f"  block={row['block']:5d} block_z={row['block_z']:5d} "
         if "seconds" in row:
@@ -169,6 +179,10 @@ def main() -> None:
     blocks.add_argument("--ties", default="drop",
                         choices=("drop", "split", "ignore"),
                         help="tie mode (non-default modes get their own cells)")
+    blocks.add_argument("--weight", default=None,
+                        help="registered weight functional name (e.g. soft, "
+                             "kernelized); tunes and caches its own "
+                             ":w-<name> cell")
     blocks.add_argument("--blocks", default=None, help="csv candidate blocks")
     blocks.add_argument("--block-z", default=None, help="csv candidate z tiles")
     blocks.add_argument("--iters", type=int, default=3)

@@ -8,6 +8,7 @@ Sections:
     table1  pairwise vs triplet           (bench_variants)
     table1b dense vs tri kernel schedule  (bench_variants.run_kernels)
     table1c fused features vs materialize (bench_variants.run_fused)
+    weights soft/kernelized vs drop       (bench_variants.run_weights)
     knn     sparse k-NN vs best dense     (bench_knn)
     dispatch plan+execute overhead        (bench_variants.run_dispatch)
     batched  (B,n,n) engine throughput    (bench_variants.run_batched)
@@ -81,6 +82,9 @@ def main() -> None:
         section("ties",
                 "ties: split/ignore tile-body overhead vs strict drop (--fast)",
                 lambda: bench_variants.run_ties(ns=(256, 512, 1024)))
+        section("weights",
+                "weights: soft/kernelized tile-body overhead vs drop (--fast)",
+                lambda: bench_variants.run_weights(ns=(256, 512)))
         section("knn",
                 "knn: sparse k-NN PaLD vs best dense path (n x k, --fast)",
                 lambda: bench_knn.run(ns=(1024, 4096), ks=(16, 32, 64)))
@@ -106,6 +110,9 @@ def main() -> None:
         section("ties",
                 "ties: split/ignore tile-body overhead vs strict drop",
                 bench_variants.run_ties)
+        section("weights",
+                "weights: soft/kernelized tile-body overhead vs drop",
+                bench_variants.run_weights)
         section("knn",
                 "knn: sparse k-NN PaLD vs best dense path (n x k)",
                 lambda: bench_knn.run(ns=(1024, 4096, 8192),

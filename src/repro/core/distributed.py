@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import engine as _engine
-from .ties import DEFAULT_TIES, index_xwins as _xwins_rows, validate_ties
+from .weights import index_xwins as _xwins_rows
 
 # jax.shard_map is top-level only from jax>=0.5; fall back to the
 # experimental location on older versions (this container ships 0.4.x).
@@ -83,7 +83,7 @@ def _allgather_body(Dloc, *, axis, n_valid, plan):
     U = plan.focus_general(Dloc, Dall, Dloc)                   # (m, n)
     W = _weights_rows(U, off, n_valid)
     xw = (_xwins_rows(off, m, 0, Dall.shape[0])
-          if plan.ties == "ignore" else None)
+          if plan.weight.needs_index_tiebreak else None)
     return plan.cohesion_general(Dloc, Dall, Dloc, W, xwins=xw)
 
 
@@ -118,7 +118,8 @@ def _ring_body(Dloc, *, axis, p, n_valid, plan):
         off = owner_cols(s)
         Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
         Wxy = jax.lax.dynamic_slice(W, (0, off), (m, m))
-        xw = _xwins_rows(r * m, m, off, m) if plan.ties == "ignore" else None
+        xw = (_xwins_rows(r * m, m, off, m)
+              if plan.weight.needs_index_tiebreak else None)
         C = C + plan.cohesion_general(Dloc, blk, Dxy, Wxy, xwins=xw)
         return nxt, C
 
@@ -153,7 +154,8 @@ def _feat_allgather_body(Xloc, *, axis, metric, n_valid, plan):
     Dloc = jax.lax.dynamic_slice(Dall, (off, 0), (m, n))         # own rows
     U = plan.focus_general(Dloc, Dall, Dloc)
     W = _weights_rows(U, off, n_valid)
-    xw = _xwins_rows(off, m, 0, n) if plan.ties == "ignore" else None
+    xw = (_xwins_rows(off, m, 0, n)
+          if plan.weight.needs_index_tiebreak else None)
     return plan.cohesion_general(Dloc, Dall, Dloc, W, xwins=xw)
 
 
@@ -197,7 +199,8 @@ def _feat_ring_body(Xloc, *, axis, p, metric, n_valid, plan):
         Dblk = masked_dist_tile(xblk, Xall, metric, off, 0, nv)
         Dxy = jax.lax.dynamic_slice(Dloc, (0, off), (m, m))
         Wxy = jax.lax.dynamic_slice(W, (0, off), (m, m))
-        xw = _xwins_rows(r * m, m, off, m) if plan.ties == "ignore" else None
+        xw = (_xwins_rows(r * m, m, off, m)
+              if plan.weight.needs_index_tiebreak else None)
         C = C + plan.cohesion_general(Dloc, Dblk, Dxy, Wxy, xwins=xw)
         return nxt, C
 
@@ -268,7 +271,7 @@ def _2d_body(Dblk, *, row_axes, col_axis, stream_axis, n_valid, mesh_shape,
         dxy = jax.lax.dynamic_slice(Grow, (0, yoff), (mr, slab_rows))
         w = jax.lax.dynamic_slice(Wrow, (0, yoff), (mr, slab_rows))
         xw = (_xwins_rows(roff, mr, yoff, slab_rows)
-              if plan.ties == "ignore" else None)
+              if plan.weight.needs_index_tiebreak else None)
         C = C + plan.cohesion_general(Dblk, blk, dxy, w, xwins=xw)
         return nxt, C
 
@@ -292,7 +295,8 @@ def pald_distributed(
     comm_dtype=None,
     block: int | str = "auto",
     block_z: int | str = "auto",
-    ties: str = DEFAULT_TIES,
+    ties: str | None = None,
+    weight=None,
     on_error: str = "raise",
 ) -> jnp.ndarray:
     """Compute the PaLD cohesion matrix on a device mesh.
@@ -323,7 +327,11 @@ def pald_distributed(
             resolves them from the persistent tuning cache
             (``repro.tuning``), keyed by the per-device problem size.
         ties: tie-handling mode on every shard body (see
-            ``pald.cohesion``).
+            ``pald.cohesion``); sugar for ``weight=``.
+        weight: registered weight-functional name or ``WeightFunctional``
+            instance (``core/weights.py``) — resolved once at dispatch
+            time and threaded into every shard body, so any registered
+            functional runs distributed with no per-strategy forks.
         on_error: "raise" (default) or "fallback" — with "fallback", a
             shard body whose per-device kernel fails at trace/lowering
             time degrades across the remaining impls
@@ -348,7 +356,6 @@ def pald_distributed(
         >>> C.shape
         (16, 16)
     """
-    validate_ties(ties)
     axis_names = list(mesh.axis_names)
     if row_axes is None:
         row_axes = tuple(a for a in axis_names if a != axis_names[-1])
@@ -390,8 +397,8 @@ def pald_distributed(
     # call's actual rectangle.
     m_dev = m // (p if strategy in ("allgather", "ring") else pr)
     local_plan = _engine.plan_local(m_dev, impl=impl, ties=ties,
-                                    block=block, block_z=block_z,
-                                    on_error=on_error)
+                                    weight=weight, block=block,
+                                    block_z=block_z, on_error=on_error)
 
     mesh_shape = sizes
     if strategy == "allgather":
@@ -437,7 +444,8 @@ def pald_distributed_from_features(
     impl: str | None = None,
     block: int | str = "auto",
     block_z: int | str = "auto",
-    ties: str = DEFAULT_TIES,
+    ties: str | None = None,
+    weight=None,
     on_error: str = "raise",
 ) -> jnp.ndarray:
     """Distributed PaLD straight from row-sharded feature vectors.
@@ -461,9 +469,9 @@ def pald_distributed_from_features(
             The full distance matrix is never communicated; ``allgather``
             is the only strategy that materializes it (per device, by
             construction).
-        normalize / impl / block / block_z / ties / on_error: as in
-            ``pald_distributed``; ``ties`` behaves exactly as in
-            ``pald.from_features``.
+        normalize / impl / block / block_z / ties / weight / on_error: as
+            in ``pald_distributed``; ``ties``/``weight`` behave exactly
+            as in ``pald.from_features``.
 
     Returns:
         (n, n) float32 cohesion matrix, equal to single-device
@@ -481,7 +489,6 @@ def pald_distributed_from_features(
         >>> C.shape
         (16, 16)
     """
-    validate_ties(ties)
     if strategy == "auto":
         strategy = "ring"
     if strategy not in ("allgather", "ring"):
@@ -498,8 +505,8 @@ def pald_distributed_from_features(
     n_valid = n0 if m != n0 else None
 
     local_plan = _engine.plan_local(m // p, impl=impl, ties=ties,
-                                    block=block, block_z=block_z,
-                                    on_error=on_error)
+                                    weight=weight, block=block,
+                                    block_z=block_z, on_error=on_error)
 
     if strategy == "allgather":
         body = functools.partial(

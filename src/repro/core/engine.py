@@ -48,7 +48,8 @@ import jax.numpy as jnp
 from repro.tuning import autotune as _tuner
 
 from . import resilience as _res
-from .ties import DEFAULT_TIES, validate_ties
+from .weights import (DEFAULT_TIES, WeightFunctional, registered_weights,
+                      resolve_weight, validate_ties)
 
 __all__ = [
     "PaldPlan",
@@ -195,6 +196,9 @@ class PaldPlan:
     d: int | None                 # feature dimension (features kind)
     k: int | None = None          # neighborhood size (knn method only)
     on_error: str = "raise"       # "raise" | "fallback" (degradation chain)
+    # the resolved weight functional (core/weights.py); ``ties`` above is its
+    # name, kept as the stable string surface for explain()/fault contexts.
+    weight: WeightFunctional | None = None
     # provenance (explain)
     method_source: str = "explicit"
     block_source: str = "explicit"
@@ -242,19 +246,21 @@ class PaldPlan:
         def call(impl):
             return _kops.focus_general(DXZ, DYZ, DXY, block=self.block,
                                        block_z=self.block_z, impl=impl,
-                                       ties=self.ties)
+                                       ties=self.weight)
 
         if self.on_error == "fallback":
             return _res.guarded_general(self, "focus_general", call)
         return call(self.impl)
 
-    def cohesion_general(self, DXZ, DYZ, DXY, W, *, xwins=None) -> jnp.ndarray:
+    def cohesion_general(self, DXZ, DYZ, DXY, W, *, xwins=None,
+                         xw_offsets=None) -> jnp.ndarray:
         from repro.kernels import ops as _kops
 
         def call(impl):
             return _kops.cohesion_general(DXZ, DYZ, DXY, W, block=self.block,
                                           block_z=self.block_z, impl=impl,
-                                          ties=self.ties, xwins=xwins)
+                                          ties=self.weight, xwins=xwins,
+                                          xw_offsets=xw_offsets)
 
         if self.on_error == "fallback":
             return _res.guarded_general(self, "cohesion_general", call)
@@ -276,7 +282,8 @@ class PaldPlan:
             Dict with STABLE keys (bench provenance rows and debug logs
             rely on them): the resolved ``kind`` / ``method`` /
             ``schedule`` / ``impl`` / ``block`` / ``block_z`` /
-            ``z_chunk`` / ``ties`` / ``metric`` / ``normalize`` /
+            ``z_chunk`` / ``ties`` / ``weight`` / ``weight_properties`` /
+            ``metric`` / ``normalize`` /
             ``batch`` / ``n`` / ``d`` / ``k`` / ``on_error`` (plus
             ``degradations``, the guarded-execution event log), the
             ``padded_n`` /
@@ -302,6 +309,9 @@ class PaldPlan:
             "block_z": self.block_z,
             "z_chunk": self.z_chunk,
             "ties": self.ties,
+            "weight": self.weight.name if self.weight else self.ties,
+            "weight_properties": (self.weight.properties()
+                                  if self.weight else None),
             "metric": self.metric,
             "normalize": self.normalize,
             "batch": self.batch,
@@ -437,6 +447,32 @@ def _shape_of(x, n, d, kind):
     return int(n), None if kind == "distance" else int(d)
 
 
+def _resolve_weight_knob(ties, weight) -> WeightFunctional:
+    """Resolve the ``ties=``/``weight=`` knob pair to ONE functional.
+
+    ``ties=`` is sugar for the three built-in modes; ``weight=`` accepts any
+    registered name or ``WeightFunctional`` instance.  Both given and
+    resolving to different functionals is a contradiction (rejected, like
+    every other knob pair); both None means the default (``'drop'``).
+    """
+    if weight is None:
+        if ties is None:
+            return resolve_weight(DEFAULT_TIES)
+        validate_ties(ties)
+        return resolve_weight(ties)
+    w = resolve_weight(weight)
+    if ties is not None:
+        validate_ties(ties)
+        tie_name = getattr(ties, "name", ties)
+        if tie_name != w.name:
+            raise ValueError(
+                f"contradictory ties={tie_name!r} and weight={w.name!r}; "
+                "ties= is sugar for the built-in modes — drop it, or pass "
+                f"the matching one (registered weight functionals: "
+                f"{registered_weights()})")
+    return w
+
+
 def _default_kernel_impl(method: str) -> str:
     """Backend-default impl per pipeline (mirrors kernels/ops): the fused
     and knn paths prefer the vectorized jnp fallback off-TPU (they exist
@@ -463,7 +499,8 @@ def plan(
     metric: str | None = None,
     normalize: bool = True,
     impl: str | None = None,
-    ties: str = DEFAULT_TIES,
+    ties: str | None = None,
+    weight=None,
     batch: int | None = None,
     check: bool = False,
     k: int | None = None,
@@ -478,7 +515,12 @@ def plan(
     meaning as on the facades; validation rejects contradictions instead of
     silently dropping knobs (``schedule='tri'`` off the kernel pipeline,
     ``block_z``/``impl`` on a path that has no such degree of freedom,
-    ``z_chunk`` off the dense method, unknown metrics/methods/tie modes).
+    ``z_chunk`` off the dense method, unknown metrics/methods/tie modes,
+    contradictory ``ties=``/``weight=``).
+    ``ties=`` is sugar for the three built-in weight functionals;
+    ``weight=`` accepts any registered functional name or
+    ``WeightFunctional`` instance (``core/weights.py``) and generalizes the
+    contribution algebra on every cell with zero kernel forks.
     ``on_error`` selects the failure semantics: ``"raise"`` (default)
     propagates the first executor failure unchanged, ``"fallback"`` walks
     the cell's degradation chain (``core/resilience``) and records every
@@ -489,7 +531,8 @@ def plan(
     "sweep every method with one shared block argument" idiom stays valid —
     ``explain()['block']`` is ``None`` there, making the drop visible.
     """
-    validate_ties(ties)
+    weight = _resolve_weight_knob(ties, weight)
+    ties = weight.name
     if kind not in ("distance", "features"):
         raise ValueError(f"unknown kind {kind!r} "
                          "(expected 'distance' or 'features')")
@@ -600,6 +643,7 @@ def plan(
         return PaldPlan(
             kind=kind, method=method, schedule=schedule, impl=None,
             block=None, block_z=None, z_chunk=z_chunk, ties=ties,
+            weight=weight,
             metric=metric, normalize=normalize, batch=batch, check=check,
             n=n, d=d, on_error=on_error, method_source=method_source,
             block_source="n/a",
@@ -629,12 +673,13 @@ def plan(
     if method == "knn":
         if block == "auto":
             block, _, src = _tuner.resolve_blocks_ex(
-                n, "pald_knn", ties=ties, k=k, impl=impl)
+                n, "pald_knn", ties=weight, k=k, impl=impl)
             block_source = src
         block = max(min(int(block), max(n, 1)), 1)
         return PaldPlan(
             kind=kind, method=method, schedule=schedule, impl=impl,
             block=block, block_z=None, z_chunk=None, ties=ties,
+            weight=weight,
             metric=metric, normalize=normalize, batch=batch, check=check,
             n=n, d=d, k=k, on_error=on_error, method_source=method_source,
             block_source=block_source,
@@ -645,14 +690,14 @@ def plan(
         # never drift from what the kernel entry point would compute
         was_auto = block == "auto"
         block, block_z, src = _tuner.resolve_fused_tiles(
-            n, d, block, block_z, impl=impl, ties=ties)
+            n, d, block, block_z, impl=impl, ties=weight)
         if src is not None:
             # provenance tracks the *block* tile; an explicit block with an
             # auto block_z must not claim the user's tile came from the cache
             block_source = src if was_auto else f"{block_source}; z:{src}"
     elif block == "auto" or block_z == "auto":
         pass_ = "pald_tri" if schedule == "tri" else "pald"
-        rb, rbz, src = _tuner.resolve_blocks_ex(n, pass_, ties=ties)
+        rb, rbz, src = _tuner.resolve_blocks_ex(n, pass_, ties=weight)
         block_source = src if block == "auto" else f"{block_source}; z:{src}"
         block = rb if block == "auto" else block
         if method == "kernel" and block_z in (None, "auto"):
@@ -663,6 +708,7 @@ def plan(
     return PaldPlan(
         kind=kind, method=method, schedule=schedule, impl=impl,
         block=block, block_z=block_z, z_chunk=None, ties=ties,
+        weight=weight,
         metric=metric, normalize=normalize, batch=batch, check=check,
         n=n, d=d, on_error=on_error, method_source=method_source,
         block_source=block_source,
@@ -673,7 +719,8 @@ def plan_local(
     n: int,
     *,
     impl: str | None = None,
-    ties: str = DEFAULT_TIES,
+    ties: str | None = None,
+    weight=None,
     block: int | str = "auto",
     block_z: int | str = "auto",
     on_error: str = "raise",
@@ -686,7 +733,8 @@ def plan_local(
     default (jnp off-TPU — the vectorized fallback, which is what the
     collectives overlap against).
     """
-    validate_ties(ties)
+    weight = _resolve_weight_knob(ties, weight)
+    ties = weight.name
     if on_error not in _res.ON_ERROR_MODES:
         raise ValueError(f"unknown on_error {on_error!r} (expected one of "
                          f"{_res.ON_ERROR_MODES})")
@@ -700,6 +748,7 @@ def plan_local(
     return PaldPlan(
         kind="distance", method="kernel", schedule="dense", impl=impl,
         block=int(block), block_z=int(block_z), z_chunk=None, ties=ties,
+        weight=weight,
         metric=None, normalize=False, batch=None, check=False,
         n=max(int(n), 1), d=None, on_error=on_error,
         method_source="shard-body", block_source=block_source,

@@ -8,8 +8,8 @@ local depth* (Baron, Darling, Davis & Pfeifer, arXiv:2108.08864) shows
 that PaLD restricted to k-nearest-neighbor conflict foci preserves the
 community structure the full computation finds, at O(n * k^2) cost.  This
 module is that restriction, engineered to the same contracts as every
-dense path (shared ``core/ties.py`` predicates, engine-registered
-executor, tuning-cache tiles):
+dense path (shared ``core/weights.py`` weight functionals,
+engine-registered executor, tuning-cache tiles):
 
 ``NeighborGraph``
     The CSR-style neighborhood struct: ``indices (n, k)`` int32 and
@@ -27,8 +27,8 @@ executor, tuning-cache tiles):
     The exact-within-neighborhood PaLD semantics for one row tile — the
     single tile body shared by the blocked-jnp fallback
     (``kernels/ops._knn_values_jnp``) and the Pallas kernel
-    (``kernels/pald_knn.py``), the same way ``core/ties.py`` is shared by
-    every dense tile body.
+    (``kernels/pald_knn.py``), the same way ``core/weights.py`` is shared
+    by every dense tile body.
 
 ``scatter_dense(graph, values)``
     Expand the sparse (n, k+1) cohesion values into the dense (n, n) C
@@ -44,8 +44,9 @@ by construction), and only the x role accumulates support:
     U_k[x, y] = sum_{z in {x} ∪ N_k(x)} focus_weight(d_xz, d_yz, d_xy)
     C[x, z]  += support_weight(d_xz, d_yz, d_xy) / U_k[x, y]
 
-with the comparison predicates — and therefore the ``ties=`` contract —
-taken verbatim from ``core/ties.py``.  Row x of C is supported only at
+with the focus/support contributions — and therefore the ``ties=`` /
+``weight=`` contract — taken verbatim from ``core/weights.py``.  Row x of
+C is supported only at
 z in {x} ∪ N_k(x), which is exactly the sparse (n, k+1) value layout.
 
 At k = n-1 the candidate set is all n points and the directed pair sum
@@ -67,7 +68,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .ties import DEFAULT_TIES, focus_weight, support_weight, validate_ties
+from .weights import (DEFAULT_TIES, focus_weight, resolve_weight,
+                      support_weight)
 
 __all__ = [
     "NeighborGraph",
@@ -228,7 +230,7 @@ def knn_values_tile(
     dn: jnp.ndarray,
     g: jnp.ndarray,
     own_wins: jnp.ndarray | None,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
     *,
     k_valid: int | None = None,
 ) -> jnp.ndarray:
@@ -240,8 +242,10 @@ def knn_values_tile(
             ``g[i, a, b] = d(nbr_a(x_i), nbr_b(x_i))`` with an exactly
             zero diagonal.
         own_wins: (b, k) bool — global index of x > index of nbr_j; the
-            ``ties='ignore'`` index tiebreak (None for other modes).
-        ties: tie mode; the predicates come verbatim from ``core/ties``.
+            index tiebreak for functionals declaring
+            ``needs_index_tiebreak`` (None otherwise).
+        ties: weight functional (name or instance); the focus/support
+            contributions come verbatim from ``core/weights``.
         k_valid: number of REAL neighbor columns when k was padded up to
             a lane quantum (Pallas path).  Padded columns carry +inf pair
             distances but FINITE junk gathered distances (their indices
@@ -275,10 +279,25 @@ def knn_values_tile(
     if mvalid is not None:
         W = W * mvalid[None, :]
     # pass 2: support of every candidate z against the same pair set
-    ow = None if own_wins is None else own_wins[:, :, None]
-    sw_nbr = support_weight(dn[:, None, :], g, dn[:, :, None], ties, ow)
+    wfun = resolve_weight(ties)
+    if wfun.share is not None:
+        # conserves-mass factoring (core/weights contract): support ==
+        # nan-guarded share * focus on the SAME (own, other, pair)
+        # triples as pass 1, so reuse the focus cube instead of
+        # evaluating a second smooth (b, k, k) cube — two op-heavy cube
+        # chains in this single fused body make XLA's merged loop spill
+        # registers (~3x), and the reuse is bitwise-free
+        # no nan-guard on the product: share(a, b) is nan only when BOTH
+        # operands are +inf, and the gathered g is finite by construction
+        # (junk values at padded slots, never inf), while the focus cube
+        # is already guarded — so the product is always finite here
+        sw_nbr = wfun.share(dn[:, None, :], g) * fw_nbr
+        sw_self = wfun.share(zero, dn) * fw_self
+    else:
+        ow = None if own_wins is None else own_wins[:, :, None]
+        sw_nbr = support_weight(dn[:, None, :], g, dn[:, :, None], ties, ow)
+        sw_self = support_weight(zero, dn, dn, ties, own_wins)
     cv_nbr = jnp.sum(sw_nbr * W[:, :, None], axis=1, dtype=jnp.float32)
-    sw_self = support_weight(zero, dn, dn, ties, own_wins)
     cv_self = jnp.sum(sw_self * W, axis=1, dtype=jnp.float32)
     return jnp.concatenate([cv_self[:, None], cv_nbr], axis=1)
 

@@ -19,7 +19,8 @@ Both compute, with W = 1/U (zero diagonal):
     U[x, y] = sum_z focus_weight(D[x,z], D[y,z], D[x,y])
     C[x, z] = sum_y support_weight(D[x,z], D[y,z], D[x,y]) * W[x,y]
 
-with the tie-mode predicates shared across every path (``core/ties.py``);
+with the focus/support contributions supplied by the resolved weight
+functional shared across every path (``core/weights.py``);
 the default ``ties='drop'`` reduces to the classic strict masks and matches
 ``reference.pald_pairwise_reference(ties='drop')`` entry-wise on any input
 (see tests/test_pald_core.py, tests/test_conformance.py).
@@ -31,13 +32,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .ties import DEFAULT_TIES, focus_weight, index_xwins, support_weight
+from .weights import (DEFAULT_TIES, focus_weight, index_xwins, resolve_weight,
+                      support_weight)
 
 __all__ = ["local_focus_dense", "pald_dense", "pald_blocked"]
 
 
 def local_focus_dense(D: jnp.ndarray, *, z_chunk: int | None = None,
-                      ties: str = DEFAULT_TIES) -> jnp.ndarray:
+                      ties=DEFAULT_TIES) -> jnp.ndarray:
     """U[x,y] = #{z : d_xz < d_xy or d_yz < d_xy}, computed in z-chunks
     (fractional boundary-tie membership under ``ties='split'``)."""
     D = D.astype(jnp.float32)
@@ -76,18 +78,20 @@ def _weights(U: jnp.ndarray, n_valid: jnp.ndarray | int | None = None) -> jnp.nd
 
 def pald_dense(
     D: jnp.ndarray, *, z_chunk: int | None = None, normalize: bool = False,
-    ties: str = DEFAULT_TIES
+    ties=DEFAULT_TIES
 ) -> jnp.ndarray:
     """Branch-free dense-pairwise PaLD; O(n^2 * chunk) temporaries."""
+    ties = resolve_weight(ties)
     D = D.astype(jnp.float32)
     n = D.shape[0]
     U = local_focus_dense(D, z_chunk=z_chunk, ties=ties)
     W = _weights(U)
     z_chunk_ = z_chunk or n
-    # ties='ignore' breaks support ties by global index (larger index wins);
-    # the ordered (x, y) grid visits both orders, so the x-role tiebreak
-    # suffices
-    xwins = index_xwins(0, n, 0, n)[:, :, None] if ties == "ignore" else None
+    # index-tiebreak functionals break support ties by global index (larger
+    # index wins); the ordered (x, y) grid visits both orders, so the x-role
+    # tiebreak suffices
+    xwins = (index_xwins(0, n, 0, n)[:, :, None]
+             if ties.needs_index_tiebreak else None)
 
     def body(_, Dz):
         # C[x, zc] = sum_y support_weight(d_xz, d_yz, d_xy) * W[x, y]
@@ -114,7 +118,7 @@ def pald_blocked(
     block: int = 128,
     normalize: bool = False,
     n_valid: jnp.ndarray | int | None = None,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
 ) -> jnp.ndarray:
     """Blocked pairwise PaLD (paper Fig. 5 structure) in pure JAX.
 
@@ -123,6 +127,7 @@ def pald_blocked(
     innermost z loop, optimal for the pairwise variant per Section 4.2).
     n must be padded to a multiple of ``block`` by the caller (`pald` does).
     """
+    ties = resolve_weight(ties)
     D = D.astype(jnp.float32)
     n = D.shape[0]
     assert n % block == 0, "caller must pad to a block multiple"
@@ -151,7 +156,8 @@ def pald_blocked(
         Dxy = jax.lax.dynamic_slice(Dx, (0, yb * block), (block, block))
         Wxy = jax.lax.dynamic_slice(W, (xb * block, yb * block), (block, block))
         xw = None
-        if ties == "ignore":  # global-index tiebreak (every ordered pair visited)
+        if ties.needs_index_tiebreak:  # global-index tiebreak (every ordered
+            # pair visited, so the x-role form suffices)
             xw = index_xwins(xb * block, block, yb * block, block)[:, :, None]
         g = support_weight(Dx[:, None, :], Dy[None, :, :], Dxy[:, :, None],
                            ties, xw)
@@ -182,7 +188,7 @@ from . import engine as _engine  # noqa: E402  (registry import, cycle-free)
 def _exec_dense(D, plan):
     D = jnp.asarray(D, jnp.float32)  # explicit boundary cast
     n = D.shape[0]
-    C = pald_dense(D, z_chunk=plan.z_chunk, normalize=False, ties=plan.ties)
+    C = pald_dense(D, z_chunk=plan.z_chunk, normalize=False, ties=plan.weight)
     return C / max(n - 1, 1) if plan.normalize else C
 
 
@@ -192,6 +198,6 @@ def _exec_pairwise(D, plan):
     nv = jnp.asarray(n0) if Dp.shape[0] != n0 else None
     # normalization applies to the unpadded extent only, so the padded size
     # never leaks into the 1/(n-1) factor
-    C = pald_blocked(Dp, block=plan.block, n_valid=nv, ties=plan.ties)
+    C = pald_blocked(Dp, block=plan.block, n_valid=nv, ties=plan.weight)
     C = C[:n0, :n0]
     return C / max(n0 - 1, 1) if plan.normalize else C

@@ -47,13 +47,21 @@ import jax.numpy as jnp
 
 from .engine import PaldPlan, pad_distance_matrix  # noqa: F401
 from .engine import plan as _engine_plan
-from .ties import DEFAULT_TIES, TIE_MODES, validate_ties  # noqa: F401
+from .weights import (  # noqa: F401
+    DEFAULT_TIES,
+    TIE_MODES,
+    WeightFunctional,
+    register_weight,
+    registered_weights,
+    validate_ties,
+)
 
 Method = Literal["auto", "dense", "pairwise", "triplet", "kernel"]
 Ties = Literal["drop", "split", "ignore"]
 
 __all__ = ["cohesion", "from_features", "plan", "local_depths",
-           "pad_distance_matrix", "PaldPlan"]
+           "pad_distance_matrix", "PaldPlan", "WeightFunctional",
+           "register_weight", "registered_weights"]
 
 
 def plan(x=None, **kwargs) -> PaldPlan:
@@ -70,8 +78,9 @@ def plan(x=None, **kwargs) -> PaldPlan:
             for shape-only planning.
         **kwargs: every knob of ``cohesion`` / ``from_features`` (method,
             schedule, block, block_z, z_chunk, metric, normalize, impl,
-            ties, batch, check, k, on_error) plus ``kind``/``n``/``d``;
-            full semantics in ``repro.core.engine.plan``.
+            ties, weight, batch, check, k, on_error) plus
+            ``kind``/``n``/``d``; full semantics in
+            ``repro.core.engine.plan``.
 
     Returns:
         A frozen ``PaldPlan``.  ``plan.execute(x)`` runs it (reusable
@@ -105,7 +114,8 @@ def cohesion(
     normalize: bool = True,
     z_chunk: int | None = None,
     impl: str | None = None,
-    ties: Ties = DEFAULT_TIES,
+    ties: Ties | None = None,
+    weight: str | WeightFunctional | None = None,
     batch: int | None = None,
     check: bool = False,
     k: int | None = None,
@@ -142,7 +152,17 @@ def cohesion(
             incl. fractional focus-boundary membership (conserves total
             cohesion mass on any input); 'ignore' Algorithm 1's
             sequential if/else (higher index wins).  On tie-free
-            distances all three agree.
+            distances all three agree.  Sugar for ``weight=`` restricted
+            to the built-in modes; passing both with different names is
+            an error.
+        weight: the general knob behind ``ties``— a registered weight-
+            functional name (``registered_weights()``) or a
+            ``WeightFunctional`` instance (``core/weights.py``), e.g.
+            ``weight="soft"`` / ``weight=soft_threshold(tau=0.05)`` for
+            the sigmoid soft-threshold family or ``weight="kernelized"``
+            for kernel-smoothed support shares.  Runs on every
+            method/schedule/impl cell with no kernel forks; default is
+            the 'drop' built-in.
         batch: for (B, n, n) input, how many items are vmapped per
             compiled call (None = all); bounds peak memory.
         check: add deep input validation (finite, symmetric, nonnegative)
@@ -179,7 +199,8 @@ def cohesion(
     p = _engine_plan(
         D, kind="distance", method=method, schedule=schedule, block=block,
         block_z=block_z, z_chunk=z_chunk, normalize=normalize, impl=impl,
-        ties=ties, batch=batch, check=check, k=k, on_error=on_error,
+        ties=ties, weight=weight, batch=batch, check=check, k=k,
+        on_error=on_error,
     )
     return p.execute(D)
 
@@ -195,7 +216,8 @@ def from_features(
     schedule: str = "dense",
     normalize: bool = True,
     impl: str | None = None,
-    ties: str = DEFAULT_TIES,
+    ties: str | None = None,
+    weight: str | WeightFunctional | None = None,
     check: bool = False,
     k: int | None = None,
     on_error: str = "raise",
@@ -233,7 +255,10 @@ def from_features(
             ``pald.cohesion``).  Quantized or duplicated feature rows
             produce exact ties in every metric, so this matters for real
             embedding data; 'split' is the theoretically-faithful choice
-            there.
+            there.  Sugar for ``weight=``.
+        weight: registered weight-functional name or ``WeightFunctional``
+            instance — the general contribution algebra behind ``ties``;
+            see ``pald.cohesion`` and ``core/weights.py``.
         check: deep input validation (finiteness) on top of shape checks.
         k: neighborhood size for ``method="knn"``.
         on_error: "raise" (default) or "fallback" — identical failure
@@ -258,7 +283,8 @@ def from_features(
     p = _engine_plan(
         X, kind="features", metric=metric, method=method, schedule=schedule,
         block=block, block_z=block_z, normalize=normalize, impl=impl,
-        ties=ties, batch=batch, check=check, k=k, on_error=on_error,
+        ties=ties, weight=weight, batch=batch, check=check, k=k,
+        on_error=on_error,
     )
     return p.execute(X)
 

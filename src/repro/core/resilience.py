@@ -235,6 +235,14 @@ def _reference_step() -> Step:
                 "the numpy reference oracle needs concrete values; "
                 "unavailable under jit/vmap tracing")
         from repro.core import reference as _reference
+        from repro.core.weights import TIE_MODES
+
+        # The numpy oracle only speaks the built-in tie modes.  For any
+        # other registered weight functional, the terminal rung is the
+        # un-blocked jnp einsum oracle (kernels/ref.py), which consumes
+        # the SAME functional the failed executor did — a rescue must
+        # never change the contribution algebra mid-request.
+        builtin = plan.ties in TIE_MODES
 
         def one(xi):
             if plan.kind == "features":
@@ -245,8 +253,18 @@ def _reference_step() -> Step:
                                     metric=plan.metric))
             else:
                 Di = np.asarray(xi)
-            C = _reference.pald_pairwise_reference(
-                Di, ties=plan.ties, normalize=plan.normalize)
+            if builtin:
+                C = _reference.pald_pairwise_reference(
+                    Di, ties=plan.ties, normalize=plan.normalize)
+            else:
+                from repro.kernels import ref as _ref
+
+                Dj = jnp.asarray(Di, jnp.float32)
+                U = _ref.focus_ref(Dj, ties=plan.weight)
+                C = _ref.cohesion_ref(Dj, _ref.weights_ref(U),
+                                      ties=plan.weight)
+                if plan.normalize:
+                    C = C / max(Dj.shape[0] - 1, 1)
             return np.asarray(C, np.float32)
 
         xv = np.asarray(x)

@@ -1,125 +1,30 @@
-"""Shared tie-handling predicates for every PaLD comparison tile.
+"""Compatibility shim over the weight-functional subsystem.
 
-On tie-heavy distances (integer metrics, quantized embeddings, duplicated
-points) the pre-PR3 pipeline returned different cohesion matrices for the
-same input depending on dispatch: the dense vectorized paths implemented
-``ties='drop'``, the tri schedules implemented ``'ignore'`` for cross-block
-pairs but ``'drop'`` inside diagonal blocks (the comparison-complement trick
-only covers off-diagonal visits), and ``method="auto"`` silently picked
-among them by size.  The fix is to implement the comparison predicate ONCE
-— here — and have every tile body (blocked jnp, all Pallas kernels and
-their fallbacks, the distributed shard bodies) call it, so all paths are
-interchangeable for each mode (DESIGN.md §9).
+The tie-handling predicates that used to live here are now the three
+built-in members of the pluggable weight-functional family in
+``core/weights.py`` (DESIGN.md §14): ``focus_weight`` / ``support_weight``
+dispatch on a mode string, a registered functional name, or a
+``WeightFunctional`` instance, and the historical ``ties=`` modes
+(``TIE_MODES``) are registered built-ins that bitwise-reproduce the
+pre-refactor expressions.  Import from ``repro.core.weights`` in new
+code; this module only re-exports the stable names.
 
-Modes (``TIE_MODES``), for a pair (x, y) and third point z:
-
-``'drop'`` (default)
-    Strict ``<`` everywhere: a z with d_xz == d_yz inside the focus supports
-    neither point — the branch-free vector analogue of the paper's "ignoring
-    equality in distance comparisons", and the cheapest tile body.
-``'split'``
-    The theoretical formulation (and *Generalized partitioned local depth*,
-    Berenhaut, Foley & Lyu 2023): exact ties split support 0.5/0.5.  Applied
-    to BOTH passes — a z sitting exactly on the focus boundary
-    (d_xz == d_xy or d_yz == d_xy) joins the focus with weight 0.5, and a
-    support tie d_xz == d_yz splits its (possibly fractional) mass.  This is
-    the only mode that conserves total cohesion mass exactly on arbitrary
-    tied input (see tests/test_ties.py).
-``'ignore'``
-    Algorithm 1's sequential if/else: on a support tie the point with the
-    LARGER global index wins (the else-branch assigns y, and the loop runs
-    x < y).  Focus membership stays strict.  This mode needs an index
-    tiebreak, threaded as ``own_wins`` / ``xwins`` below.
-
-Both helpers take static python-string ``ties`` (they are called inside
-jit'd / Pallas-traced bodies, so the branch specializes at trace time) and
-broadcast like the comparisons they replace.
-
-Key algebraic identity used throughout pass 2: with the half-step
-``h(a, t) = 1 if a < t else 0.5 if a == t else 0``, the split-mode
-contribution of z to the x role,  max(h(d_xz,d_xy), h(d_yz,d_xy)) * share_x,
-equals  share_x * h(d_xz, d_xy)  — the membership factor collapses to the
-role's OWN comparison (if x gets any share, d_xz <= d_yz, which caps
-h(d_yz, d_xy) at h(d_xz, d_xy)).  That keeps every per-role tile body in
-its existing (d_own, d_other, d_pair) shape.
+``square_xwins`` is gone on purpose: the dense (n, n) index-tiebreak it
+materialized is always derivable per-tile from ``index_xwins`` offsets,
+and every call site now does exactly that.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
+from .weights import (  # noqa: F401
+    DEFAULT_TIES,
+    TIE_MODES,
+    WeightFunctional,
+    focus_weight,
+    index_xwins,
+    resolve_weight,
+    support_weight,
+    validate_ties,
+)
 
-TIE_MODES = ("drop", "split", "ignore")
-DEFAULT_TIES = "drop"
-
-__all__ = ["TIE_MODES", "DEFAULT_TIES", "validate_ties", "focus_weight",
-           "support_weight", "index_xwins", "square_xwins"]
-
-
-def validate_ties(ties: str) -> str:
-    if ties not in TIE_MODES:
-        raise ValueError(f"unknown ties mode {ties!r} (expected one of {TIE_MODES})")
-    return ties
-
-
-def focus_weight(dxz, dyz, dxy, ties: str = DEFAULT_TIES):
-    """Pass-1 membership weight of z in the (x, y) local focus.
-
-    Strict modes ('drop', 'ignore'): the usual indicator
-    ``(d_xz < d_xy) | (d_yz < d_xy)`` as float32.  'split': boundary ties
-    join with weight 0.5, i.e. ``max(h(d_xz, d_xy), h(d_yz, d_xy))`` with
-    the half-step h — so U becomes fractional (multiples of 0.5, exact in
-    f32).  Arguments broadcast together; +inf padding stays exact in every
-    mode (inf == finite is false, inf == inf only happens for padded z
-    against padded pairs whose weight is masked to zero anyway).
-    """
-    strict = (dxz < dxy) | (dyz < dxy)
-    if ties != "split":
-        return strict.astype(jnp.float32)
-    eq = (dxz == dxy) | (dyz == dxy)
-    return jnp.where(strict, 1.0, jnp.where(eq, 0.5, 0.0)).astype(jnp.float32)
-
-
-def support_weight(d_own, d_other, d_pair, ties: str = DEFAULT_TIES,
-                   own_wins=None):
-    """Pass-2 weight with which z supports the 'own' point of a pair.
-
-    For the x role of pair (x, y): ``d_own = d_xz``, ``d_other = d_yz``,
-    ``d_pair = d_xy`` — i.e. exactly the three comparands of the classic
-    strict tile body ``(d_xz < d_yz) & (d_xz < d_xy)``.  The y role swaps
-    own/other.  Multiply the result by W[x, y] and accumulate.
-
-    ``own_wins``: boolean array (broadcastable), true where the own point's
-    GLOBAL index exceeds the partner's; required for ``ties='ignore'``
-    (square kernels derive it from grid position, rectangular/distributed
-    callers pass it explicitly as ``xwins``).
-    """
-    lt = d_own < d_other
-    memb = d_own < d_pair
-    if ties == "drop":
-        return (lt & memb).astype(jnp.float32)
-    if ties == "ignore":
-        if own_wins is None:
-            raise ValueError("ties='ignore' needs own_wins (index tiebreak)")
-        return ((lt | ((d_own == d_other) & own_wins)) & memb).astype(jnp.float32)
-    # split: share of the own-vs-other comparison times the half-step
-    # membership in the own-vs-pair comparison (see module docstring)
-    share = lt.astype(jnp.float32) + 0.5 * (d_own == d_other).astype(jnp.float32)
-    half = memb.astype(jnp.float32) + 0.5 * (d_own == d_pair).astype(jnp.float32)
-    return share * half
-
-
-def index_xwins(row_off, nrows: int, col_off, ncols: int) -> jnp.ndarray:
-    """(nrows, ncols) boolean 'global x index > global y index' tiebreak —
-    THE definition of the ``ties='ignore'`` index convention, shared by the
-    blocked square paths (offsets = block coordinates × tile) and the
-    distributed bodies (offsets = device row offsets, possibly traced).
-    The tri Pallas kernel body inlines the same ``>`` per y row to avoid
-    materializing the tile."""
-    rows = row_off + jnp.arange(nrows)
-    cols = col_off + jnp.arange(ncols)
-    return rows[:, None] > cols[None, :]
-
-
-def square_xwins(n: int) -> jnp.ndarray:
-    """(n, n) tiebreak for the square sequential case — what
-    ``ties='ignore'`` feeds the rectangular kernel forms."""
-    return index_xwins(0, n, 0, n)
+__all__ = ["TIE_MODES", "DEFAULT_TIES", "WeightFunctional", "validate_ties",
+           "focus_weight", "support_weight", "index_xwins", "resolve_weight"]

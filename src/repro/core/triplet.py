@@ -15,9 +15,10 @@ the dense pairwise form while keeping fully regular vector access.  Diagonal
 blocks (X == Y) fall back to the dense one-sided update, which already covers
 both orders of the pairs inside the block.
 
-Tie handling goes through the shared predicates of ``core/ties.py``; each
-mode matches ``reference.pald_pairwise_reference(ties=mode)`` entry-wise on
-arbitrary (tied or not) input.
+Tie handling goes through the shared weight functionals of
+``core/weights.py``; each built-in mode matches
+``reference.pald_pairwise_reference(ties=mode)`` entry-wise on arbitrary
+(tied or not) input.
 """
 from __future__ import annotations
 
@@ -29,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from .pairwise import _weights
-from .ties import DEFAULT_TIES, focus_weight, index_xwins, support_weight
+from .weights import (DEFAULT_TIES, focus_weight, index_xwins, resolve_weight,
+                      support_weight)
 
 __all__ = ["pald_block_symmetric"]
 
@@ -46,8 +48,9 @@ def pald_block_symmetric(
     block: int = 128,
     normalize: bool = False,
     n_valid: jnp.ndarray | int | None = None,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
 ) -> jnp.ndarray:
+    ties = resolve_weight(ties)
     D = D.astype(jnp.float32)
     n = D.shape[0]
     assert n % block == 0, "caller must pad to a block multiple"
@@ -80,7 +83,7 @@ def pald_block_symmetric(
         Wxy = jax.lax.dynamic_slice(W, (xb * block, yb * block), (block, block))
         diag = xb == yb
         xw = yw = None
-        if ties == "ignore":
+        if ties.needs_index_tiebreak:
             # global-index tiebreak; on diagonal blocks the one-sided x-role
             # visits both orders of every in-block pair, so xw alone covers it
             xw = index_xwins(xb * block, block, yb * block, block)[:, :, None]
@@ -118,6 +121,7 @@ from . import engine as _engine  # noqa: E402  (registry import, cycle-free)
 def _exec_triplet(D, plan):
     Dp, n0 = _engine.pad_distance_matrix(D, plan.block)  # f32 boundary cast
     nv = jnp.asarray(n0) if Dp.shape[0] != n0 else None
-    C = pald_block_symmetric(Dp, block=plan.block, n_valid=nv, ties=plan.ties)
+    C = pald_block_symmetric(Dp, block=plan.block, n_valid=nv,
+                             ties=plan.weight)
     C = C[:n0, :n0]
     return C / max(n0 - 1, 1) if plan.normalize else C

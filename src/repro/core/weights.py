@@ -1,0 +1,371 @@
+"""Pluggable cohesion weight functionals — ONE contribution algebra.
+
+PaLD's two passes are parameterized by two pointwise weights (DESIGN.md
+§14): a pass-1 FOCUS weight (how strongly third point z belongs to the
+(x, y) conflict focus) and a pass-2 SUPPORT weight (with what share z
+backs the "own" point of the pair).  *Generalized partitioned local
+depth* (Berenhaut, Foley & Lyu 2023, arXiv:2303.10167) shows the whole
+algorithm family is exactly this pair of functionals varied — the three
+historical ``ties=`` modes are three members of the family, not special
+cases of the kernels.
+
+This module is the single seam: a :class:`WeightFunctional` bundles the
+two callables plus declared algebraic properties, a registry names the
+instances, and every tile body in the repository (blocked jnp, all
+Pallas kernels and their fallbacks, the knn tile, the distributed shard
+bodies, the reference oracles in ``kernels/ref.py``) calls the two
+dispatchers :func:`focus_weight` / :func:`support_weight` below.  A new
+functional therefore works on every (method, schedule, impl) cell with
+ZERO kernel forks: the functional rides the same hashable static
+argument slots the ``ties`` string used to ride (``static_argnames`` on
+the jit'd entry points, ``functools.partial`` into Pallas kernel
+bodies), so each kernel trace specializes on the functional's closed
+expressions exactly as it specialized on the string branch before.
+
+The contract, for a pair (x, y) and third point z:
+
+``focus(dxz, dyz, dxy) -> float32``
+    membership weight of z in the (x, y) focus; summed over z into U.
+``support(d_own, d_other, d_pair, own_wins=None) -> float32``
+    z's contribution to the OWN point of the pair — for the x role
+    ``(d_own, d_other, d_pair) = (d_xz, d_yz, d_xy)``, the y role swaps
+    own/other.  Multiplied by W = 1/U and accumulated into C.
+    ``own_wins`` is the global-index tiebreak (x index > partner index),
+    only inspected when ``needs_index_tiebreak`` is declared.
+``share(d_own, d_other) -> float32``  (optional)
+    declared factoring for mass-conserving families whose support is
+    the focus weight split between the two roles: when set,
+    ``where(isnan(s), 0, s)`` with ``s = share(a, b) * focus(a, b, c)``
+    is bitwise-equal to ``support(a, b, c)`` on EVERY input (padding
+    included).  Bodies that already hold the focus cube for the same
+    (own, other, pair) triples — the fused knn tile — use it to skip
+    evaluating a second smooth cube.
+
+Both callables must be trace-safe inside Pallas tile bodies: jnp
+elementwise ops only, broadcasting like the comparisons they replace,
+and EXACT zeros on +inf-padded operands (padded points must stay
+outside every focus — the nan-guards in the smooth families below exist
+precisely because ``inf - inf`` is nan).
+
+Declared properties, consumed by the engine and the test suite:
+
+``needs_index_tiebreak``
+    the support weight inspects ``own_wins``; gates every piece of
+    xwins plumbing (per-tile iota masks in the kernels, explicit
+    ``xwins`` operands on the rectangular/distributed forms).  The
+    other functionals short-circuit all of it.
+``conserves_mass``
+    every pair with a nonempty focus distributes exactly total weight 1
+    (so sum(C) == n(n-1)/2 un-normalized) on any input with positive
+    off-diagonal distances.  The hypothesis mass law quantifies over
+    every registered functional declaring this.
+``is_strict``
+    both weights are 0/1 indicators, so U is an integer count.
+
+Built-ins (bitwise-identical to the pre-refactor ``ties=`` branches):
+``drop``, ``split``, ``ignore``.  New families: :func:`soft_threshold`
+(sigmoid focus/support with temperature, recovering ``split`` in the
+tau -> 0 limit) and :func:`kernelized` (strict focus, Gaussian-kernel
+support shares).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax.numpy as jnp
+
+TIE_MODES = ("drop", "split", "ignore")
+DEFAULT_TIES = "drop"
+
+__all__ = [
+    "TIE_MODES", "DEFAULT_TIES", "WeightFunctional", "register_weight",
+    "registered_weights", "resolve_weight", "validate_ties",
+    "focus_weight", "support_weight", "index_xwins",
+    "soft_threshold", "kernelized", "DROP", "SPLIT", "IGNORE",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightFunctional:
+    """One member of the generalized-PaLD family (module docstring).
+
+    Frozen and hashable, so an instance can ride every ``ties=`` static
+    argument slot (jit ``static_argnames``, ``functools.partial`` into
+    Pallas kernel bodies) — each kernel trace specializes on the
+    instance exactly as it used to specialize on the mode string.
+    Parametrized families memoize their factories so equal parameters
+    return the SAME instance and jit caches stay warm.
+    """
+
+    name: str
+    focus: Callable = dataclasses.field(compare=False)
+    support: Callable = dataclasses.field(compare=False)
+    share: Callable | None = dataclasses.field(default=None, compare=False)
+    needs_index_tiebreak: bool = False
+    conserves_mass: bool = False
+    is_strict: bool = False
+
+    def properties(self) -> dict:
+        """The declared-property dict ``plan.explain()`` reports."""
+        return {
+            "name": self.name,
+            "needs_index_tiebreak": self.needs_index_tiebreak,
+            "conserves_mass": self.conserves_mass,
+            "is_strict": self.is_strict,
+        }
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+_REGISTRY: dict[str, WeightFunctional] = {}
+
+
+def register_weight(w: WeightFunctional,
+                    overwrite: bool = False) -> WeightFunctional:
+    """Register ``w`` under its name so ``weight="<name>"`` resolves to it
+    (and so it appears in knob-validation error messages)."""
+    if not overwrite and w.name in _REGISTRY and _REGISTRY[w.name] is not w:
+        raise ValueError(f"weight functional {w.name!r} already registered")
+    _REGISTRY[w.name] = w
+    return w
+
+
+def registered_weights() -> tuple:
+    """Sorted names of every registered weight functional."""
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_weight(weight) -> WeightFunctional:
+    """Resolve a ``weight=`` / ``ties=`` spec to a ``WeightFunctional``.
+
+    Accepts an instance (returned unchanged), a registered name, or
+    ``None`` (the default functional, ``drop``).  Unknown names raise a
+    ``ValueError`` enumerating every REGISTERED functional — including
+    user-registered ones — not a hardcoded mode tuple.
+    """
+    if weight is None:
+        return _REGISTRY[DEFAULT_TIES]
+    if isinstance(weight, WeightFunctional):
+        return weight
+    try:
+        return _REGISTRY[weight]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown weight functional {weight!r} "
+            f"(registered: {registered_weights()})") from None
+
+
+def validate_ties(ties) -> str:
+    """Validate a ``ties=`` mode (sugar for the three built-ins).
+
+    Kept name-compatible with the pre-refactor helper; the error text
+    enumerates the registered functionals reachable via ``weight=`` so
+    user-registered families are discoverable from the message.
+    """
+    if isinstance(ties, WeightFunctional):
+        ties = ties.name
+    if ties not in TIE_MODES:
+        raise ValueError(
+            f"unknown ties mode {ties!r} (expected one of {TIE_MODES}; "
+            f"for the full family use weight= with one of "
+            f"{registered_weights()})")
+    return ties
+
+
+# ---------------------------------------------------------------------------
+# the three built-ins — bodies are the exact pre-refactor jnp expressions,
+# so built-in results are BITWISE identical through the new layer
+# ---------------------------------------------------------------------------
+def _focus_strict(dxz, dyz, dxy):
+    return ((dxz < dxy) | (dyz < dxy)).astype(jnp.float32)
+
+
+def _focus_split(dxz, dyz, dxy):
+    strict = (dxz < dxy) | (dyz < dxy)
+    eq = (dxz == dxy) | (dyz == dxy)
+    return jnp.where(strict, 1.0, jnp.where(eq, 0.5, 0.0)).astype(jnp.float32)
+
+
+def _support_drop(d_own, d_other, d_pair, own_wins=None):
+    lt = d_own < d_other
+    memb = d_own < d_pair
+    return (lt & memb).astype(jnp.float32)
+
+
+def _support_ignore(d_own, d_other, d_pair, own_wins=None):
+    if own_wins is None:
+        raise ValueError("ties='ignore' needs own_wins (index tiebreak)")
+    lt = d_own < d_other
+    memb = d_own < d_pair
+    return ((lt | ((d_own == d_other) & own_wins)) & memb).astype(jnp.float32)
+
+
+def _support_split(d_own, d_other, d_pair, own_wins=None):
+    # share of the own-vs-other comparison times the half-step membership
+    # in the own-vs-pair comparison; the max-membership factor collapses
+    # to the role's own comparison (if x gets any share, d_xz <= d_yz)
+    lt = d_own < d_other
+    memb = d_own < d_pair
+    share = lt.astype(jnp.float32) + 0.5 * (d_own == d_other).astype(jnp.float32)
+    half = memb.astype(jnp.float32) + 0.5 * (d_own == d_pair).astype(jnp.float32)
+    return share * half
+
+
+DROP = register_weight(WeightFunctional(
+    "drop", _focus_strict, _support_drop, is_strict=True))
+SPLIT = register_weight(WeightFunctional(
+    "split", _focus_split, _support_split, conserves_mass=True))
+IGNORE = register_weight(WeightFunctional(
+    "ignore", _focus_strict, _support_ignore,
+    needs_index_tiebreak=True, conserves_mass=True, is_strict=True))
+
+
+# ---------------------------------------------------------------------------
+# dispatchers — the two names every tile body in the repository calls.
+# ``ties`` may be a mode string, a registered name, or a functional.
+# ---------------------------------------------------------------------------
+def focus_weight(dxz, dyz, dxy, ties=DEFAULT_TIES):
+    """Pass-1 membership weight of z in the (x, y) local focus."""
+    return resolve_weight(ties).focus(dxz, dyz, dxy)
+
+
+def support_weight(d_own, d_other, d_pair, ties=DEFAULT_TIES, own_wins=None):
+    """Pass-2 weight with which z supports the 'own' point of a pair."""
+    return resolve_weight(ties).support(d_own, d_other, d_pair, own_wins)
+
+
+def index_xwins(row_off, nrows: int, col_off, ncols: int) -> jnp.ndarray:
+    """(nrows, ncols) boolean 'global x index > global y index' tiebreak —
+    THE definition of the index convention behind ``needs_index_tiebreak``
+    functionals (``ties='ignore'``), shared by the blocked square paths
+    (offsets = block coordinates x tile) and the distributed bodies
+    (offsets = device row offsets, possibly traced).  Always derived
+    per-tile from offsets; there is deliberately no dense (n, n) form."""
+    rows = row_off + jnp.arange(nrows)
+    cols = col_off + jnp.arange(ncols)
+    return rows[:, None] > cols[None, :]
+
+
+# ---------------------------------------------------------------------------
+# new families
+# ---------------------------------------------------------------------------
+def _sigmoid(x):
+    """Smoothstep sigmoid: ``0.5 + x*(0.5 - |x|/8)`` on ``clip(x, -2, 2)``.
+
+    An S-curve with the logistic's fixed points (0.5 at 0, rails at
+    saturation) built from clip/abs/mul/add only — no transcendental
+    and, unlike rational forms such as ``x/(1+|x|)``, no division,
+    which is the multi-cycle op on CPU and TPU VPUs (this is what keeps
+    the soft functional inside the <= 15%-over-drop benchmark gate);
+    every op is available in every Pallas lowering.  On the clamped
+    domain the quadratic is C^1 and monotone (slope ``0.5 - |x|/4 >=
+    0``) and meets the rails with zero slope, so no outer clip is
+    needed.  Saturation is EXACT: ``0.5 + 2*(0.5 - 0.25)`` is 1.0
+    bitwise (all dyadic), so any |x| >= 2 lands on exactly 1.0 / 0.0 —
+    the tau -> 0 split-recovery guarantee rides on this.  +-inf
+    operands (padding) hit the clamp, not an inf/inf = nan; nan inputs
+    propagate for the caller's guard.
+    """
+    x = jnp.clip(x, -2.0, 2.0)
+    return 0.5 + x * (0.5 - 0.125 * jnp.abs(x))
+
+
+def _safe_unit(diff, inv, tie=0.5):
+    """sigmoid(diff * inv) with the inf - inf = nan case pinned to ``tie``.
+
+    Padded operands are +inf; their differences are nan exactly when both
+    sides are padded, and the membership factor is an exact 0 there, so
+    pinning the share to the tie value keeps every product finite and the
+    padded contribution exactly zero.
+    """
+    s = _sigmoid(diff * inv)
+    return jnp.where(jnp.isnan(diff), jnp.float32(tie), s)
+
+
+@functools.lru_cache(maxsize=None)
+def soft_threshold(tau: float = 0.1) -> WeightFunctional:
+    """Sigmoid focus/support with temperature ``tau``.
+
+    Focus membership is ``mu = sigmoid((d_pair - min(d_xz, d_yz)) /
+    tau)`` — one sigmoid of the closer contestant's margin against the
+    pair distance; that membership IS the soft threshold the family is
+    named for.  z's support for the own point is ``s * mu`` where the
+    share ``s`` ramps linearly from 0 to 1 over the ``+-2*tau`` band of
+    ``d_other - d_own`` (a hard sigmoid: ``clip(0.5 + (d_other - d_own)
+    / (4*tau), 0, 1)``).  The x and y shares sum to 1 (clip-symmetric),
+    so the two supports sum to the focus weight and every pair
+    distributes total mass 1: ``conserves_mass`` holds on ANY input
+    (U > 0 always).  As tau -> 0 both factors harden to the half-step,
+    recovering the ``split`` built-in exactly — case by case: the closer
+    contestant's min reproduces split's or-of-comparisons focus, the
+    share its 0.5-per-tie vote (asserted in tests/test_weights.py).
+
+    This factoring is the cheap form: one smoothstep sigmoid per tile
+    body (see ``_sigmoid``; the ramp share is mul/add/clip) versus 3
+    sigmoids in pass 1 + 2 in pass 2 for the naive share-weighted
+    ``s*mu_x + (1-s)*mu_y``.  benchmarks/BENCH_PR8.json 'weights'
+    section gates the cost at <= 15% over strict 'drop'.
+
+    Memoized on tau: equal temperatures return the same instance, so jit
+    caches keyed on the functional stay warm.
+    """
+    # python float, not a jnp scalar: a closure-captured concrete array
+    # would be a "captured constant" Pallas refuses to trace
+    inv = 1.0 / float(tau)
+
+    # quarter = 1/(4*tau): the ramp share hits its clip rails at
+    # |d_other - d_own| = 2*tau, and clip(+-inf) / clip(0.5) are exact,
+    # so the tau -> 0 split recovery is bitwise just like the sigmoid's
+    # saturation
+    quarter = 0.25 * inv
+
+    def focus(dxz, dyz, dxy):
+        return _safe_unit(dxy - jnp.minimum(dxz, dyz), inv, tie=0.0)
+
+    def share(d_own, d_other):
+        return jnp.clip(0.5 + (d_other - d_own) * quarter, 0.0, 1.0)
+
+    def support(d_own, d_other, d_pair, own_wins=None):
+        memb = _sigmoid((d_pair - jnp.minimum(d_own, d_other)) * inv)
+        # one guard on the product instead of one per factor: every nan
+        # source (inf - inf on padded operands) wants an exact-zero
+        # support, because the padded membership is an exact 0 there
+        res = share(d_own, d_other) * memb
+        return jnp.where(jnp.isnan(res), 0.0, res)
+
+    name = "soft" if float(tau) == 0.1 else f"soft@{float(tau):g}"
+    return WeightFunctional(name, focus, support, share=share,
+                            conserves_mass=True)
+
+
+@functools.lru_cache(maxsize=None)
+def kernelized(gamma: float = 1.0) -> WeightFunctional:
+    """Strict focus, Gaussian-kernelized support shares.
+
+    Membership stays the strict indicator (same expression as ``drop``),
+    but an in-focus z splits its vote by relative kernel similarity:
+    ``share = K(d_own) / (K(d_own) + K(d_other))`` with ``K(d) =
+    exp(-d^2 / gamma^2)`` — algebraically ``sigmoid((d_other^2 -
+    d_own^2) / gamma^2)``, computed in that stable form.  A barely-closer
+    z no longer casts a full vote (robust support, after the generalized
+    PaLD family), and exact ties split 0.5/0.5 without any index
+    tiebreak.  Mass is NOT conserved: the share leaks to the out-of-focus
+    role like ``drop``.  Memoized on gamma.
+    """
+    inv = 1.0 / (float(gamma) * float(gamma))  # python float (Pallas-safe)
+
+    def support(d_own, d_other, d_pair, own_wins=None):
+        memb = d_own < d_pair
+        share = _safe_unit(d_other * d_other - d_own * d_own, inv)
+        return jnp.where(memb, share, 0.0).astype(jnp.float32)
+
+    name = ("kernelized" if float(gamma) == 1.0
+            else f"kernelized@{float(gamma):g}")
+    return WeightFunctional(name, _focus_strict, support)
+
+
+register_weight(soft_threshold())
+register_weight(kernelized())

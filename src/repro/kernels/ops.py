@@ -21,11 +21,14 @@ Dims that don't divide by the chosen tile are padded up to the next tile
 multiple (+inf distances / zero weights, exact by construction) instead of
 silently degrading to tiny divisor blocks.
 
-Every entry point takes ``ties ∈ {'drop', 'split', 'ignore'}``
-(``core/ties.py``); all impls of one mode agree entry-wise, on tied input
-included.  The rectangular ``cohesion_general`` form needs the caller to
-supply the ``ties='ignore'`` global-index tiebreak (``xwins``); the square
-and fused forms derive it themselves.
+Every entry point takes ``ties`` — a mode string, a registered weight
+functional name, or a ``WeightFunctional`` instance (``core/weights.py``);
+all impls of one functional agree entry-wise, on tied input included.  The
+rectangular ``cohesion_general`` form needs the caller to supply the
+global-index tiebreak of ``needs_index_tiebreak`` functionals either as an
+explicit ``xwins`` array (distributed callers own traced offsets) or as
+static ``xw_offsets`` it derives per tile; the square and fused forms
+derive it themselves.
 """
 from __future__ import annotations
 
@@ -35,8 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.resilience import fault_point
-from repro.core.ties import (DEFAULT_TIES, focus_weight, index_xwins,
-                             square_xwins, support_weight, validate_ties)
+from repro.core.weights import (DEFAULT_TIES, focus_weight, index_xwins,
+                                resolve_weight, support_weight)
 from repro.tuning import autotune as _tuner
 
 from .pald_cohesion import cohesion_general_pallas, cohesion_pallas  # noqa: F401
@@ -99,11 +102,12 @@ def _pad2(a: jnp.ndarray, mr: int, mc: int, value: float) -> jnp.ndarray:
 
 
 def _resolve_blocks(n: int, pass_: str, block, block_z, impl: str,
-                    ties: str = DEFAULT_TIES) -> tuple[int, int]:
+                    ties=DEFAULT_TIES) -> tuple[int, int]:
     """Turn "auto" block requests into concrete tiles via the tuning cache.
 
-    ``ties`` joins the cache key for non-default modes — the tile bodies
-    differ (extra equality masks / tiebreak input), so their optima may too.
+    The weight functional joins the cache key for non-default choices —
+    the tile bodies differ (extra equality masks / tiebreak input /
+    transcendentals), so their optima may too (``:t-``/``:w-`` key parts).
     """
     if block == "auto" or block_z == "auto":
         rb, rbz = _tuner.resolve_blocks(n, pass_, impl=impl, ties=ties)
@@ -147,9 +151,10 @@ def _focus_general_jnp(DXZ, DYZ, DXY, *, chunk: int = 512,
     return U
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "ties"))
+@functools.partial(jax.jit, static_argnames=("chunk", "ties", "xw_offsets"))
 def _cohesion_general_jnp(DXZ, DYZ, DXY, W, XW=None, *, chunk: int = 128,
-                          ties: str = DEFAULT_TIES):
+                          ties=DEFAULT_TIES, xw_offsets=None):
+    wfun = resolve_weight(ties)
     my = DYZ.shape[0]
     mx, mz = DXZ.shape
     c = _adaptive_chunk(mx, mz, my, chunk)
@@ -158,20 +163,30 @@ def _cohesion_general_jnp(DXZ, DYZ, DXY, W, XW=None, *, chunk: int = 128,
         return A.reshape(A.shape[0], my // c, c).transpose(1, 0, 2)
 
     def body(acc, blks):
-        dyz, dxy, w, xw = blks  # (c, mz), (mx, c), (mx, c), (mx, c)|None
-        own = xw[:, :, None] if ties == "ignore" else None
+        dyz, dxy, w, xw, yoff = blks  # (c, mz), (mx, c), (mx, c), (mx, c)|-, ()
+        own = None
+        if wfun.needs_index_tiebreak:
+            if xw_offsets is not None:
+                # derive the (mx, c) tiebreak chunk from static global
+                # offsets — the square case never materializes it whole
+                own = index_xwins(xw_offsets[0], mx,
+                                  xw_offsets[1] + yoff, c)[:, :, None]
+            else:
+                own = xw[:, :, None]
         g = support_weight(DXZ[:, None, :], dyz[None, :, :], dxy[:, :, None],
-                           ties, own)
+                           wfun, own)
         return acc + jnp.einsum("xyz,xy->xz", g, w), None
 
-    if ties == "ignore":
+    if wfun.needs_index_tiebreak and xw_offsets is None:
         if XW is None:
-            raise ValueError("ties='ignore' needs XW (global-index tiebreak)")
+            raise ValueError(f"weight {wfun.name!r} needs XW "
+                             "(global-index tiebreak)")
         xw_chunks = chunked(XW)
     else:
         # dummy zero-size leaf keeps the scan structure mode-independent
         xw_chunks = jnp.zeros((my // c, mx, 0), jnp.bool_)
-    xs = (DYZ.reshape(my // c, c, -1), chunked(DXY), chunked(W), xw_chunks)
+    xs = (DYZ.reshape(my // c, c, -1), chunked(DXY), chunked(W), xw_chunks,
+          jnp.arange(my // c, dtype=jnp.int32) * c)
     C, _ = jax.lax.scan(body, jnp.zeros((DXZ.shape[0], DXZ.shape[1]), jnp.float32), xs)
     return C
 
@@ -189,7 +204,7 @@ def _tri_pairs(nb: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "ties"))
-def _focus_tri_jnp(D, *, block: int = 128, ties: str = DEFAULT_TIES):
+def _focus_tri_jnp(D, *, block: int = 128, ties=DEFAULT_TIES):
     n = D.shape[0]
     nb = n // block
     xs, ys = _tri_pairs(nb)
@@ -209,7 +224,7 @@ def _focus_tri_jnp(D, *, block: int = 128, ties: str = DEFAULT_TIES):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "ties"))
-def _cohesion_tri_jnp(D, W, *, block: int = 128, ties: str = DEFAULT_TIES):
+def _cohesion_tri_jnp(D, W, *, block: int = 128, ties=DEFAULT_TIES):
     """Both role updates per upper-triangular block pair.
 
     The y-role is expressed in the same row-major orientation as the x-role
@@ -221,6 +236,7 @@ def _cohesion_tri_jnp(D, W, *, block: int = 128, ties: str = DEFAULT_TIES):
     Diagonal blocks skip the y-role computation entirely (lax.cond): the
     one-sided x-role already covers both orders of every in-block pair.
     """
+    wfun = resolve_weight(ties)
     n = D.shape[0]
     nb = n // block
     xs, ys = _tri_pairs(nb)
@@ -232,7 +248,7 @@ def _cohesion_tri_jnp(D, W, *, block: int = 128, ties: str = DEFAULT_TIES):
         Dxy = jax.lax.dynamic_slice_in_dim(Dx, yb * block, block, axis=1)
         Wxy = jax.lax.dynamic_slice(W, (xb * block, yb * block), (block, block))
         xw = yw = None
-        if ties == "ignore":
+        if wfun.needs_index_tiebreak:
             xw = index_xwins(xb * block, block, yb * block, block)[:, :, None]
             yw = index_xwins(yb * block, block, xb * block, block)[:, :, None]
         gx = support_weight(Dx[:, None, :], Dy[None, :, :], Dxy[:, :, None],
@@ -295,7 +311,7 @@ def _fused_z_chunk(m: int, block: int, block_z: int) -> int:
                    static_argnames=("metric", "block", "block_z", "n_valid",
                                     "ties"))
 def _focus_fused_jnp(X, *, metric: str, block: int, block_z: int, n_valid: int,
-                     ties: str = DEFAULT_TIES):
+                     ties=DEFAULT_TIES):
     m = X.shape[0]
     nb = m // block
     cz = _fused_z_chunk(m, block, block_z)
@@ -327,7 +343,8 @@ def _focus_fused_jnp(X, *, metric: str, block: int, block_z: int, n_valid: int,
                    static_argnames=("metric", "block", "block_z", "n_valid",
                                     "ties"))
 def _cohesion_fused_jnp(X, W, *, metric: str, block: int, block_z: int,
-                        n_valid: int, ties: str = DEFAULT_TIES):
+                        n_valid: int, ties=DEFAULT_TIES):
+    wfun = resolve_weight(ties)
     m = X.shape[0]
     nb = m // block
     cz = _fused_z_chunk(m, block, block_z)
@@ -340,7 +357,7 @@ def _cohesion_fused_jnp(X, W, *, metric: str, block: int, block_z: int,
             Dxy = jax.lax.dynamic_slice(Dx, (0, yb * block), (block, block))
             Wxy = jax.lax.dynamic_slice(W, (xb * block, yb * block), (block, block))
             xw = None
-            if ties == "ignore":  # every ordered block pair is visited
+            if wfun.needs_index_tiebreak:  # every ordered block pair visited
                 xw = index_xwins(xb * block, block, yb * block, block)[:, :, None]
 
             def zstep(zb, acc):
@@ -365,10 +382,10 @@ def _cohesion_fused_jnp(X, W, *, metric: str, block: int, block_z: int,
 # public entry points
 # --------------------------------------------------------------------------
 def focus_general(DXZ, DYZ, DXY, *, block=128, block_z=512,
-                  impl: str | None = None, ties: str = DEFAULT_TIES):
-    validate_ties(ties)
+                  impl: str | None = None, ties=DEFAULT_TIES):
+    ties = resolve_weight(ties)
     impl = impl or _default_impl()
-    fault_point("ops.focus_general", impl=impl, ties=ties)
+    fault_point("ops.focus_general", impl=impl, ties=ties.name)
     block, block_z = _resolve_blocks(max(DXZ.shape), "focus", block, block_z,
                                      impl, ties)
     if impl == "jnp":
@@ -388,30 +405,41 @@ def focus_general(DXZ, DYZ, DXY, *, block=128, block_z=512,
 
 
 def cohesion_general(DXZ, DYZ, DXY, W, *, block=128, block_z=512,
-                     impl: str | None = None, ties: str = DEFAULT_TIES,
-                     xwins=None):
-    """``xwins`` (mx, my) bool — global index of x > global index of y —
-    is required for ``ties='ignore'``: the rectangular form cannot derive
-    global row identities itself (distributed callers own the offsets)."""
-    validate_ties(ties)
+                     impl: str | None = None, ties=DEFAULT_TIES,
+                     xwins=None, xw_offsets=None):
+    """For ``needs_index_tiebreak`` functionals (``ties='ignore'``) the
+    rectangular form needs the global-index tiebreak — either ``xwins``
+    (mx, my) bool, "global index of x > global index of y", for
+    distributed callers whose row identities are data (traced offsets);
+    or static ``xw_offsets`` = (row_off, col_off) global offsets, from
+    which the tiebreak is derived per tile/chunk and never materialized
+    whole (the square sequential case passes (0, 0))."""
+    ties = resolve_weight(ties)
     impl = impl or _default_impl()
-    fault_point("ops.cohesion_general", impl=impl, ties=ties)
+    fault_point("ops.cohesion_general", impl=impl, ties=ties.name)
     block, block_z = _resolve_blocks(max(DXZ.shape), "cohesion", block, block_z,
                                      impl, ties)
-    if ties == "ignore" and xwins is None:
-        raise ValueError("ties='ignore' needs xwins (global-index tiebreak)")
+    if ties.needs_index_tiebreak and xwins is None and xw_offsets is None:
+        raise ValueError(f"weight {ties.name!r} needs xwins or xw_offsets "
+                         "(global-index tiebreak)")
     if impl == "jnp":
-        XW = xwins if ties == "ignore" else None
+        XW = offs = None
+        if ties.needs_index_tiebreak:
+            XW, offs = xwins, (None if xwins is not None else tuple(xw_offsets))
         return _cohesion_general_jnp(DXZ, DYZ, DXY, W, XW, chunk=block,
-                                     ties=ties)
+                                     ties=ties, xw_offsets=offs)
     (mx, mz), my = DXZ.shape, DYZ.shape[0]
     bx, mxp = _block_and_pad(mx, block)
     by, myp = _block_and_pad(my, block)
     bz, mzp = _block_and_pad(mz, block_z)
-    XW = None
-    if ties == "ignore":
-        # pad with 0 ("x does not win"): padded pairs carry zero weight anyway
-        XW = _pad2(xwins.astype(jnp.float32), mxp, myp, 0.0)
+    XW = offs = None
+    if ties.needs_index_tiebreak:
+        if xwins is not None:
+            # pad with 0 ("x does not win"): padded pairs carry zero weight
+            XW = _pad2(xwins.astype(jnp.float32), mxp, myp, 0.0)
+        else:
+            # per-tile in-kernel derivation from the static global offsets
+            offs = (int(xw_offsets[0]), int(xw_offsets[1]))
     C = cohesion_general_pallas(
         _pad2(DXZ, mxp, mzp, jnp.inf),
         _pad2(DYZ, myp, mzp, jnp.inf),
@@ -419,17 +447,17 @@ def cohesion_general(DXZ, DYZ, DXY, W, *, block=128, block_z=512,
         _pad2(W, mxp, myp, 0.0),
         XW,
         block_x=bx, block_z=bz, block_y=by, interpret=impl == "interpret",
-        ties=ties,
+        ties=ties, xw_offsets=offs,
     )
     return C[:mx, :mz]
 
 
 def focus(D, *, block=128, block_z=512, impl: str | None = None,
-          schedule: str = "dense", ties: str = DEFAULT_TIES):
+          schedule: str = "dense", ties=DEFAULT_TIES):
     """schedule='tri' uses the upper-triangular scalar-prefetch kernel
     (pald_focus_tri): ~half the comparisons of the dense grid, same
     result.  Only meaningful for the square (sequential) case."""
-    validate_ties(ties)
+    ties = resolve_weight(ties)
     if schedule == "tri":
         impl = impl or ("pallas" if on_tpu() else "jnp")
         n = D.shape[0]
@@ -454,13 +482,14 @@ def focus(D, *, block=128, block_z=512, impl: str | None = None,
 
 
 def cohesion_from_weights(D, W, *, block=128, block_z=512, impl: str | None = None,
-                          schedule: str = "dense", ties: str = DEFAULT_TIES):
+                          schedule: str = "dense", ties=DEFAULT_TIES):
     """Pass 2 from precomputed reciprocal weights W = 1/U.
 
     schedule='tri' enumerates only the upper-triangular block pairs and
     applies both role updates per visit (pald_cohesion_tri).  The square
-    case derives the ties='ignore' index tiebreak itself."""
-    validate_ties(ties)
+    case derives the index tiebreak per tile itself (``xw_offsets=(0, 0)``
+    — the dense (n, n) tiebreak is never materialized)."""
+    ties = resolve_weight(ties)
     if schedule == "tri":
         impl = impl or ("pallas" if on_tpu() else "jnp")
         n = D.shape[0]
@@ -478,9 +507,9 @@ def cohesion_from_weights(D, W, *, block=128, block_z=512, impl: str | None = No
             ties=ties,
         )
         return C[:n0, :n0]
-    xwins = square_xwins(D.shape[0]) if ties == "ignore" else None
+    offs = (0, 0) if ties.needs_index_tiebreak else None
     return cohesion_general(D, D, D, W, block=block, block_z=block_z, impl=impl,
-                            ties=ties, xwins=xwins)
+                            ties=ties, xw_offsets=offs)
 
 
 def pald(
@@ -492,7 +521,7 @@ def pald(
     n_valid=None,
     impl: str | None = None,
     schedule: str = "dense",
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
 ):
     """Full PaLD via the kernel pipeline (inputs padded internally as needed).
 
@@ -500,7 +529,8 @@ def pald(
     'jnp' (vectorized fallback), or None for backend default.
     schedule: 'dense' runs the full rectangular grids; 'tri' dispatches to
     the fused upper-triangular pipeline (``pald_tri``).
-    ties: tie-handling mode shared by both passes (core/ties.py).
+    ties: weight functional (name or instance) shared by both passes
+    (core/weights.py).
     """
     if schedule == "tri":
         return pald_tri(D, block=block, block_z=block_z, normalize=normalize,
@@ -523,7 +553,7 @@ def pald_fused(
     block_z=512,
     normalize: bool = False,
     impl: str | None = None,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
 ):
     """Fused features→cohesion pipeline: X (n, d) -> C (n, n).
 
@@ -539,9 +569,9 @@ def pald_fused(
     """
     from repro.core.features import pad_features
 
-    validate_ties(ties)
+    ties = resolve_weight(ties)
     impl = impl or ("pallas" if on_tpu() else "jnp")
-    fault_point("ops.pald_fused", impl=impl, ties=ties)
+    fault_point("ops.pald_fused", impl=impl, ties=ties.name)
     X = jnp.asarray(X, jnp.float32)
     n, d = X.shape
     block, block_z, _ = _tuner.resolve_fused_tiles(n, d, block, block_z,
@@ -584,16 +614,16 @@ def pald_tri(
     normalize: bool = False,
     n_valid=None,
     impl: str | None = None,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
 ):
     """Fused tri-schedule pipeline: tri-focus -> precomputed-reciprocal
     weights -> tri-cohesion.  Both passes visit only the nb(nb+1)/2
     upper-triangular block pairs (paper Algorithm 2 at block granularity,
     DESIGN.md §4.3); padding to the tile multiple happens once here.
     """
-    validate_ties(ties)
+    ties = resolve_weight(ties)
     impl = impl or ("pallas" if on_tpu() else "interpret")
-    fault_point("ops.pald_tri", impl=impl, ties=ties)
+    fault_point("ops.pald_tri", impl=impl, ties=ties.name)
     n_in = D.shape[0]
     bf, bzf = _resolve_blocks(n_in, "focus_tri", block, block_z, impl, ties)
     bc, bzc = _resolve_blocks(n_in, "cohesion_tri", block, block_z, impl, ties)
@@ -642,10 +672,11 @@ def _gather_tiles(x, idxc, kind: str, metric: str):
 @functools.partial(jax.jit,
                    static_argnames=("kind", "metric", "block", "ties"))
 def _knn_values_jnp(x, dn_p, idx_p, *, kind: str, metric: str, block: int,
-                    ties: str = DEFAULT_TIES):
+                    ties=DEFAULT_TIES):
     """Blocked-jnp fallback: lax.map over row chunks of the padded graph;
     each chunk gathers its own (block, k, k) tile and runs the shared
     ``knn_values_tile`` body."""
+    wfun = resolve_weight(ties)
     m, k = dn_p.shape
     offs = jnp.arange(m // block) * block
 
@@ -654,9 +685,9 @@ def _knn_values_jnp(x, dn_p, idx_p, *, kind: str, metric: str, block: int,
         idxc = jax.lax.dynamic_slice(idx_p, (off, 0), (block, k))
         g = _gather_tiles(x, idxc, kind, metric)
         ow = None
-        if ties == "ignore":
+        if wfun.needs_index_tiebreak:
             ow = (off + jnp.arange(block))[:, None] > idxc
-        return _knn.knn_values_tile(dnc, g, ow, ties)
+        return _knn.knn_values_tile(dnc, g, ow, wfun)
 
     return jax.lax.map(chunk, offs).reshape(m, k + 1)
 
@@ -669,7 +700,7 @@ def knn_values(
     metric: str = "euclidean",
     block: int | str = "auto",
     impl: str | None = None,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
 ) -> jnp.ndarray:
     """Sparse (n, k+1) cohesion values for a prebuilt neighbor graph.
 
@@ -684,14 +715,15 @@ def knn_values(
         impl: 'pallas' (TPU), 'interpret' (bit-faithful kernel on CPU) or
             'jnp' (vectorized fallback, the CPU speed path); None =
             backend default.
-        ties: tie mode shared with every other path (``core/ties.py``).
+        ties: weight functional (name or instance) shared with every
+            other path (``core/weights.py``).
 
     Returns:
         (n, k+1) float32 values, column 0 = self support, un-normalized.
     """
-    validate_ties(ties)
+    ties = resolve_weight(ties)
     impl = impl or _default_impl()
-    fault_point("ops.knn_values", impl=impl, ties=ties)
+    fault_point("ops.knn_values", impl=impl, ties=ties.name)
     x = jnp.asarray(x, jnp.float32)
     n, k = graph.indices.shape
     if k == 0:  # n == 1 (or an explicit empty graph): no pairs, no support
@@ -733,7 +765,7 @@ def pald_knn(
     metric: str = "euclidean",
     block: int | str = "auto",
     impl: str | None = None,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
     normalize: bool = False,
     row_chunk: int = 1024,
     graph: "_knn.NeighborGraph | None" = None,
@@ -766,7 +798,7 @@ def pald_knn(
         >>> vals.shape
         (3, 2)
     """
-    validate_ties(ties)
+    ties = resolve_weight(ties)
     x = jnp.asarray(x, jnp.float32)
     n = x.shape[0]
     k = min(int(k), max(n - 1, 0))
@@ -800,7 +832,7 @@ def _kernel_exec(D, plan, pipeline):
     nv = jnp.asarray(n0) if Dp.shape[0] != n0 else None
     kz = {} if plan.block_z is None else {"block_z": plan.block_z}
     C = pipeline(Dp, block=plan.block, n_valid=nv, impl=plan.impl,
-                 ties=plan.ties, **kz)
+                 ties=plan.weight, **kz)
     C = C[:n0, :n0]
     return C / max(n0 - 1, 1) if plan.normalize else C
 
@@ -819,7 +851,7 @@ def _exec_kernel_tri(D, plan):
 def _exec_fused(X, plan):
     return pald_fused(X, metric=plan.metric, block=plan.block,
                       block_z=plan.block_z, normalize=plan.normalize,
-                      impl=plan.impl, ties=plan.ties)
+                      impl=plan.impl, ties=plan.weight)
 
 
 # -- sparse k-NN cells ------------------------------------------------------
@@ -842,7 +874,7 @@ def _exec_knn_distance(D, plan):
     if plan.k >= n - 1:
         return _knn_dense_fallback(D, plan)
     graph, vals = pald_knn(D, k=plan.k, kind="distance", block=plan.block,
-                           impl=plan.impl, ties=plan.ties)
+                           impl=plan.impl, ties=plan.weight)
     C = _knn.scatter_dense(graph, vals)
     return C / max(n - 1, 1) if plan.normalize else C
 
@@ -857,6 +889,6 @@ def _exec_knn_features(X, plan):
         return _knn_dense_fallback(cdist_reference(X, metric=plan.metric),
                                    plan)
     graph, vals = pald_knn(X, k=plan.k, kind="features", metric=plan.metric,
-                           block=plan.block, impl=plan.impl, ties=plan.ties)
+                           block=plan.block, impl=plan.impl, ties=plan.weight)
     C = _knn.scatter_dense(graph, vals)
     return C / max(n - 1, 1) if plan.normalize else C

@@ -4,9 +4,9 @@
 
 with W = 1/U (zero diagonal / padded entries; computed outside the kernel so
 the reciprocal is done once — the paper's "precompute reciprocals" trick)
-and the tie-mode support predicate shared with every other path
-(``core/ties.py``; the default ``ties='drop'`` is the classic strict
-``(d_xz < d_yz) & (d_xz < d_xy)``).
+and the support contribution supplied by the resolved weight functional
+shared with every other path (``core/weights.py``; the default
+``ties='drop'`` is the classic strict ``(d_xz < d_yz) & (d_xz < d_xy)``).
 
 Grid (nx, nz, ny) with the y-reduction innermost: the output block C[X, Z]
 stays resident in VMEM across all y steps.  The kernel updates unit-stride
@@ -14,14 +14,19 @@ stays resident in VMEM across all y steps.  The kernel updates unit-stride
 C instead" stride-1 optimization (their C is updated column-wise because the
 z loop streams columns; our block layout makes the streamed dim contiguous).
 
-``ties='ignore'`` needs the global-index tiebreak: callers pass ``XW``
-(mx, my) float32, 1.0 where global index x > global index y, which rides the
-same BlockSpec as W.  The rectangular form cannot derive it from grid
-position (distributed callers own arbitrary row offsets), so it is an
-explicit input rather than an iota.
+Functionals declaring ``needs_index_tiebreak`` (the built-in ``'ignore'``)
+need the global-index x>y predicate.  Two equivalent static specs:
 
-VMEM = D_XZ + C_XZ + D_YZ + D_XY + W_XY (+ XW_XY for 'ignore')
-     = 3*bx*bz + 2*bx*by (+ bx*by) floats.
+- ``XW`` (mx, my) float32, 1.0 where global index x > global index y,
+  riding the same BlockSpec as W — for callers who already hold such a
+  tile (distributed shard bodies reuse their per-shard derivation);
+- ``xw_offsets=(row_off, col_off)`` — the kernel derives the predicate
+  per (bx, by) tile from grid position plus the static offsets via a
+  row iota, so no (mx, my) tiebreak array ever materializes.  This is
+  the default route for the sequential square case (offsets (0, 0)).
+
+VMEM = D_XZ + C_XZ + D_YZ + D_XY + W_XY (+ XW_XY for the explicit-XW
+route) = 3*bx*bz + 2*bx*by (+ bx*by) floats.
 """
 from __future__ import annotations
 
@@ -31,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.ties import DEFAULT_TIES, support_weight
+from repro.core.weights import DEFAULT_TIES, resolve_weight, support_weight
 
 __all__ = ["cohesion_pallas"]
 
@@ -61,7 +66,7 @@ def _cohesion_kernel(dxz_ref, dyz_ref, dxy_ref, w_ref, c_ref, *, ties):
 
 
 def _cohesion_kernel_xw(dxz_ref, dyz_ref, dxy_ref, w_ref, xw_ref, c_ref, *, ties):
-    """ties='ignore' variant: one extra (bx, by) tiebreak tile."""
+    """Index-tiebreak variant with an explicit (bx, by) tiebreak tile."""
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -87,27 +92,69 @@ def _cohesion_kernel_xw(dxz_ref, dyz_ref, dxy_ref, w_ref, xw_ref, c_ref, *, ties
     c_ref[...] += add
 
 
+def _cohesion_kernel_iota(dxz_ref, dyz_ref, dxy_ref, w_ref, c_ref, *, ties,
+                          row_off, col_off, block_x, block_y):
+    """Index-tiebreak variant deriving x>y per tile from grid position.
+
+    Global x index of tile row r is ``row_off + i*block_x + r``; global y
+    index of reduction lane y is ``col_off + k*block_y + y`` — a row iota
+    plus two scalars, so no dense (mx, my) tiebreak array is ever built.
+    """
+    i = pl.program_id(0)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    dxz = dxz_ref[...]
+    dyz = dyz_ref[...]
+    dxy = dxy_ref[...]
+    w = w_ref[...]
+    by = dxy.shape[1]
+    xg = row_off + i * block_x + jax.lax.broadcasted_iota(
+        jnp.int32, (dxz.shape[0], 1), 0)                        # (bx, 1)
+    ybase = col_off + k * block_y
+
+    def body(y, acc):
+        row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)
+        thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)
+        wy = jax.lax.dynamic_slice_in_dim(w, y, 1, axis=1)
+        xwy = xg > ybase + y                                    # (bx, 1)
+        g = support_weight(dxz, row, thr, ties, xwy)
+        return acc + g * wy
+
+    add = jax.lax.fori_loop(0, by, body, jnp.zeros_like(c_ref))
+    c_ref[...] += add
+
+
 @functools.partial(jax.jit, static_argnames=("block_x", "block_z", "block_y",
-                                             "interpret", "ties"))
+                                             "interpret", "ties",
+                                             "xw_offsets"))
 def cohesion_general_pallas(
     DXZ: jnp.ndarray,  # (mx, mz)
     DYZ: jnp.ndarray,  # (my, mz)
     DXY: jnp.ndarray,  # (mx, my)
     W: jnp.ndarray,    # (mx, my)
-    XW: jnp.ndarray | None = None,  # (mx, my) tiebreak, ties='ignore' only
+    XW: jnp.ndarray | None = None,  # (mx, my) explicit tiebreak tile
     *,
     block_x: int = 128,
     block_z: int = 512,
     block_y: int = 128,
     interpret: bool = False,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
+    xw_offsets: tuple[int, int] | None = None,
 ) -> jnp.ndarray:
     """C (mx, mz) = sum_y support_weight(DXZ, DYZ[y], DXY[:,y]) * W[:,y].
 
     Rectangular form for distributed per-device compute; the square
-    sequential case passes D three times.  ``ties='ignore'`` additionally
-    requires ``XW`` (1.0 where global x index > global y index).
+    sequential case passes D three times.  Functionals declaring
+    ``needs_index_tiebreak`` additionally require either ``XW`` (1.0 where
+    global x index > global y index) or static ``xw_offsets=(row_off,
+    col_off)`` global offsets from which the kernel derives the predicate
+    per tile.
     """
+    wfun = resolve_weight(ties)
     mx, mz = DXZ.shape
     my = DYZ.shape[0]
     assert DYZ.shape[1] == mz and DXY.shape == (mx, my) and W.shape == (mx, my)
@@ -122,15 +169,22 @@ def cohesion_general_pallas(
     ]
     args = [DXZ.astype(jnp.float32), DYZ.astype(jnp.float32),
             DXY.astype(jnp.float32), W.astype(jnp.float32)]
-    if ties == "ignore":
-        if XW is None:
-            raise ValueError("ties='ignore' needs XW (global-index tiebreak)")
-        assert XW.shape == (mx, my)
-        in_specs.append(pair_spec)                                 # XW
-        args.append(XW.astype(jnp.float32))
-        kernel = functools.partial(_cohesion_kernel_xw, ties=ties)
+    if wfun.needs_index_tiebreak:
+        if XW is not None:
+            assert XW.shape == (mx, my)
+            in_specs.append(pair_spec)                             # XW
+            args.append(XW.astype(jnp.float32))
+            kernel = functools.partial(_cohesion_kernel_xw, ties=wfun)
+        elif xw_offsets is not None:
+            kernel = functools.partial(
+                _cohesion_kernel_iota, ties=wfun,
+                row_off=int(xw_offsets[0]), col_off=int(xw_offsets[1]),
+                block_x=block_x, block_y=block_y)
+        else:
+            raise ValueError(f"weight {wfun.name!r} needs XW or xw_offsets "
+                             "(global-index tiebreak)")
     else:
-        kernel = functools.partial(_cohesion_kernel, ties=ties)
+        kernel = functools.partial(_cohesion_kernel, ties=wfun)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -149,11 +203,12 @@ def cohesion_pallas(
     block_z: int = 512,
     block_y: int = 128,
     interpret: bool = False,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
     XW: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Square cohesion matrix (un-normalized, sequential case)."""
+    offs = (0, 0) if XW is None else None
     return cohesion_general_pallas(
         D, D, D, W, XW, block_x=block_x, block_z=block_z, block_y=block_y,
-        interpret=interpret, ties=ties
+        interpret=interpret, ties=ties, xw_offsets=offs,
     )

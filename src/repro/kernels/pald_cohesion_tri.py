@@ -16,7 +16,8 @@ role updates:
     x-role:  C[x, z] += support_weight(d_xz, d_yz, d_xy) * W[x, y]
     y-role:  C[y, z] += support_weight(d_yz, d_xz, d_xy) * W[x, y]
 
-with the tie-mode predicate shared across every path (``core/ties.py``).
+with the support contribution supplied by the resolved weight functional
+shared across every path (``core/weights.py``).
 Before PR 3 the y-role reused the x-role's comparison through its complement
 (ties -> y, i.e. ``ties='ignore'``) while diagonal blocks ran the one-sided
 strict x-role (``ties='drop'``), so the schedule matched *neither* reference
@@ -54,7 +55,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.ties import DEFAULT_TIES, support_weight
+from repro.core.weights import DEFAULT_TIES, resolve_weight, support_weight
 
 __all__ = ["cohesion_tri_pallas"]
 
@@ -87,7 +88,7 @@ def _cohesion_tri_kernel(xs_ref, ys_ref, dxz_ref, dyz_ref, dxy_ref, w_ref,
         thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)   # (b, 1)  d_xy
         wy = jax.lax.dynamic_slice_in_dim(w, y, 1, axis=1)      # (b, 1)
         xw = yw = None
-        if ties == "ignore":
+        if ties.needs_index_tiebreak:
             # global-index tiebreak from the prefetched block coordinates; on
             # diagonal blocks the one-sided x-role visits both orders of every
             # in-block pair, so xw alone implements the mode there
@@ -124,9 +125,10 @@ def cohesion_tri_pallas(
     block: int = 128,
     block_z: int = 512,
     interpret: bool = False,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
 ) -> jnp.ndarray:
     """C (n, n) via the upper-triangular block schedule (square case only)."""
+    ties = resolve_weight(ties)
     n = D.shape[0]
     assert W.shape == (n, n)
     assert n % block == 0 and n % block_z == 0

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.ties import DEFAULT_TIES, focus_weight
+from repro.core.weights import DEFAULT_TIES, focus_weight, resolve_weight
 
 __all__ = ["focus_pallas"]
 
@@ -61,14 +61,16 @@ def focus_general_pallas(
     block_y: int = 128,
     block_z: int = 512,
     interpret: bool = False,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
 ) -> jnp.ndarray:
-    """U (mx, my) = sum_z (DXZ[x,z] < DXY[x,y]) | (DYZ[y,z] < DXY[x,y]).
+    """U (mx, my) = sum_z focus_weight(DXZ[x,z], DYZ[y,z], DXY[x,y]) for the
+    resolved weight functional (strict membership shown above).
 
     The rectangular form is what the distributed (shard_map) algorithms call
     per device, with DXZ/DYZ being locally-owned / gathered row blocks.  The
     sequential square case passes the same matrix three times.
     """
+    ties = resolve_weight(ties)
     mx, mz = DXZ.shape
     my = DYZ.shape[0]
     assert DYZ.shape[1] == mz and DXY.shape == (mx, my)
@@ -94,7 +96,7 @@ def focus_pallas(
     block_xy: int = 128,
     block_z: int = 512,
     interpret: bool = False,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
 ) -> jnp.ndarray:
     """Square local-focus size matrix (sequential case)."""
     return focus_general_pallas(

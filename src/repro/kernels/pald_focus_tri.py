@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.ties import DEFAULT_TIES, focus_weight
+from repro.core.weights import DEFAULT_TIES, focus_weight, resolve_weight
 
 __all__ = ["focus_tri_pallas"]
 
@@ -63,9 +63,10 @@ def focus_tri_pallas(
     block: int = 128,
     block_z: int = 512,
     interpret: bool = False,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
 ) -> jnp.ndarray:
     """U = local-focus sizes via the upper-triangular block schedule."""
+    ties = resolve_weight(ties)
     n = D.shape[0]
     assert n % block == 0 and n % block_z == 0
     nb = n // block

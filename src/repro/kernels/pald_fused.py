@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.features import masked_dist_tile
-from repro.core.ties import DEFAULT_TIES, focus_weight, support_weight
+from repro.core.weights import (DEFAULT_TIES, focus_weight, resolve_weight,
+                                support_weight)
 
 __all__ = ["focus_fused_pallas", "cohesion_fused_pallas"]
 
@@ -76,9 +77,10 @@ def focus_fused_pallas(
     block_y: int | None = None,
     block_z: int = 512,
     interpret: bool = False,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
 ) -> jnp.ndarray:
     """U (m, m) local-focus sizes computed straight from feature tiles."""
+    ties = resolve_weight(ties)
     m, d = X.shape
     block_y = block_y or block
     assert m % block == 0 and m % block_y == 0 and m % block_z == 0
@@ -124,12 +126,12 @@ def _cohesion_fused_kernel(xi_ref, xj_ref, xk_ref, w_ref, c_ref, *, metric,
     xg = xoff + jax.lax.broadcasted_iota(jnp.int32, (bx, 1), 0)
 
     # identical tile body to pald_cohesion._cohesion_kernel; the grid owns
-    # both offsets, so the ties='ignore' index tiebreak is an in-kernel iota
+    # both offsets, so the index tiebreak is an in-kernel iota
     def body(y, acc):
         row = jax.lax.dynamic_slice_in_dim(dyz, y, 1, axis=0)   # (1, bz)
         thr = jax.lax.dynamic_slice_in_dim(dxy, y, 1, axis=1)   # (bx, 1)
         wy = jax.lax.dynamic_slice_in_dim(w, y, 1, axis=1)      # (bx, 1)
-        xw = (xg > yoff + y) if ties == "ignore" else None
+        xw = (xg > yoff + y) if ties.needs_index_tiebreak else None
         g = support_weight(dxz, row, thr, ties, xw)
         return acc + g * wy
 
@@ -149,9 +151,10 @@ def cohesion_fused_pallas(
     block_y: int | None = None,
     block_z: int = 512,
     interpret: bool = False,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
 ) -> jnp.ndarray:
     """C (m, m) cohesion from feature tiles + precomputed weights."""
+    ties = resolve_weight(ties)
     m, d = X.shape
     block_y = block_y or block
     assert W.shape == (m, m)

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.knn import knn_values_tile
-from repro.core.ties import DEFAULT_TIES
+from repro.core.weights import DEFAULT_TIES, resolve_weight
 
 __all__ = ["knn_values_pallas"]
 
@@ -56,7 +56,7 @@ def _knn_kernel(dn_ref, g_ref, idx_ref, out_ref, *, block, k_valid, ties,
     g = g_ref[...]                                    # (block, k, k)
     k = dn.shape[1]
     ow = None
-    if ties == "ignore":
+    if ties.needs_index_tiebreak:
         rows = pl.program_id(0) * block + jax.lax.broadcasted_iota(
             jnp.int32, (block, k), 0)
         ow = rows > idx_ref[...]
@@ -78,7 +78,7 @@ def knn_values_pallas(
     *,
     block: int = 128,
     k_valid: int,
-    ties: str = DEFAULT_TIES,
+    ties=DEFAULT_TIES,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Sparse cohesion values (m, >= k+1) — caller slices to (n, k_valid+1).
@@ -88,6 +88,7 @@ def knn_values_pallas(
     of real neighbor columns when k was lane-padded.  Columns 0..k_valid
     of the output are [self, nbr_0, ..., nbr_{k_valid-1}]; everything past
     that (padded neighbors + lane fill) is junk/zero to slice away."""
+    ties = resolve_weight(ties)
     m, k = dn.shape
     assert m % block == 0 and g.shape == (m, k, k) and idx.shape == (m, k)
     n_cols = _out_cols(k, interpret)

@@ -8,12 +8,13 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.ties import DEFAULT_TIES, focus_weight, support_weight
+from repro.core.weights import (DEFAULT_TIES, focus_weight, resolve_weight,
+                                support_weight)
 
 __all__ = ["focus_ref", "cohesion_ref", "weights_ref"]
 
 
-def focus_ref(D: jnp.ndarray, *, ties: str = DEFAULT_TIES) -> jnp.ndarray:
+def focus_ref(D: jnp.ndarray, *, ties=DEFAULT_TIES) -> jnp.ndarray:
     D = D.astype(jnp.float32)
     m = focus_weight(D[:, None, :], D[None, :, :], D[:, :, None], ties)
     return jnp.sum(m, axis=-1).astype(jnp.float32)
@@ -30,11 +31,13 @@ def weights_ref(U: jnp.ndarray, n_valid=None) -> jnp.ndarray:
 
 
 def cohesion_ref(D: jnp.ndarray, W: jnp.ndarray, *,
-                 ties: str = DEFAULT_TIES) -> jnp.ndarray:
+                 ties=DEFAULT_TIES) -> jnp.ndarray:
+    ties = resolve_weight(ties)
     D = D.astype(jnp.float32)
     n = D.shape[0]
     ids = jnp.arange(n)
-    xw = (ids[:, None] > ids[None, :])[:, :, None] if ties == "ignore" else None
+    xw = ((ids[:, None] > ids[None, :])[:, :, None]
+          if ties.needs_index_tiebreak else None)
     # g[x, y, z] = support_weight(d_xz, d_yz, d_xy)
     g = support_weight(D[:, None, :], D[None, :, :], D[:, :, None], ties, xw)
     return jnp.einsum("xyz,xy->xz", g, W.astype(jnp.float32))

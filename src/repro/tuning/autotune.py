@@ -45,23 +45,34 @@ PASSES = ("focus", "cohesion", "focus_tri", "cohesion_tri", "pald",
           "pald_tri", "pald_fused", "pald_knn")
 
 
-def _pass_key(pass_: str, d: int | None, ties: str | None = None,
+# the three built-in tie modes (mirrors core/weights.TIE_MODES; duplicated
+# here because importing repro.core from this module would cycle through
+# repro.core.__init__ -> engine -> repro.tuning at import time)
+_TIE_MODES = ("drop", "split", "ignore")
+
+
+def _pass_key(pass_: str, d: int | None, ties=None,
               k: int | None = None) -> str:
     """Feature-fused cells depend on the feature dimension too: the optimal
     tile moves with d (the in-register distance compute scales with it), so
     d joins the cache key as a ``:d<d>`` suffix on the pass name.  The
     sparse knn pass depends on the neighborhood size the same way (the
     (block, k, k) tile scales with k^2), keyed ``:k<k>``.  Non-default
-    tie modes change the tile bodies (extra equality masks for 'split', the
-    index-tiebreak input for 'ignore'), so they get their own cells via a
-    ``:t-<mode>`` suffix; the default 'drop' keeps the legacy key so existing
-    caches stay valid."""
+    weight functionals change the tile bodies (extra equality masks for
+    'split', the index-tiebreak input for 'ignore', transcendentals for the
+    smooth families), so they get their own cells: the built-in tie modes
+    keep their legacy ``:t-<mode>`` suffix (existing caches stay valid, and
+    the default 'drop' keeps the bare key), every other functional — by
+    registered name or instance — gets ``:w-<name>`` so autotuned tiles
+    never leak across functionals."""
     if d is not None:
         pass_ = f"{pass_}:d{int(d)}"
     if k is not None:
         pass_ = f"{pass_}:k{int(k)}"
-    if ties and ties != "drop":
-        pass_ = f"{pass_}:t-{ties}"
+    name = getattr(ties, "name", ties)
+    if name and name != "drop":
+        tag = "t-" if name in _TIE_MODES else "w-"
+        pass_ = f"{pass_}:{tag}{name}"
     return pass_
 
 
@@ -256,7 +267,7 @@ def resolve_blocks_ex(
     backend: str | None = None,
     path: str | None = None,
     d: int | None = None,
-    ties: str | None = None,
+    ties=None,
     k: int | None = None,
 ) -> tuple[int, int, str]:
     """(block, block_z, source) for one pass at size n.
@@ -267,10 +278,11 @@ def resolve_blocks_ex(
 
     ``d`` (feature dimension) extends the key for the fused pass — tiles
     tuned at one d are not reused for another; ``k`` does the same for the
-    sparse knn pass (``pald_knn:k<k>``).  ``ties`` extends the key for
-    non-default tie modes (their tile bodies differ); a miss on a tie-mode
-    cell falls back to the strict cell's entry before the size heuristic,
-    since the optima rarely move much."""
+    sparse knn pass (``pald_knn:k<k>``).  ``ties`` (a mode string, a
+    registered functional name, or a ``WeightFunctional`` instance) extends
+    the key for every non-default functional (their tile bodies differ); a
+    miss on such a cell falls back to the strict cell's entry before the
+    size heuristic, since the optima rarely move much."""
     backend = backend or _default_backend()
     impl = impl or _default_impl(backend)
     base = _pass_key(pass_, d, k=k)
@@ -309,7 +321,7 @@ def resolve_blocks(
     backend: str | None = None,
     path: str | None = None,
     d: int | None = None,
-    ties: str | None = None,
+    ties=None,
     k: int | None = None,
 ) -> tuple[int, int]:
     """(block, block_z) for one pass at size n: cached, nearest, or default.
@@ -329,7 +341,7 @@ def resolve_fused_tiles(
     *,
     impl: str | None = None,
     backend: str | None = None,
-    ties: str | None = None,
+    ties=None,
     path: str | None = None,
 ) -> tuple[int, int, str | None]:
     """The fused pipeline's tile defaults, in exactly one place.
@@ -408,7 +420,7 @@ def _synthetic_inputs(n: int, seed: int = 0, with_weights: bool = False,
 
 
 def _runner(pass_: str, D, W, X, block: int, block_z: int, impl: str,
-            ties: str = "drop", k: int | None = None):
+            ties="drop", k: int | None = None):
     from repro.kernels import ops
     if pass_ == "pald_knn":
         return ops.pald_knn(D, k=k or 16, block=block, impl=impl,
@@ -449,7 +461,7 @@ def tune(
     seed: int = 0,
     iters: int = 3,
     d: int | None = None,
-    ties: str = "drop",
+    ties="drop",
     k: int | None = None,
     time_budget: float | None = None,
 ) -> dict:

@@ -230,6 +230,82 @@ def test_quantized_from_features_tie_modes(ties):
 
 
 # ---------------------------------------------------------------------------
+# weight-functional axis: the new families (core/weights.py) on every cell.
+# The oracle is the un-blocked jnp einsum composition (kernels/ref.py) —
+# structurally independent of the blocked/Pallas paths under test — run on
+# the TIE-HEAVY inputs, where smooth functionals actually differ from the
+# built-ins.  Cross-impl agreement (jnp vs interpret) rides the same cells.
+# ---------------------------------------------------------------------------
+NEW_WEIGHTS = ("soft", "kernelized")
+
+
+@functools.lru_cache(maxsize=None)
+def _weight_ref(kind: str, weight: str):
+    from repro.kernels import ref as _ref
+
+    _, D = _tie_case(kind)
+    Dj = jnp.asarray(D, jnp.float32)
+    U = _ref.focus_ref(Dj, ties=weight)
+    C = _ref.cohesion_ref(Dj, _ref.weights_ref(U), ties=weight)
+    return np.asarray(C / max(D.shape[0] - 1, 1))
+
+
+@pytest.mark.parametrize("weight", NEW_WEIGHTS)
+@pytest.mark.parametrize("kind", TIE_KINDS)
+@pytest.mark.parametrize("method,schedule",
+                         [("dense", "dense")] + BLOCKED_PATHS)
+def test_weight_functionals_match_einsum_oracle(kind, weight, method,
+                                                schedule):
+    _, D = _tie_case(kind)
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method=method,
+                                 schedule=schedule, block=8, weight=weight))
+    np.testing.assert_allclose(C, _weight_ref(kind, weight),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("weight", NEW_WEIGHTS)
+@pytest.mark.parametrize("impl", ["jnp", "interpret"])
+def test_weight_functionals_fused_cell(weight, impl):
+    """New functionals through the fused feature pipeline (zero kernel
+    forks: the same closed expressions trace into the fused tile body)."""
+    X, _ = _tie_case("duplicates")
+    Cd = np.asarray(pald.from_features(jnp.asarray(X), metric="sqeuclidean",
+                                       method="dense", weight=weight))
+    C = np.asarray(pald.from_features(jnp.asarray(X), metric="sqeuclidean",
+                                      block=8, block_z=8, impl=impl,
+                                      weight=weight))
+    np.testing.assert_allclose(C, Cd, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("weight", NEW_WEIGHTS)
+@pytest.mark.parametrize("impl", ["jnp", "interpret"])
+def test_weight_functionals_knn_cell(weight, impl):
+    """knn at full k is the identity restriction for ANY functional — the
+    gathered-neighborhood tile must reproduce the dense result."""
+    _, D = _tie_case("integer")
+    n = D.shape[0]
+    Cd = np.asarray(pald.cohesion(jnp.asarray(D), method="dense",
+                                  weight=weight))
+    Ck = np.asarray(pald.cohesion(jnp.asarray(D), method="knn", k=n - 1,
+                                  impl=impl, block=8, weight=weight))
+    np.testing.assert_allclose(Ck, Cd, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("weight", NEW_WEIGHTS)
+def test_weight_functionals_batched(weight):
+    """The uniform batch layer with a functional: batched == per-item loop,
+    chunked == unchunked bitwise."""
+    D = _batch_case(33, 3)
+    kw = dict(method="kernel", block=16, weight=weight)
+    Cb = np.asarray(pald.cohesion(jnp.asarray(D), **kw))
+    for i in range(3):
+        Ci = np.asarray(pald.cohesion(jnp.asarray(D[i]), **kw))
+        np.testing.assert_allclose(Cb[i], Ci, rtol=1e-6, atol=1e-7)
+    Cb2 = np.asarray(pald.cohesion(jnp.asarray(D), batch=2, **kw))
+    np.testing.assert_array_equal(Cb, Cb2)
+
+
+# ---------------------------------------------------------------------------
 # batched API: the engine's uniform (B, ...) layer on EVERY cell — distance
 # input (B, n, n) for all four methods incl. the Pallas tri pipeline, and
 # feature input (B, n, d) for the fused path.  Batched must equal the

@@ -292,6 +292,67 @@ def test_distributed_strict_mode_still_raises():
 
 
 # ---------------------------------------------------------------------------
+# weight functionals through the degradation chain: every rescue rung must
+# re-enter with the SAME functional — a fallback that silently swapped the
+# contribution algebra would "succeed" with different numbers
+# ---------------------------------------------------------------------------
+def _weight_plan_for_cell(cell, *, on_error="fallback"):
+    kw = dict(kind=cell[0], method=cell[1], schedule=cell[2], n=17,
+              weight="soft", on_error=on_error)
+    if cell[1] == "knn":
+        kw["k"] = 5
+    if cell[0] == "features":
+        kw["d"] = 3
+    return pald.plan(**kw)
+
+
+@pytest.mark.parametrize("cell", CELLS, ids=_IDS)
+def test_chain_rescues_with_same_weight_functional(cell):
+    """Kill each cell's primary dispatch under a NON-built-in functional:
+    the rescuing step must carry the functional (plan.weight rides the
+    dataclasses.replace-derived plans), so the rescue is bitwise-equal to
+    an un-faulted run of that step and numerically equal to the primary."""
+    x = _input_for(cell[0])
+    clean = _weight_plan_for_cell(cell)
+    baseline = np.asarray(clean.execute(x))
+    p = _weight_plan_for_cell(cell)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.failing("engine.execute", times=1) as rule:
+            out = np.asarray(p.execute(x))
+    assert rule.trips == 1
+    events = p.explain()["degradations"]
+    assert len(events) == 1 and events[0]["cause"] == "executor-failure"
+    assert p.explain()["weight"] == "soft"
+    step = next(s for s in resilience.chain_for(p)
+                if s.label == events[0]["fallback"])
+    expected = np.asarray(step.run(x, clean, None))
+    np.testing.assert_array_equal(out, expected)
+    np.testing.assert_allclose(out, baseline, rtol=1e-5, atol=1e-6)
+
+
+def test_terminal_reference_rung_speaks_weight_functionals():
+    """Exhaust everything above the terminal rung with weight='soft': the
+    built-in numpy oracle cannot answer, so the rung must route to the
+    jnp einsum oracle with the same functional — not error, not fall back
+    to a built-in mode."""
+    D = _D()
+    baseline = np.asarray(pald.cohesion(D, method="dense", weight="soft"))
+    p = pald.plan(D, method="kernel", weight="soft", on_error="fallback")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.failing("engine.execute"), \
+             faults.failing("resilience.step",
+                            pred=lambda site, **c: str(
+                                c.get("step", "")).startswith(
+                                    ("impl:", "method:"))):
+            out = np.asarray(p.execute(D))
+    final = p.explain()["degradations"][-1]
+    assert final["fallback"] == "reference"
+    np.testing.assert_allclose(out, baseline, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # corrupted tuning state: provenance changes, values never
 # ---------------------------------------------------------------------------
 def test_corrupt_tuning_cache_changes_only_provenance(tmp_path, monkeypatch):

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import pald, reference
 from repro.core.ties import TIE_MODES
+from repro.core.weights import registered_weights, resolve_weight
 
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
@@ -55,3 +56,37 @@ def test_tied_draws_mass_laws(D):
     assert abs(split - pairs) < 1e-9
     assert abs(ignore - pairs) < 1e-9
     assert drop <= pairs + 1e-9
+
+
+# the mass law generalized: it is a declared PROPERTY of a functional, not
+# a fact about the three historical modes — quantify over every registered
+# functional that declares it (user-registered families included for free)
+_MASS_CONSERVING = tuple(
+    name for name in registered_weights()
+    if resolve_weight(name).conserves_mass
+)
+
+
+@settings(max_examples=10, deadline=None)
+@given(tied_distance_matrices(), st.sampled_from(_MASS_CONSERVING))
+def test_declared_mass_conservation(D, name):
+    n = D.shape[0]
+    pairs = n * (n - 1) / 2
+    total = float(np.asarray(
+        pald.cohesion(jnp.asarray(D), method="dense", normalize=False,
+                      weight=name)).sum())
+    assert abs(total - pairs) < 1e-3 * pairs
+
+
+@settings(max_examples=10, deadline=None)
+@given(tied_distance_matrices(),
+       st.sampled_from(tuple(n for n in registered_weights()
+                             if n not in TIE_MODES)))
+def test_new_functionals_mass_bounded(D, name):
+    """Every functional distributes at most weight 1 per pair."""
+    n = D.shape[0]
+    pairs = n * (n - 1) / 2
+    C = np.asarray(pald.cohesion(jnp.asarray(D), method="dense",
+                                 normalize=False, weight=name))
+    assert np.all(C >= -1e-6)
+    assert C.sum() <= pairs * (1 + 1e-4)

@@ -1,0 +1,275 @@
+"""The weight-functional subsystem (core/weights.py): contract, registry,
+built-in bitwise identity, and the algebraic laws of the new families.
+
+The conformance matrix (test_conformance.py) runs the functionals across
+every (method, schedule, impl, batched) cell; this module owns everything
+about the subsystem itself: resolution and validation at the plan boundary,
+the declared-property surface, the frozen goldens that pin the built-ins to
+the PRE-refactor string-dispatched results bit-for-bit, and the limits that
+anchor the new families to the built-ins (soft tau -> 0 == split).
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import pald
+from repro.core.weights import (
+    DEFAULT_TIES,
+    TIE_MODES,
+    WeightFunctional,
+    focus_weight,
+    index_xwins,
+    kernelized,
+    register_weight,
+    registered_weights,
+    resolve_weight,
+    soft_threshold,
+    support_weight,
+    validate_ties,
+)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "weights_builtins_12pt.npz")
+
+
+def _tie_matrix():
+    rng = np.random.default_rng(42)
+    A = rng.integers(1, 6, size=(12, 12))
+    D = np.triu(A, 1)
+    return (D + D.T).astype(np.float64)
+
+
+# ---------------------------------------------------------------------------
+# registry and resolution
+# ---------------------------------------------------------------------------
+def test_builtins_registered():
+    names = registered_weights()
+    for mode in TIE_MODES:
+        assert mode in names
+    assert "soft" in names and "kernelized" in names
+
+
+def test_resolve_weight_name_instance_none():
+    w = resolve_weight("split")
+    assert isinstance(w, WeightFunctional) and w.name == "split"
+    assert resolve_weight(w) is w
+    assert resolve_weight(None).name == DEFAULT_TIES
+
+
+def test_resolve_unknown_lists_registered():
+    with pytest.raises(ValueError) as ei:
+        resolve_weight("bogus")
+    msg = str(ei.value)
+    for name in registered_weights():
+        assert name in msg
+
+
+def test_validate_ties_lists_registered():
+    """Knob-validation errors enumerate REGISTERED functionals, not a
+    hardcoded tuple — user-registered families are discoverable."""
+    with pytest.raises(ValueError) as ei:
+        validate_ties("soft")  # registered, but not a built-in mode
+    msg = str(ei.value)
+    for name in registered_weights():
+        assert name in msg
+
+
+def test_register_duplicate_rejected_and_overwrite():
+    w = WeightFunctional("drop", lambda *a: a[0], lambda *a: a[0])
+    with pytest.raises(ValueError):
+        register_weight(w)
+
+
+def test_user_registered_functional_resolves_and_runs():
+    name = "test-harsh"
+    if name not in registered_weights():
+        # strict focus, all-or-nothing support (like drop) — registered at
+        # test time to prove the registry is open
+        base = resolve_weight("drop")
+        register_weight(WeightFunctional(
+            name, base.focus, base.support, is_strict=True))
+    D = jnp.asarray(_tie_matrix())
+    C = pald.cohesion(D, method="dense", weight=name)
+    Cd = pald.cohesion(D, method="dense", ties="drop")
+    np.testing.assert_array_equal(np.asarray(C), np.asarray(Cd))
+    assert name in registered_weights()
+
+
+def test_parametrized_factories_memoize():
+    assert soft_threshold(0.05) is soft_threshold(0.05)
+    assert soft_threshold(0.05) is not soft_threshold(0.1)
+    assert kernelized(2.0) is kernelized(2.0)
+    assert soft_threshold(0.05).name == "soft@0.05"
+    assert kernelized(2.0).name == "kernelized@2"
+
+
+def test_properties_surface():
+    p = resolve_weight("ignore").properties()
+    assert p["needs_index_tiebreak"] and p["is_strict"]
+    assert resolve_weight("split").conserves_mass
+    assert resolve_weight("soft").conserves_mass
+    assert not resolve_weight("kernelized").conserves_mass
+
+
+# ---------------------------------------------------------------------------
+# plan boundary: ties= sugar vs weight=, explain()
+# ---------------------------------------------------------------------------
+def test_contradictory_ties_and_weight_rejected():
+    D = jnp.asarray(_tie_matrix())
+    with pytest.raises(ValueError) as ei:
+        pald.plan(D, ties="drop", weight="soft")
+    msg = str(ei.value)
+    assert "contradictory" in msg
+    for name in registered_weights():
+        assert name in msg
+
+
+def test_matching_ties_and_weight_allowed():
+    D = jnp.asarray(_tie_matrix())
+    p = pald.plan(D, ties="split", weight="split")
+    assert p.weight.name == "split"
+
+
+def test_ties_sugar_rejects_non_builtin():
+    D = jnp.asarray(_tie_matrix())
+    with pytest.raises(ValueError):
+        pald.plan(D, ties="soft")  # reachable via weight= only
+
+
+def test_explain_reports_functional_and_properties():
+    D = jnp.asarray(_tie_matrix())
+    p = pald.plan(D, weight=soft_threshold(0.05))
+    info = p.explain()
+    assert info["weight"] == "soft@0.05"
+    assert info["weight_properties"]["conserves_mass"] is True
+    p2 = pald.plan(D, ties="ignore")
+    assert p2.explain()["weight"] == "ignore"
+    assert p2.explain()["weight_properties"]["needs_index_tiebreak"] is True
+
+
+def test_weight_instance_through_facade():
+    D = jnp.asarray(_tie_matrix())
+    C1 = np.asarray(pald.cohesion(D, method="pairwise", block=4,
+                                  weight=soft_threshold(0.1)))
+    C2 = np.asarray(pald.cohesion(D, method="pairwise", block=4,
+                                  weight="soft"))
+    np.testing.assert_array_equal(C1, C2)  # same memoized instance
+
+
+# ---------------------------------------------------------------------------
+# built-ins: bitwise-identical to the pre-refactor string-dispatched layer
+# (goldens frozen from the commit preceding this refactor)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("ties", TIE_MODES)
+@pytest.mark.parametrize("method", ("dense", "pairwise", "triplet", "kernel"))
+def test_builtins_bitwise_vs_prerefactor_goldens(method, ties):
+    golden = np.load(GOLDEN)
+    D = jnp.asarray(_tie_matrix())
+    kw = dict(method=method, ties=ties)
+    if method != "dense":
+        kw["block"] = 4
+    if method == "kernel":
+        kw.update(impl="interpret", block_z=4)
+    C = np.asarray(pald.cohesion(D, **kw))
+    np.testing.assert_array_equal(C, golden[f"{method}_{ties}"])
+
+
+# ---------------------------------------------------------------------------
+# new families: anchoring laws
+# ---------------------------------------------------------------------------
+def test_soft_threshold_recovers_split_in_limit():
+    """tau -> 0 hardens both sigmoids to half-steps; on integer distances
+    the saturation is exact, so the limit equals ``split`` EXACTLY."""
+    D = jnp.asarray(_tie_matrix())
+    Cs = np.asarray(pald.cohesion(D, method="dense",
+                                  weight=soft_threshold(1e-4)))
+    Cp = np.asarray(pald.cohesion(D, method="dense", ties="split"))
+    np.testing.assert_array_equal(Cs, Cp)
+
+
+def test_soft_threshold_conserves_mass_unnormalized():
+    D = jnp.asarray(_tie_matrix())
+    n = D.shape[0]
+    C = np.asarray(pald.cohesion(D, method="dense", normalize=False,
+                                 weight="soft"))
+    assert abs(C.sum() - n * (n - 1) / 2) < 1e-3
+
+
+def test_kernelized_bounded_by_drop_mass():
+    """Kernelized support leaks share to the out-of-focus role like drop;
+    its total mass sits between drop's and the conserved maximum."""
+    D = jnp.asarray(_tie_matrix())
+    n = D.shape[0]
+    pairs = n * (n - 1) / 2
+    Ck = np.asarray(pald.cohesion(D, method="dense", normalize=False,
+                                  weight="kernelized")).sum()
+    assert Ck <= pairs * (1 + 1e-5)
+
+
+def test_smooth_functionals_finite_on_padded_input():
+    """+inf padding (non-multiple n through blocked paths) must never leak
+    nan out of the smooth families — the _safe_unit guard contract."""
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(13, 3))  # 13: forces padding at block=4
+    D = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
+    np.fill_diagonal(D, 0.0)
+    for w in ("soft", "kernelized"):
+        C = np.asarray(pald.cohesion(jnp.asarray(D), method="pairwise",
+                                     block=4, weight=w))
+        assert np.isfinite(C).all(), w
+        Cd = np.asarray(pald.cohesion(jnp.asarray(D), method="dense",
+                                      weight=w))
+        np.testing.assert_allclose(C, Cd, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher / tiebreak contract
+# ---------------------------------------------------------------------------
+def test_support_ignore_requires_own_wins():
+    d = jnp.ones((2, 2))
+    with pytest.raises(ValueError):
+        support_weight(d, d, d, "ignore", None)
+
+
+def test_dispatchers_accept_strings_and_instances():
+    d0 = jnp.asarray([[0.0, 1.0], [1.0, 0.0]])
+    a = focus_weight(d0, d0, d0, "drop")
+    b = focus_weight(d0, d0, d0, resolve_weight("drop"))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_index_xwins_matches_global_comparison():
+    got = np.asarray(index_xwins(4, 3, 2, 5))
+    rows = 4 + np.arange(3)
+    cols = 2 + np.arange(5)
+    np.testing.assert_array_equal(got, rows[:, None] > cols[None, :])
+
+
+def test_no_dense_square_xwins():
+    """The dense (n, n) tiebreak materialization was deleted on purpose;
+    per-tile derivation via offsets is the only form."""
+    from repro.core import ties as ties_mod
+    from repro.core import weights as weights_mod
+
+    assert not hasattr(weights_mod, "square_xwins")
+    assert not hasattr(ties_mod, "square_xwins")
+
+
+# ---------------------------------------------------------------------------
+# tuning cache keys
+# ---------------------------------------------------------------------------
+def test_tuning_keys_gain_weight_component():
+    from repro.tuning.autotune import _pass_key
+
+    assert _pass_key("pald_focus", None) == "pald_focus"
+    assert _pass_key("pald_focus", None, ties="drop") == "pald_focus"
+    assert _pass_key("pald_focus", None, ties="split") == "pald_focus:t-split"
+    assert (_pass_key("pald_focus", None, ties=resolve_weight("split"))
+            == "pald_focus:t-split")
+    assert (_pass_key("pald_focus", None, ties=resolve_weight("soft"))
+            == "pald_focus:w-soft")
+    assert (_pass_key("pald_focus", None, ties=soft_threshold(0.05))
+            == "pald_focus:w-soft@0.05")
