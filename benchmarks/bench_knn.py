@@ -1,4 +1,5 @@
-"""Sparse k-NN PaLD vs the best dense path: the n x k sweep (ISSUE 5).
+"""Sparse k-NN PaLD vs the best dense path: the n x k sweep (ISSUE 5),
+plus the selection-stage n x k x d sweep (ISSUE 9).
 
 Each n gets one row for the measured-best dense path (``pald.plan`` with
 ``method="auto"`` — the tuning-cache crossover pick) and one row per k for
@@ -10,6 +11,31 @@ Dense cost grows O(n^3); at the largest n each dense cell is measured
 with a single post-warmup run (``iters=1``) to keep the --fast suite
 bounded, which is noisier but the gap measured here is orders of
 magnitude, not percent.
+
+``run_selection`` (ISSUE 9) times the neighbor-selection stage itself
+and the fused select->cohere pipeline, per (n, k, d) cell:
+
+* ``chunked``      — the terminal degradation rung: host-driven row
+                     slabs, each a jitted dist-slab -> masked
+                     ``lax.top_k``.  The baseline everything else is
+                     scored against.
+* ``jnp-direct``   — one ``lax.map`` scan of jitted slabs, full-width
+                     top_k (``tile >= n``).
+* ``jnp-tilemin``  — same scan with the exact tile-min prefilter
+                     (rank k tiles by per-tile distance minima, gather,
+                     then top_k over k*tile columns).
+* ``interpret``    — the streaming Pallas kernel under ``interpret=True``
+                     (CPU emulation; only measured at small n — it
+                     exists here to track the kernel's dataflow, the
+                     compiled path needs an accelerator backend).
+* ``two-stage``    — ``topk_select`` then ``knn_values``: the unfused
+                     pipeline a caller composes by hand.
+* ``fused``        — ``select_cohere``: selection tiles handed straight
+                     to the cohesion tile body, no NeighborGraph
+                     round-trip between stages.
+
+All selection variants are bitwise-identical in output (enforced by
+tests/test_topk_conformance.py), so every speedup here is free.
 """
 from __future__ import annotations
 
@@ -40,7 +66,61 @@ def run(ns=(1024, 4096), ks=(16, 32, 64), iters: int = 2) -> list[dict]:
     return rows
 
 
+def run_selection(cells=((1024, 16, 8), (4096, 32, 8), (4096, 32, 4)),
+                  iters: int = 3, interpret_max_n: int = 512,
+                  tile: int = 32) -> list[dict]:
+    """Selection-stage + fused-pipeline timings per (n, k, d) cell."""
+    from repro.kernels import ops
+    from repro.tuning.autotune import random_features
+
+    rows: list[dict] = []
+    for n, k, d in cells:
+        X = jnp.asarray(random_features(n, d=d))
+        it = 1 if n >= 8192 else iters
+
+        def cell(variant, seconds, base=None):
+            rows.append({
+                "n": n, "k": k, "d": d, "variant": variant,
+                "seconds": round(seconds, 4),
+                "speedup_vs_chunked":
+                    round(base / seconds, 2) if base else 1.0,
+            })
+            return seconds
+
+        t0 = cell("chunked", time_fn(
+            lambda: ops.topk_select(X, k, impl="chunked").distances,
+            iters=it))
+        cell("jnp-direct", time_fn(
+            lambda: ops.topk_select(X, k, impl="jnp", tile=n).distances,
+            iters=it), t0)
+        cell("jnp-tilemin", time_fn(
+            lambda: ops.topk_select(X, k, impl="jnp",
+                                    tile=min(tile, n)).distances,
+            iters=it), t0)
+        if n <= interpret_max_n:
+            cell("interpret", time_fn(
+                lambda: ops.topk_select(X, k, impl="interpret").distances,
+                iters=1), t0)
+
+        # pipeline cost: unfused two-stage vs the fused executor path
+        def two_stage():
+            g = ops.topk_select(X, k)
+            return ops.knn_values(X, g, kind="features")
+
+        t2 = cell("two-stage", time_fn(two_stage, iters=it), t0)
+        tf = time_fn(lambda: ops.select_cohere(X, k=k)[1], iters=it)
+        rows.append({
+            "n": n, "k": k, "d": d, "variant": "fused",
+            "seconds": round(tf, 4),
+            "speedup_vs_chunked": round(t0 / tf, 2) if tf else 0.0,
+        })
+        rows[-1]["speedup_vs_two_stage"] = round(t2 / tf, 2) if tf else 0.0
+    return rows
+
+
 if __name__ == "__main__":
     from .common import emit
 
     emit(run(), header="knn: sparse k-NN PaLD vs best dense path")
+    emit(run_selection(),
+         header="selection: streaming top-k + fused select->cohere")

@@ -29,6 +29,18 @@ n and persist the per-n winner, replacing the hard-coded n<=256 heuristic
 behind ``pald.cohesion(method="auto")``.
 
     PYTHONPATH=src python -m benchmarks.hillclimb methods --ns 64,256,1024
+
+``topk``: climb the streaming neighbor-selection cell (``pald_topk``,
+keyed ``k<k>:d<d>`` — selection is weight-independent so there is no
+ties axis).  The grid crosses the selection row slab (``--blocks``)
+with the tile-min prefilter width (``--tiles``; a candidate >= n, or
+the word ``direct``, means the full-width top_k with no prefilter).
+The winner feeds ``select_block="auto"`` / ``select_tile="auto"`` in
+``pald.plan`` and the ``knn_from_features`` facade.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb topk \
+        --n 4096 --d 8 --k 32 [--impl jnp] \
+        [--blocks 256,1024] [--tiles 32,64,direct] [--cache PATH]
 """
 import argparse
 import sys
@@ -137,6 +149,38 @@ def run_blocks(args) -> None:
     print(f"# cached under {cache}")
 
 
+def run_topk(args) -> None:
+    from repro.tuning import autotune
+
+    kw = {"d": args.d, "k": args.k}
+    if args.blocks:
+        kw["blocks"] = _csv_ints(args.blocks)
+    if args.tiles:
+        # "direct" is sugar for a tile >= n (full-width top_k, no prefilter)
+        kw["blocks_z"] = tuple(
+            args.n if t.strip() == "direct" else int(t)
+            for t in args.tiles.split(",") if t.strip()
+        )
+    rec = autotune.tune(
+        args.n, "pald_topk", impl=args.impl, path=args.cache,
+        iters=args.iters, time_budget=args.budget, **kw,
+    )
+    print(f"# tuned pald_topk n={args.n} d={args.d} k={args.k} "
+          f"impl={args.impl or 'default'}")
+    for row in rec["grid"]:
+        strat = "direct" if row["block_z"] >= args.n else f"tile={row['block_z']}"
+        head = f"  block={row['block']:5d} {strat:12s} "
+        if "seconds" in row:
+            mark = " <- best" if (row["block"], row["block_z"]) == (
+                rec["block"], rec["block_z"]) else ""
+            print(f"{head}{row['seconds']*1e3:10.2f} ms{mark}")
+        elif row.get("failed"):
+            print(f"{head}    FAILED: {row['error']}")
+        else:
+            print(f"{head}   skipped ({row['skipped']})")
+    print(f"# cached under {autotune.cache_path(args.cache)}")
+
+
 def run_methods(args) -> None:
     from repro.tuning import autotune
 
@@ -196,8 +240,26 @@ def main() -> None:
     methods.add_argument("--iters", type=int, default=3)
     methods.add_argument("--cache", default=None)
 
+    topk = sub.add_parser("topk", help="tune streaming neighbor selection "
+                                       "(pald_topk) into the cache")
+    topk.add_argument("--n", type=int, required=True)
+    topk.add_argument("--d", type=int, default=8)
+    topk.add_argument("--k", type=int, default=16)
+    topk.add_argument("--impl", default=None,
+                      choices=(None, "jnp", "interpret", "pallas"))
+    topk.add_argument("--blocks", default=None,
+                      help="csv selection row-slab candidates")
+    topk.add_argument("--tiles", default=None,
+                      help="csv prefilter tile candidates; >= n or the word "
+                           "'direct' means full-width top_k")
+    topk.add_argument("--iters", type=int, default=3)
+    topk.add_argument("--cache", default=None, help="tuning cache path")
+    topk.add_argument("--budget", type=float, default=None,
+                      help="wall-seconds budget for the whole sweep")
+
     argv = sys.argv[1:]
-    if argv and argv[0] not in ("cell", "blocks", "methods", "-h", "--help"):
+    if argv and argv[0] not in ("cell", "blocks", "methods", "topk",
+                                "-h", "--help"):
         argv = ["cell"] + argv  # legacy invocation without a subcommand
     args = ap.parse_args(argv)
 
@@ -210,6 +272,8 @@ def main() -> None:
         run_blocks(args)
     elif args.cmd == "methods":
         run_methods(args)
+    elif args.cmd == "topk":
+        run_topk(args)
     else:
         ap.print_help()
 

@@ -10,6 +10,7 @@ Sections:
     table1c fused features vs materialize (bench_variants.run_fused)
     weights soft/kernelized vs drop       (bench_variants.run_weights)
     knn     sparse k-NN vs best dense     (bench_knn)
+    selection streaming top-k + fusion    (bench_knn.run_selection)
     dispatch plan+execute overhead        (bench_variants.run_dispatch)
     batched  (B,n,n) engine throughput    (bench_variants.run_batched)
     fig9+   scaling + comm model          (bench_scaling)
@@ -88,6 +89,11 @@ def main() -> None:
         section("knn",
                 "knn: sparse k-NN PaLD vs best dense path (n x k, --fast)",
                 lambda: bench_knn.run(ns=(1024, 4096), ks=(16, 32, 64)))
+        section("selection",
+                "selection: streaming top-k + fused select->cohere "
+                "(n x k x d, --fast)",
+                lambda: bench_knn.run_selection(
+                    cells=((1024, 16, 8), (4096, 32, 8), (4096, 32, 4))))
         section("dispatch",
                 "engine: plan+execute dispatch overhead vs direct call (--fast)",
                 lambda: bench_variants.run_dispatch(ns=(256, 512)))
@@ -117,6 +123,12 @@ def main() -> None:
                 "knn: sparse k-NN PaLD vs best dense path (n x k)",
                 lambda: bench_knn.run(ns=(1024, 4096, 8192),
                                       ks=(16, 32, 64, 128)))
+        section("selection",
+                "selection: streaming top-k + fused select->cohere "
+                "(n x k x d)",
+                lambda: bench_knn.run_selection(
+                    cells=((1024, 16, 8), (4096, 32, 8), (4096, 32, 4),
+                           (8192, 32, 8), (8192, 64, 8))))
         section("dispatch",
                 "engine: plan+execute dispatch overhead vs direct call",
                 lambda: bench_variants.run_dispatch(ns=(256, 512, 1024)))

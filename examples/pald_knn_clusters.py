@@ -1,4 +1,4 @@
-"""Large-n community detection with sparse k-NN PaLD (ISSUE 5).
+"""Large-n community detection with sparse k-NN PaLD (ISSUE 5 + 9).
 
     PYTHONPATH=src python examples/pald_knn_clusters.py            # n = 50,000
     PYTHONPATH=src python examples/pald_knn_clusters.py --n 4000   # quick run
@@ -9,6 +9,15 @@ INFEASIBLE for every dense path: at n = 50k the distance matrix alone is
 the k-NN restriction (Baron et al., arXiv:2108.08864) needs O(n*d) memory
 for selection, O(n*k^2) comparisons for cohesion, and never materializes
 D.  The whole result lives in the sparse (n, k+1) value layout.
+
+Since ISSUE 9 selection and cohesion run as one fused pipeline
+(``ops.select_cohere``): freshly selected (slab, k) neighbor tiles are
+handed straight to the cohesion tile body, the tuning cache picks the
+selection strategy (direct full-width top_k vs the exact tile-min
+prefilter), and the NeighborGraph comes back alongside the values for
+the community pass — no second pass over the data.  ``--unfused``
+restores the old two-stage path for comparison; both are bitwise
+identical.
 
 Communities are recovered with k >= the community size — the regime the
 restriction is designed for (each point's neighborhood covers its whole
@@ -45,6 +54,9 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=8)
     ap.add_argument("--row-chunk", type=int, default=1024)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--unfused", action="store_true",
+                    help="two-stage path (standalone selection, then "
+                         "cohesion) instead of the fused pipeline")
     args = ap.parse_args()
 
     X, labels = make_mixture(args.n, args.comm_size, args.d, args.seed)
@@ -54,23 +66,36 @@ def main() -> None:
           f"dense D would be {dense_gib:.1f} GiB + ~{n**3 / 2:.1e} "
           f"comparisons — not attempted")
 
-    t0 = time.time()
-    graph = knn.knn_from_features(jnp.asarray(X), args.k,
-                                  metric="euclidean",
-                                  row_chunk=args.row_chunk)
-    jnp.asarray(graph.indices).block_until_ready()
-    t_sel = time.time() - t0
-    print(f"[knn] neighbor selection (chunked, D never materialized): "
-          f"{t_sel:.1f}s -> ({n}, {args.k}) graph")
+    Xd = jnp.asarray(X)
+    if args.unfused:
+        t0 = time.time()
+        graph = knn.knn_from_features(Xd, args.k, metric="euclidean",
+                                      row_chunk=args.row_chunk)
+        jnp.asarray(graph.indices).block_until_ready()
+        t_sel = time.time() - t0
+        print(f"[knn] neighbor selection (standalone, D never "
+              f"materialized): {t_sel:.1f}s -> ({n}, {args.k}) graph")
 
-    t0 = time.time()
-    _, vals = ops.pald_knn(jnp.asarray(X), k=args.k, kind="features",
-                           graph=graph, normalize=True)
-    vals.block_until_ready()
-    t_coh = time.time() - t0
+        t0 = time.time()
+        _, vals = ops.pald_knn(Xd, k=args.k, kind="features",
+                               graph=graph, normalize=True)
+        vals.block_until_ready()
+        t_coh = time.time() - t0
+        print(f"[knn] sparse cohesion (O(n*k^2)): {t_coh:.1f}s")
+        t_pipe = t_sel + t_coh
+    else:
+        t0 = time.time()
+        graph, vals = ops.select_cohere(Xd, k=args.k, metric="euclidean",
+                                        block=args.row_chunk,
+                                        normalize=True)
+        vals.block_until_ready()
+        t_pipe = time.time() - t0
+        print(f"[knn] fused select->cohere (one pass, selection tiles "
+              f"feed the cohesion body): {t_pipe:.1f}s -> "
+              f"({n}, {args.k}) graph + values")
     nbytes = vals.size * 4 / 2**20
-    print(f"[knn] sparse cohesion (O(n*k^2)): {t_coh:.1f}s -> "
-          f"({n}, {args.k + 1}) values, {nbytes:.0f} MiB "
+    print(f"[knn] pipeline total (select + O(n*k^2) cohesion): "
+          f"{t_pipe:.1f}s -> ({n}, {args.k + 1}) values, {nbytes:.0f} MiB "
           f"(vs {dense_gib:.0f} GiB dense C)")
 
     depths = np.asarray(knn.local_depths(vals))

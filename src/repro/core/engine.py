@@ -196,6 +196,14 @@ class PaldPlan:
     d: int | None                 # feature dimension (features kind)
     k: int | None = None          # neighborhood size (knn method only)
     on_error: str = "raise"       # "raise" | "fallback" (degradation chain)
+    # knn selection stage (features kind): impl override and its tiles.
+    # select=None follows impl; "chunked" is the terminal degradation rung
+    # (row-chunked lax.top_k).  select_tile >= n disables the tile-min
+    # prefilter (direct slab top_k); see kernels/ops.topk_select.
+    select: str | None = None
+    select_block: int | None = None   # rows per selection slab
+    select_tile: int | None = None    # tile-min prefilter width
+    select_source: str = "n/a"        # provenance (explain)
     # the resolved weight functional (core/weights.py); ``ties`` above is its
     # name, kept as the stable string surface for explain()/fault contexts.
     weight: WeightFunctional | None = None
@@ -285,7 +293,10 @@ class PaldPlan:
             ``z_chunk`` / ``ties`` / ``weight`` / ``weight_properties`` /
             ``metric`` / ``normalize`` /
             ``batch`` / ``n`` / ``d`` / ``k`` / ``on_error`` (plus
-            ``degradations``, the guarded-execution event log), the
+            ``degradations``, the guarded-execution event log), the knn
+            selection-stage report ``select`` / ``select_block`` /
+            ``select_tile`` / ``select_source`` (None / "n/a" off the
+            knn method), the
             ``padded_n`` /
             ``padded_shape`` the executor will see, ``method_source`` and
             ``block_source`` provenance strings ("explicit",
@@ -323,6 +334,10 @@ class PaldPlan:
                              if self.kind == "distance"
                              else (self.padded_n, self.d)),
             "on_error": self.on_error,
+            "select": self.select,
+            "select_block": self.select_block,
+            "select_tile": self.select_tile,
+            "select_source": self.select_source,
             "method_source": self.method_source,
             "block_source": self.block_source,
             "executor": f"{fn.__module__}.{fn.__qualname__}",
@@ -347,7 +362,12 @@ def _est_vmem_per_step(p: PaldPlan) -> int | None:
     if p.method == "knn":
         # (b, k, k) gathered tile + (b, k, k) comparison cube + (b, k) rows
         kk = p.k or 1
-        return 4 * (2 * b * kk * kk + 3 * b * kk + b * (kk + 1))
+        est = 4 * (2 * b * kk * kk + 3 * b * kk + b * (kk + 1))
+        if p.kind == "features" and p.select_block:
+            # fused select->cohere: one (select_block, n) distance slab
+            # is live per map step alongside the cohesion tiles
+            est += 4 * p.select_block * p.n
+        return est
     if p.method in ("pairwise", "triplet"):
         # (b, b, n) support cube + two (b, n) row slabs
         return 4 * (b * b * m + 2 * b * m)
@@ -505,6 +525,9 @@ def plan(
     check: bool = False,
     k: int | None = None,
     on_error: str = "raise",
+    select: str | None = None,
+    select_block: int | str | None = None,
+    select_tile: int | str | None = None,
 ) -> PaldPlan:
     """Resolve every knob exactly once and return a frozen ``PaldPlan``.
 
@@ -525,6 +548,13 @@ def plan(
     propagates the first executor failure unchanged, ``"fallback"`` walks
     the cell's degradation chain (``core/resilience``) and records every
     degradation in ``explain()["degradations"]``.
+    ``select=`` / ``select_block=`` / ``select_tile=`` configure the knn
+    SELECTION stage (features kind): the impl of the streaming top-k
+    ('pallas'/'interpret'/'jnp'/'chunked'; None follows ``impl``), the
+    rows per selection slab, and the tile-min prefilter width (>= n
+    disables it); "auto"/None resolve via the ``pald_topk:k<k>:d<d>``
+    tuning-cache pass.  On kind='distance' only ``select='chunked'`` (the
+    row-chunked ``lax.top_k`` terminal rung) is meaningful.
 
     One deliberate exception: ``block=`` is accepted AND ignored by
     ``method='dense'`` (the un-blocked path has no tile), so the common
@@ -620,6 +650,28 @@ def plan(
             "the dense/pairwise/triplet/kernel paths always rank every "
             "point against every other — drop k=, or pass method='knn'")
 
+    # -- selection stage (knn only) -----------------------------------------
+    if method != "knn" and (select is not None or select_block is not None
+                            or select_tile is not None):
+        raise ValueError(
+            "select=/select_block=/select_tile= configure the knn neighbor "
+            f"selection stage (got method={method!r}); drop them, or pass "
+            "method='knn'")
+    if select not in (None, "pallas", "interpret", "jnp", "chunked"):
+        raise ValueError(
+            f"unknown select {select!r} (expected 'pallas', 'interpret', "
+            "'jnp' or 'chunked')")
+    if kind == "distance" and select not in (None, "chunked"):
+        raise ValueError(
+            f"select={select!r} needs kind='features' (the streaming "
+            "selection impls consume feature tiles); on a distance matrix "
+            "only the row-chunked rung select='chunked' applies")
+    if kind == "distance" and (select_block is not None
+                               or select_tile is not None):
+        raise ValueError(
+            "select_block=/select_tile= only apply to kind='features' "
+            "(they tile the feature-space selection slabs)")
+
     # -- impl --------------------------------------------------------------
     if method in _IMPL_METHODS:
         impl = impl or _default_kernel_impl(method)
@@ -676,13 +728,30 @@ def plan(
                 n, "pald_knn", ties=weight, k=k, impl=impl)
             block_source = src
         block = max(min(int(block), max(n, 1)), 1)
+        sel_source = "n/a"
+        sb = st = None
+        if kind == "features":
+            # selection-stage tiles resolve once here (pald_topk pass) so
+            # the executor never consults the cache and explain() reports
+            # the exact slab/tile the fused select->cohere will run
+            sb = "auto" if select_block is None else select_block
+            st = "auto" if select_tile is None else select_tile
+            sel_source = "explicit"
+            if sb == "auto" or st == "auto":
+                rb, rt, sel_source = _tuner.resolve_blocks_ex(
+                    n, "pald_topk", d=d, k=k, impl=(select or impl))
+                sb = rb if sb == "auto" else sb
+                st = rt if st == "auto" else st
+            sb = max(min(int(sb), max(n, 1)), 1)
+            st = max(min(int(st), max(n, 1)), 1)
         return PaldPlan(
             kind=kind, method=method, schedule=schedule, impl=impl,
             block=block, block_z=None, z_chunk=None, ties=ties,
             weight=weight,
             metric=metric, normalize=normalize, batch=batch, check=check,
             n=n, d=d, k=k, on_error=on_error, method_source=method_source,
-            block_source=block_source,
+            block_source=block_source, select=select, select_block=sb,
+            select_tile=st, select_source=sel_source,
         )
     if method == "fused":
         # one authority for the fused tile defaults, shared with

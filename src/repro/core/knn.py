@@ -60,7 +60,6 @@ what makes the single-pass (block, k) kernel schedule possible.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import numpy as np
@@ -157,14 +156,19 @@ def knn_from_features(
     k: int,
     *,
     metric: str = "euclidean",
-    row_chunk: int = 1024,
+    row_chunk: int | str = 1024,
+    impl: str | None = None,
+    tile: int | str = "auto",
 ) -> NeighborGraph:
     """Select k nearest neighbors straight from feature vectors.
 
-    The distance matrix is never materialized: rows are computed in
-    ``row_chunk``-sized slabs ((row_chunk, n) live at a time) and reduced
-    to top-k immediately, so peak memory is O(row_chunk * n + n * k)
-    instead of O(n^2) — the entry point of the large-n workload class.
+    The distance matrix is never materialized.  Since PR 9 this is a thin
+    facade over the streaming selection machinery in
+    ``kernels.ops.topk_select``: the Pallas streaming kernel
+    (``kernels/pald_topk.py``) on TPU, the blocked-jnp fallback (direct or
+    tile-min-prefiltered slab top-k) elsewhere — every impl bitwise
+    identical to the original slab-``lax.top_k`` contract, stable
+    lower-index-first tie-break included.
 
     Args:
         X: (n, d) feature matrix, any float dtype (cast to float32 once).
@@ -173,8 +177,14 @@ def knn_from_features(
             cosine, manhattan) — the same tile primitive
             (``features.dist_tile``) the fused kernels use, so distances
             agree with ``cdist_reference`` up to summation order.
-        row_chunk: rows per distance slab; bounds peak memory, does not
-            change the result.
+        row_chunk: rows per selection slab; bounds peak memory
+            (O(row_chunk * n + n * k)), does not change the result.
+            ``"auto"`` resolves via the ``pald_topk:k<k>:d<d>`` tuning
+            cache pass.
+        impl: selection impl override ('pallas'/'interpret'/'jnp'/
+            'chunked'); None = backend default.
+        tile: tile-min prefilter width (see ``kernels.ops.topk_select``);
+            "auto" = tuned, a value >= n disables the prefilter.
 
     Returns:
         NeighborGraph over the metric's distances.
@@ -188,39 +198,10 @@ def knn_from_features(
         >>> knn_from_features(X, k=2).indices.tolist()
         [[1, 2], [0, 2], [1, 0]]
     """
-    X = jnp.asarray(X, jnp.float32)
-    n = X.shape[0]
-    if k > max(n - 1, 0):
-        raise ValueError(f"k={k} exceeds the n-1={n - 1} available neighbors")
-    if k <= 0:
-        return NeighborGraph(jnp.zeros((n, 0), jnp.int32),
-                             jnp.zeros((n, 0), jnp.float32))
-    chunk = max(min(row_chunk, n), 1)
-    m = -(-n // chunk) * chunk
-    # zero-vector row padding: junk rows are sliced off after selection
-    Xp = jnp.pad(X, ((0, m - n), (0, 0)))
-    dist, idx = _select_from_features(Xp, k=k, metric=metric, chunk=chunk,
-                                      n=n)
-    return NeighborGraph(idx.reshape(m, k)[:n], dist.reshape(m, k)[:n])
+    from repro.kernels.ops import topk_select
 
-
-@functools.partial(jax.jit, static_argnames=("k", "metric", "chunk", "n"))
-def _select_from_features(Xp, *, k: int, metric: str, chunk: int, n: int):
-    """Chunked top-k selection over row-padded features (module-level jit:
-    repeated calls with the same static shape reuse one compilation)."""
-    from .features import dist_tile
-
-    X = Xp[:n]
-
-    def _chunk(off):
-        rows = jax.lax.dynamic_slice(Xp, (off, 0), (chunk, Xp.shape[1]))
-        Dr = dist_tile(rows, X, metric)                       # (chunk, n)
-        gids = off + jnp.arange(chunk)
-        self_ = gids[:, None] == jnp.arange(n)[None, :]
-        return _top_k_rows(jnp.where(self_, -jnp.inf, -Dr), k)
-
-    offs = jnp.arange(Xp.shape[0] // chunk) * chunk
-    return jax.lax.map(_chunk, offs)                          # (nc, chunk, k)
+    return topk_select(X, k, metric=metric, impl=impl, block=row_chunk,
+                       tile=tile)
 
 
 # ---------------------------------------------------------------------------

@@ -221,6 +221,9 @@ def from_features(
     check: bool = False,
     k: int | None = None,
     on_error: str = "raise",
+    select: str | None = None,
+    select_block: int | str | None = None,
+    select_tile: int | str | None = None,
 ) -> jnp.ndarray:
     """PaLD cohesion straight from feature vectors.
 
@@ -260,11 +263,22 @@ def from_features(
             instance — the general contribution algebra behind ``ties``;
             see ``pald.cohesion`` and ``core/weights.py``.
         check: deep input validation (finiteness) on top of shape checks.
-        k: neighborhood size for ``method="knn"``.
+        k: neighborhood size for ``method="knn"``.  The knn executor is
+            the fused select->cohere pipeline: streaming top-k selection
+            feeds the sparse cohesion tile body directly, no
+            ``NeighborGraph`` or distance matrix in between.
         on_error: "raise" (default) or "fallback" — identical failure
             semantics to ``pald.cohesion``; the feature cells degrade
             through the materialize-D compositions before the reference
-            oracle.
+            oracle, and the knn cell through the selection impls down to
+            the row-chunked ``lax.top_k`` rung.
+        select: knn selection-stage impl override ('pallas'/'interpret'/
+            'jnp'/'chunked'); None follows ``impl``.
+        select_block: rows per selection slab ("auto"/None = the
+            ``pald_topk:k<k>:d<d>`` tuning-cache pass).
+        select_tile: tile-min prefilter width for the jnp selection
+            strategy (a value >= n disables the prefilter; "auto"/None =
+            tuned).
 
     Returns:
         C as float32: (n, n) for 2-D X, (B, n, n) for batched input.
@@ -284,7 +298,8 @@ def from_features(
         X, kind="features", metric=metric, method=method, schedule=schedule,
         block=block, block_z=block_z, normalize=normalize, impl=impl,
         ties=ties, weight=weight, batch=batch, check=check, k=k,
-        on_error=on_error,
+        on_error=on_error, select=select, select_block=select_block,
+        select_tile=select_tile,
     )
     return p.execute(X)
 

@@ -17,7 +17,9 @@ Three public surfaces:
     method-level degradation onto the blocked/un-blocked jnp paths, then the
     entry-wise numpy reference oracle — re-executing with identical
     ``ties``/``normalize`` semantics at every step.  The knn cells degrade
-    across impls only (no other path shares their sparse semantics).
+    across impls and end on the ``select:chunked`` rung — row-chunked
+    ``lax.top_k`` selection feeding jnp cohesion — never onto a dense
+    method (no other path shares their sparse semantics).
 
 OOM-aware batched execution
     In fallback mode, a ``RESOURCE_EXHAUSTED`` failure of the chunked-vmap
@@ -226,6 +228,20 @@ def _method_step(method: str) -> Step:
     return Step(f"method:{method}", run)
 
 
+def _select_step() -> Step:
+    """Terminal rung of the knn cells: jnp cohesion with 'chunked'
+    selection — unfused per-slab distances reduced by a row-chunked
+    ``lax.top_k`` with host syncs between slabs (kernels/ops), the
+    smallest machinery that still answers with identical semantics."""
+    def run(x, plan, batch):
+        fault_point("resilience.step", step="select:chunked", kind=plan.kind,
+                    method=plan.method, schedule=plan.schedule, impl="jnp")
+        derived = dataclasses.replace(plan, impl="jnp", select="chunked")
+        return _dispatch_derived(derived, x, batch)
+
+    return Step("select:chunked", run)
+
+
 def _reference_step() -> Step:
     def run(x, plan, batch):
         fault_point("resilience.step", step="reference", kind=plan.kind,
@@ -279,10 +295,12 @@ def _default_chain(plan) -> list:
 
     Entries equal to the plan's own (failed) impl are skipped, as is
     ``pallas`` off-TPU (it cannot succeed there, so attempting it would
-    only add latency to an already-failing call).  The knn cells stop
-    after the impl walk: no other registered path shares their sparse
-    O(n·k²) semantics, and silently answering with the exact dense result
-    would change cost by orders of magnitude mid-request.
+    only add latency to an already-failing call).  The knn cells walk the
+    impls and then end on ``select:chunked`` — the row-chunked
+    ``lax.top_k`` selection rung with jnp cohesion — rather than any
+    dense method: no other registered path shares their sparse O(n·k²)
+    semantics, and silently answering with the exact dense result would
+    change cost by orders of magnitude mid-request.
     """
     steps: list[Step] = []
     if plan.method in ("kernel", "fused", "knn"):
@@ -298,6 +316,9 @@ def _default_chain(plan) -> list:
             steps.append(_method_step("dense"))
         elif plan.method == "fused":
             steps.append(_method_step("dense"))
+        elif plan.method == "knn":
+            if not (plan.impl == "jnp" and plan.select == "chunked"):
+                steps.append(_select_step())
     elif plan.method in ("pairwise", "triplet"):
         steps.append(_method_step("dense"))
     if plan.method != "knn":

@@ -55,6 +55,8 @@ __all__ = [
     "pald_fused",
     "pald_knn",
     "knn_values",
+    "topk_select",
+    "select_cohere",
     "focus",
     "cohesion_from_weights",
     "focus_general",
@@ -819,6 +821,329 @@ def pald_knn(
 
 
 # --------------------------------------------------------------------------
+# streaming neighbor selection (ROADMAP item 3).  Three impl families, all
+# bitwise-identical to core.knn._top_k_rows on the masked distances:
+#
+#   pallas / interpret  kernels/pald_topk.py — (block, d) feature tiles,
+#                       in-register distance tiles folded into a running
+#                       (block, k) best-list by composite-key bitonic merge;
+#                       neither D nor full score rows ever hit HBM.
+#   jnp                 blocked-jnp fallback: one jit, lax.map over row
+#                       slabs.  Strategy per slab from ``tile``:
+#                       tile >= n  -> direct full-width stable lax.top_k;
+#                       tile <  n  -> exact tile-min prefilter (per-tile
+#                       minima over the EXACT distances pick k candidate
+#                       tiles per row, the final top-k runs over the k*tile
+#                       gathered columns).  Exactness: if element e were
+#                       wrongly excluded, >= k tiles beat e's tile — tiles
+#                       earlier in index order beat it tie-safely (their
+#                       candidates have smaller indices), later tiles by
+#                       strictly smaller minima — so the true top-k always
+#                       survives the gather, tie-break included.  The proof
+#                       needs the sqrt'd (exact) distances: per-tile minima
+#                       over d^2 can invert across the sqrt rounding.
+#   chunked             terminal degradation rung: unfused per-slab
+#                       dist_tile -> host sync -> row-chunked lax.top_k,
+#                       no fused machinery on the failure path.
+#
+# ``tile`` ("auto") and the slab size ``block`` resolve via the tuning
+# cache pass ``pald_topk:k<k>:d<d>``: the optimum is k- and d-dependent
+# (the prefilter amortizes the full-width top_k re-scan, which XLA:CPU
+# makes data-dependent — clustered rows branch-predict ~2-3x faster than
+# random ones), with the block_z slot of the record holding ``tile``.
+# --------------------------------------------------------------------------
+from .pald_topk import next_pow2 as _next_pow2  # noqa: E402
+from .pald_topk import topk_pallas  # noqa: E402
+
+
+def _topk_chunk(Xp, off, *, k: int, metric: str, chunk: int, n: int,
+                tile: int):
+    """One (chunk, n) selection slab -> ((chunk, k) dist, (chunk, k) idx)."""
+    from repro.core.features import dist_tile
+
+    X = Xp[:n]
+    rows = jax.lax.dynamic_slice(Xp, (off, 0), (chunk, Xp.shape[1]))
+    Dr = dist_tile(rows, X, metric)                       # (chunk, n)
+    gids = off + jnp.arange(chunk)
+    self_ = gids[:, None] == jnp.arange(n)[None, :]
+    if tile >= n or tile < 1:                             # direct strategy
+        return _knn._top_k_rows(jnp.where(self_, -jnp.inf, -Dr), k)
+    Dr = jnp.where(self_, jnp.inf, Dr)
+    nt = -(-n // tile)
+    Drp = jnp.pad(Dr, ((0, 0), (0, nt * tile - n)),
+                  constant_values=jnp.inf)
+    M = jnp.min(Drp.reshape(chunk, nt, tile), axis=2)     # (chunk, nt)
+    kt = min(k, nt)
+    _, tids = jax.lax.top_k(-M, kt)
+    # ascending tile ids keep gathered columns in global index order, so
+    # the stable top_k below reproduces the lower-index-first tiebreak
+    tids = jnp.sort(tids, axis=1)
+    cols = (tids[:, :, None] * tile +
+            jnp.arange(tile)[None, None, :]).reshape(chunk, kt * tile)
+    Dg = jnp.take_along_axis(Drp, cols, axis=1)
+    negv, p = jax.lax.top_k(-Dg, k)
+    return -negv, jnp.take_along_axis(cols, p, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "metric", "chunk", "n", "tile"))
+def _topk_select_jnp(Xp, *, k: int, metric: str, chunk: int, n: int,
+                     tile: int):
+    offs = jnp.arange(Xp.shape[0] // chunk) * chunk
+    return jax.lax.map(
+        functools.partial(_topk_chunk, Xp, k=k, metric=metric, chunk=chunk,
+                          n=n, tile=tile), offs)          # (nc, chunk, k)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "k", "n"))
+def _topk_slab_chunked(rows, X, off, *, metric: str, k: int, n: int):
+    """One rung slab: dist_tile -> mask -> stable lax.top_k (row-chunked).
+
+    ``off`` is traced (one compilation per slab SHAPE, not per offset)."""
+    from repro.core.features import dist_tile
+
+    Dr = dist_tile(rows, X, metric)
+    gids = off + jnp.arange(rows.shape[0])
+    self_ = gids[:, None] == jnp.arange(n)[None, :]
+    return _knn._top_k_rows(jnp.where(self_, -jnp.inf, -Dr), k)
+
+
+def _topk_select_chunked(X, k: int, *, metric: str, row_chunk: int = 256):
+    """Terminal degradation rung: unfused host-driven slabs.
+
+    Each slab is an independent jit (distances -> top_k) synced to host
+    before the next starts — no lax.map, no fused program, the smallest
+    machinery that can still answer.  Bitwise equals the direct jnp
+    strategy (identical per-row ops; chunking never changes a row)."""
+    n = X.shape[0]
+    out_d, out_i = [], []
+    tracing = isinstance(X, jax.core.Tracer)
+    for off in range(0, n, row_chunk):
+        rows = X[off:off + min(row_chunk, n - off)]
+        dv, di = _topk_slab_chunked(rows, X, jnp.int32(off), metric=metric,
+                                    k=k, n=n)
+        if not tracing:
+            jax.block_until_ready(dv)
+        out_d.append(dv)
+        out_i.append(di)
+    return jnp.concatenate(out_d), jnp.concatenate(out_i)
+
+
+def _knn_from_distances_chunked(D, k: int, *, row_chunk: int = 1024):
+    """Row-chunked lax.top_k over a materialized D (distance-kind rung).
+
+    Bitwise equals ``core.knn.knn_from_distances`` — same per-row mask and
+    stable top_k, slab at a time instead of one full-matrix call."""
+    D = jnp.asarray(D, jnp.float32)
+    n = D.shape[0]
+    tracing = isinstance(D, jax.core.Tracer)
+    out_d, out_i = [], []
+    for off in range(0, n, row_chunk):
+        rows = D[off:off + min(row_chunk, n - off)]
+        gids = off + jnp.arange(rows.shape[0])
+        self_ = gids[:, None] == jnp.arange(n)[None, :]
+        dv, di = _knn._top_k_rows(jnp.where(self_, -jnp.inf, -rows), k)
+        if not tracing:
+            jax.block_until_ready(dv)
+        out_d.append(dv)
+        out_i.append(di)
+    return _knn.NeighborGraph(jnp.concatenate(out_i), jnp.concatenate(out_d))
+
+
+def _resolve_topk_tiles(n: int, d: int, k: int, block, tile,
+                        impl: str) -> tuple[int, int]:
+    """Turn "auto" selection knobs into (row slab, tile) via the cache."""
+    if block == "auto" or tile == "auto":
+        rb, rt = _tuner.resolve_blocks(n, "pald_topk", impl=impl, d=d, k=k)
+        block = rb if block == "auto" else block
+        tile = rt if tile == "auto" else tile
+    return max(min(int(block), max(n, 1)), 1), int(tile)
+
+
+def topk_select(
+    X,
+    k: int,
+    *,
+    metric: str = "euclidean",
+    impl: str | None = None,
+    block: int | str = "auto",
+    tile: int | str = "auto",
+) -> "_knn.NeighborGraph":
+    """Streaming neighbor selection: (n, d) features -> NeighborGraph.
+
+    The selection counterpart of ``knn_values``: one entry point, every
+    impl bitwise-identical to ``core.knn._top_k_rows`` on the self-masked
+    distances (stable lower-index-first tie-break included).
+
+    Args:
+        X: (n, d) feature matrix (cast to float32 once).
+        k: neighborhood size, ``0 <= k <= n-1``.
+        metric: one of ``features.METRICS``.
+        impl: 'pallas' (TPU) / 'interpret' — the streaming Pallas kernel
+            (``kernels/pald_topk.py``); 'jnp' — the blocked-jnp fallback
+            (direct or tile-min-prefiltered, see module comment);
+            'chunked' — the terminal degradation rung (unfused per-slab
+            ``lax.top_k`` with host syncs).  None = backend default.
+        block: rows per selection slab (the kernel's row tile); "auto"
+            resolves via the ``pald_topk:k<k>:d<d>`` tuning-cache pass.
+        tile: jnp strategy knob — column tile width of the tile-min
+            prefilter; ``tile >= n`` means direct full-width top_k.  For
+            the Pallas impls this is the candidate tile ``block_z``
+            (rounded to a power of two).  "auto" resolves with ``block``.
+
+    Returns:
+        ``core.knn.NeighborGraph`` — indices/distances (n, k).
+
+    Raises:
+        ValueError: unknown metric/impl, or ``k > n-1``.
+    """
+    impl = impl or _default_impl()
+    if impl not in ("pallas", "interpret", "jnp", "chunked"):
+        raise ValueError(
+            f"unknown impl {impl!r} (expected 'pallas', 'interpret', "
+            "'jnp' or 'chunked')")
+    fault_point("ops.topk_select", impl=impl, metric=metric)
+    X = jnp.asarray(X, jnp.float32)
+    n, d = X.shape
+    if k > max(n - 1, 0):
+        raise ValueError(f"k={k} exceeds the n-1={n - 1} available neighbors")
+    if k <= 0:
+        return _knn.NeighborGraph(jnp.zeros((n, 0), jnp.int32),
+                                  jnp.zeros((n, 0), jnp.float32))
+    block, tile = _resolve_topk_tiles(n, d, k, block, tile, impl)
+    if impl == "chunked":
+        dv, di = _topk_select_chunked(X, k, metric=metric, row_chunk=block)
+        return _knn.NeighborGraph(di, dv)
+    if impl == "jnp":
+        chunk = block
+        m = -(-n // chunk) * chunk
+        Xp = jnp.pad(X, ((0, m - n), (0, 0)))
+        dv, di = _topk_select_jnp(Xp, k=k, metric=metric, chunk=chunk, n=n,
+                                  tile=tile)
+        return _knn.NeighborGraph(di.reshape(m, k)[:n],
+                                  dv.reshape(m, k)[:n])
+    # pallas / interpret: power-of-two candidate tile >= next_pow2(k),
+    # rows padded to a multiple of both tiles (masked off via n_valid)
+    kp = _next_pow2(k)
+    bz = max(_next_pow2(min(int(tile), max(n, 1))), kp)
+    bz = min(bz, _next_pow2(n))
+    blk = 1
+    while blk * 2 <= max(int(block), 1):
+        blk *= 2                      # row tile rounded down to a pow2
+    blk = min(blk, _next_pow2(n))
+    q = max(blk, bz)                  # both pow2: lcm == max
+    m = -(-n // q) * q
+    Xp = jnp.pad(X, ((0, m - n), (0, 0)))
+    dv, di = topk_pallas(Xp, k=k, metric=metric, n_valid=n, block=blk,
+                         block_z=bz, interpret=impl == "interpret")
+    return _knn.NeighborGraph(di[:n], dv[:n])
+
+
+# --------------------------------------------------------------------------
+# fused select -> cohere: the single-program sparse pipeline
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("k", "metric", "chunk", "n",
+                                             "tile", "ties"))
+def _select_cohere_jnp(Xp, *, k: int, metric: str, chunk: int, n: int,
+                       tile: int, ties=DEFAULT_TIES):
+    """One jit for the whole sparse pipeline: each row slab is selected,
+    gathered and scored inside the same lax.map step, so the freshly
+    selected (chunk, k) neighbor values/indices feed the ``pald_knn`` tile
+    body (``core.knn.knn_values_tile``) directly — no NeighborGraph, no
+    intermediate HBM round-trip between the stages."""
+    wfun = resolve_weight(ties)
+    offs = jnp.arange(Xp.shape[0] // chunk) * chunk
+
+    def body(off):
+        dv, di = _topk_chunk(Xp, off, k=k, metric=metric, chunk=chunk, n=n,
+                             tile=tile)
+        g = _knn.gather_tile_from_features(Xp[:n], di, metric)
+        ow = None
+        if wfun.needs_index_tiebreak:
+            ow = (off + jnp.arange(chunk))[:, None] > di
+        return dv, di, _knn.knn_values_tile(dv, g, ow, wfun)
+
+    return jax.lax.map(body, offs)
+
+
+def select_cohere(
+    X,
+    *,
+    k: int,
+    metric: str = "euclidean",
+    block: int | str = "auto",
+    tile: int | str = "auto",
+    cohere_block: int | str = "auto",
+    impl: str | None = None,
+    select: str | None = None,
+    ties=DEFAULT_TIES,
+    normalize: bool = False,
+) -> tuple["_knn.NeighborGraph", jnp.ndarray]:
+    """Fused streaming selection -> sparse cohesion from features.
+
+    The from_features knn pipeline in one pass: neighbor selection (see
+    ``topk_select``) feeds the ``pald_knn`` tile body without a host-side
+    ``NeighborGraph`` in between.  On the jnp impl both stages trace into
+    ONE jit — selection, the neighbor-to-neighbor feature gather and
+    ``knn_values_tile`` share each lax.map step, so only one (block, n)
+    distance slab is ever live.  On the Pallas impls the streaming
+    selection kernel's (m, k) device outputs feed the cohesion kernel
+    directly.  Bitwise equals the two-stage ``knn_from_features`` ->
+    ``pald_knn`` composition for every weight functional (identical
+    selection, identical tile body, chunking never changes a row).
+
+    Args:
+        X: (n, d) features.
+        k: neighborhood size (clamped to n-1).
+        block / tile: selection knobs (see ``topk_select``).
+        cohere_block: row tile of the standalone cohesion pass — used only
+            when selection and cohesion cannot fuse into one program
+            (Pallas impls, 'chunked' selection); "auto" = ``pald_knn``
+            cache.
+        impl: cohesion impl ('pallas'/'interpret'/'jnp'); None = default.
+        select: selection impl override; None = follow ``impl``.
+        ties: weight functional; normalize: divide values by (n-1).
+
+    Returns:
+        (graph, values) — the selected NeighborGraph (returned for
+        downstream analysis; built AFTER the fused compute) and the
+        (n, k+1) sparse cohesion values (column 0 = self).
+    """
+    ties = resolve_weight(ties)
+    impl = impl or _default_impl()
+    sel = select or ("jnp" if impl == "jnp" else impl)
+    fault_point("ops.select_cohere", impl=impl, select=sel, ties=ties.name)
+    X = jnp.asarray(X, jnp.float32)
+    n, d = X.shape
+    k = min(int(k), max(n - 1, 0))
+    if k <= 0:
+        return (_knn.NeighborGraph(jnp.zeros((n, 0), jnp.int32),
+                                   jnp.zeros((n, 0), jnp.float32)),
+                jnp.zeros((n, 1), jnp.float32))
+    if sel == "jnp" and impl == "jnp":
+        block, tile = _resolve_topk_tiles(n, d, k, block, tile, sel)
+        chunk = block
+        m = -(-n // chunk) * chunk
+        Xp = jnp.pad(X, ((0, m - n), (0, 0)))
+        fault_point("ops.topk_select", impl=sel, metric=metric)
+        dv, di, vals = _select_cohere_jnp(Xp, k=k, metric=metric,
+                                          chunk=chunk, n=n, tile=tile,
+                                          ties=ties)
+        graph = _knn.NeighborGraph(di.reshape(m, k)[:n],
+                                   dv.reshape(m, k)[:n])
+        vals = vals.reshape(m, k + 1)[:n]
+    else:
+        # two kernels back-to-back: device arrays flow straight through
+        graph = topk_select(X, k, metric=metric, impl=sel, block=block,
+                            tile=tile)
+        vals = knn_values(X, graph, kind="features", metric=metric,
+                          block=cohere_block, impl=impl, ties=ties)
+    if normalize:
+        vals = vals / max(n - 1, 1)
+    return graph, vals
+
+
+# --------------------------------------------------------------------------
 # engine executors: the kernel-pipeline cells of the dispatch registry
 # (repro.core.engine).  Each receives one unbatched item plus the resolved
 # plan; the plan's tiles/impl/ties were fixed once at plan() time, so these
@@ -873,14 +1198,21 @@ def _exec_knn_distance(D, plan):
     n = D.shape[0]
     if plan.k >= n - 1:
         return _knn_dense_fallback(D, plan)
+    graph = None
+    if plan.select == "chunked":
+        # terminal selection rung: row-chunked lax.top_k over D's slabs
+        graph = _knn_from_distances_chunked(D, plan.k)
     graph, vals = pald_knn(D, k=plan.k, kind="distance", block=plan.block,
-                           impl=plan.impl, ties=plan.weight)
+                           impl=plan.impl, ties=plan.weight, graph=graph)
     C = _knn.scatter_dense(graph, vals)
     return C / max(n - 1, 1) if plan.normalize else C
 
 
 @_engine.register_executor("features", "knn", "dense")
 def _exec_knn_features(X, plan):
+    """The fused select->cohere cell: selection streams straight into the
+    pald_knn tile body (``select_cohere``) — no host-side NeighborGraph
+    between the stages, no (n, n) intermediate ever."""
     X = jnp.asarray(X, jnp.float32)
     n = X.shape[0]
     if plan.k >= n - 1:
@@ -888,7 +1220,11 @@ def _exec_knn_features(X, plan):
 
         return _knn_dense_fallback(cdist_reference(X, metric=plan.metric),
                                    plan)
-    graph, vals = pald_knn(X, k=plan.k, kind="features", metric=plan.metric,
-                           block=plan.block, impl=plan.impl, ties=plan.weight)
+    graph, vals = select_cohere(
+        X, k=plan.k, metric=plan.metric,
+        block=plan.select_block or "auto",
+        tile=plan.select_tile if plan.select_tile is not None else "auto",
+        cohere_block=plan.block, impl=plan.impl, select=plan.select,
+        ties=plan.weight)
     C = _knn.scatter_dense(graph, vals)
     return C / max(n - 1, 1) if plan.normalize else C

@@ -1,0 +1,224 @@
+"""Pallas streaming top-k neighbor selection: feature tiles in, best-list out.
+
+PR 5's ``knn_from_features`` computes each (row_chunk, n) distance slab and
+immediately reduces it with a full-width ``lax.top_k`` — correct, but the
+slab still round-trips HBM and the reduction re-scans all n candidates per
+row.  This kernel is the streaming form of the same contract: the grid walks
+(block, d) x (block_z, d) feature tile pairs (the dataflow of
+``kernels/pald_fused.py``), computes each (block, block_z) distance tile
+in-register via ``features.dist_tile``, and folds it into a running
+(block, kp) best-list held in the output ref — so neither D nor any full
+per-row score vector ever exists in HBM.
+
+Selection network
+-----------------
+Each tile is sorted with a bitonic network over COMPOSITE (value, index)
+keys — compare-exchange swaps on ``(v1 > v2) | ((v1 == v2) & (i1 > i2))`` —
+then its kp best columns are merged into the incumbent best-list with a
+single bitonic merge of the 2*kp concatenation (incumbent ascending ++
+candidates descending is bitonic by construction).  Because every real
+candidate has a distinct global column index, the composite key is a total
+order, which makes the maintained list exactly the first kp entries of the
+stable ``lax.top_k`` order on negated distances — the lower-index-first
+tie-break of ``core.knn._top_k_rows`` — independent of the tile visit
+order.
+
+Masking contract: the self column and every padded row/column (global index
+>= ``n_valid``) enter the network as (+inf, INT32_MAX) and therefore lose
+to every real candidate; with k <= n-1 real candidates per row they can
+never reach the returned k columns of a real row.
+
+TPU alignment: ``kp`` (k rounded up to a power of two, the network width)
+is lane-padded to 128 for the output refs off interpret mode; the caller
+slices back to k.  ``block_z`` must be a power of two >= kp.
+
+Bitwise scope: the selection machinery above is exact — given tile
+distance values it reproduces ``_top_k_rows`` bit-for-bit.  The tile
+distances themselves come from ``dist_tile``'s GEMM, whose per-pair
+contraction order is fixed by d alone on the TPU MXU but is only
+shape-stable on XLA:CPU for SIMD-clean d (e.g. 4, 8); for ragged d the
+(block, block_z) tile GEMM can differ from the jnp slab GEMM by 1 ulp.
+That is an XLA:CPU property shared by every tiled kernel in this repo
+(see tests/test_topk_conformance.py), not a property of this network.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.features import dist_tile
+
+__all__ = ["topk_pallas", "sort_pairs", "merge_pairs", "next_pow2"]
+
+_LANE = 128
+_IDX_PAD = np.iinfo(np.int32).max
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= max(x, 1)."""
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def _pairs_gt(v1, i1, v2, i2):
+    """Composite strict greater-than on (value, index) keys — the dual of
+    the stable lower-index-first tiebreak of ``core.knn._top_k_rows``."""
+    return (v1 > v2) | ((v1 == v2) & (i1 > i2))
+
+
+def _cx_pass(v, i, j: int, k: int | None):
+    """One compare-exchange pass at stride ``j`` over the last axis.
+
+    ``k`` is the bitonic sort stage (direction alternates per k-aligned
+    run, ascending first); ``k=None`` is the all-ascending merge form.
+    The pairing trick: reshape (b, w) -> (b, w/(2j), 2, j) puts partners
+    (idx, idx^j) on axis 2, and since 2j divides k the direction bit
+    (idx & k) is constant per reshaped row — a static mask, no gathers.
+    """
+    b, w = v.shape
+    q = w // (2 * j)
+    v4 = v.reshape(b, q, 2, j)
+    i4 = i.reshape(b, q, 2, j)
+    lo_v, hi_v = v4[:, :, 0, :], v4[:, :, 1, :]
+    lo_i, hi_i = i4[:, :, 0, :], i4[:, :, 1, :]
+    swap = _pairs_gt(lo_v, lo_i, hi_v, hi_i)
+    if k is not None:
+        # direction bit from an in-kernel iota (a host-side numpy mask
+        # would be a captured constant, which pallas_call rejects)
+        qi = jax.lax.broadcasted_iota(jnp.int32, (1, q, 1), 1)
+        asc = ((qi * (2 * j)) // k) % 2 == 0
+        swap = jnp.where(asc, swap, ~swap)
+    nlo_v = jnp.where(swap, hi_v, lo_v)
+    nhi_v = jnp.where(swap, lo_v, hi_v)
+    nlo_i = jnp.where(swap, hi_i, lo_i)
+    nhi_i = jnp.where(swap, lo_i, hi_i)
+    v = jnp.stack([nlo_v, nhi_v], axis=2).reshape(b, w)
+    i = jnp.stack([nlo_i, nhi_i], axis=2).reshape(b, w)
+    return v, i
+
+
+def sort_pairs(v, i):
+    """Full bitonic sort of (b, w) pairs, ascending by (value, index).
+
+    ``w`` must be a power of two.  log2(w)*(log2(w)+1)/2 vectorized
+    compare-exchange passes; equal composite keys only arise between
+    padding sentinels, where a swap is a no-op."""
+    w = v.shape[-1]
+    k = 2
+    while k <= w:
+        j = k // 2
+        while j >= 1:
+            v, i = _cx_pass(v, i, j, k)
+            j //= 2
+        k *= 2
+    return v, i
+
+
+def merge_pairs(v, i):
+    """Bitonic merge: (b, w) pairs forming a bitonic sequence -> ascending.
+
+    log2(w) passes.  Used on ``incumbent ++ reversed(candidates)``, which
+    is ascending-then-descending and hence bitonic."""
+    w = v.shape[-1]
+    j = w // 2
+    while j >= 1:
+        v, i = _cx_pass(v, i, j, None)
+        j //= 2
+    return v, i
+
+
+def _topk_kernel(xi_ref, xj_ref, val_ref, idx_ref, *, metric, n_valid,
+                 block, block_z, kp, out_w):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = jnp.full_like(val_ref, jnp.inf)
+        idx_ref[...] = jnp.full_like(idx_ref, _IDX_PAD)
+
+    roff = pl.program_id(0) * block
+    coff = j * block_z
+    # loop_d=False: the d-streamed manhattan form accumulates in a
+    # different summation order than the slab paths' broadcast-cube sum,
+    # which breaks the bitwise-vs-_top_k_rows contract.  The (block,
+    # block_z, d) cube lives only for this tile, so VMEM stays bounded.
+    dt = dist_tile(xi_ref[...], xj_ref[...], metric,
+                   loop_d=False)                         # (block, block_z)
+    rows = roff + jax.lax.broadcasted_iota(jnp.int32, (block, block_z), 0)
+    cols = coff + jax.lax.broadcasted_iota(jnp.int32, (block, block_z), 1)
+    # exclude-self masking: unlike masked_dist_tile's zero diagonal, the
+    # selection contract removes x from its own candidate set entirely
+    bad = (rows >= n_valid) | (cols >= n_valid) | (rows == cols)
+    cv = jnp.where(bad, jnp.inf, dt)
+    ci = jnp.where(bad, _IDX_PAD, cols)
+    cv, ci = sort_pairs(cv, ci)
+    cv, ci = cv[:, :kp], ci[:, :kp]                      # tile's kp best
+    iv = val_ref[...][:, :kp]
+    ii = idx_ref[...][:, :kp]
+    mv = jnp.concatenate([iv, cv[:, ::-1]], axis=1)      # bitonic 2*kp
+    mi = jnp.concatenate([ii, ci[:, ::-1]], axis=1)
+    mv, mi = merge_pairs(mv, mi)
+    mv, mi = mv[:, :kp], mi[:, :kp]
+    pad = out_w - kp
+    if pad:
+        mv = jnp.concatenate(
+            [mv, jnp.full((block, pad), jnp.inf, jnp.float32)], axis=1)
+        mi = jnp.concatenate(
+            [mi, jnp.full((block, pad), _IDX_PAD, jnp.int32)], axis=1)
+    val_ref[...] = mv
+    idx_ref[...] = mi
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "k", "metric", "n_valid", "block", "block_z", "interpret"))
+def topk_pallas(
+    X: jnp.ndarray,            # (m, d) zero-padded features
+    *,
+    k: int,
+    metric: str = "euclidean",
+    n_valid: int,
+    block: int = 128,
+    block_z: int = 128,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Streaming k-nearest selection: (m, d) features -> (m, k) best-lists.
+
+    Returns ``(distances, indices)`` rows sorted ascending by
+    (distance, index) — bitwise the rows of ``core.knn._top_k_rows`` on the
+    masked distance matrix.  Rows >= ``n_valid`` are junk (+inf / INT32_MAX)
+    for the caller to slice off; ``m`` must divide by both ``block`` and
+    ``block_z``, and ``block_z`` must be a power of two >= next_pow2(k).
+    """
+    m, d = X.shape
+    kp = next_pow2(max(k, 1))
+    assert m % block == 0 and m % block_z == 0, (m, block, block_z)
+    assert block_z == next_pow2(block_z) and block_z >= kp, (block_z, kp)
+    out_w = kp if interpret else max(-(-kp // _LANE) * _LANE, _LANE)
+    kernel = functools.partial(
+        _topk_kernel, metric=metric, n_valid=n_valid, block=block,
+        block_z=block_z, kp=kp, out_w=out_w)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(m // block, m // block_z),   # col axis last: sequential fold
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i, j: (i, 0)),     # rows
+            pl.BlockSpec((block_z, d), lambda i, j: (j, 0)),   # candidates
+        ],
+        out_specs=[
+            pl.BlockSpec((block, out_w), lambda i, j: (i, 0)),
+            pl.BlockSpec((block, out_w), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, out_w), jnp.float32),
+            jax.ShapeDtypeStruct((m, out_w), jnp.int32),
+        ],
+        interpret=interpret,
+    )(X.astype(jnp.float32), X.astype(jnp.float32))
+    return vals[:, :k], idx[:, :k]

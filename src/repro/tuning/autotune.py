@@ -42,7 +42,7 @@ _QUARANTINE_WARNED: set[str] = set()  # abspaths that already warned
 
 # passes understood by `tune`; each maps to one kernel-pipeline entry point
 PASSES = ("focus", "cohesion", "focus_tri", "cohesion_tri", "pald",
-          "pald_tri", "pald_fused", "pald_knn")
+          "pald_tri", "pald_fused", "pald_knn", "pald_topk")
 
 
 # the three built-in tie modes (mirrors core/weights.TIE_MODES; duplicated
@@ -64,7 +64,17 @@ def _pass_key(pass_: str, d: int | None, ties=None,
     keep their legacy ``:t-<mode>`` suffix (existing caches stay valid, and
     the default 'drop' keeps the bare key), every other functional — by
     registered name or instance — gets ``:w-<name>`` so autotuned tiles
-    never leak across functionals."""
+    never leak across functionals.
+
+    The selection pass is keyed ``pald_topk:k<k>:d<d>`` — k first (it
+    bounds the best-list/network width, the stronger lever) — and takes
+    no ties suffix: neighbor selection is weight-independent."""
+    if pass_ == "pald_topk":
+        if k is not None:
+            pass_ = f"{pass_}:k{int(k)}"
+        if d is not None:
+            pass_ = f"{pass_}:d{int(d)}"
+        return pass_
     if d is not None:
         pass_ = f"{pass_}:d{int(d)}"
     if k is not None:
@@ -251,7 +261,12 @@ def _valid_tile(v) -> bool:
 def _default_blocks(n: int, pass_: str) -> tuple[int, int]:
     """Size-aware fallback when nothing is cached (the old constants,
     clamped).  cohesion_tri keeps its whole (n, block_z) column slab in
-    VMEM, so its z tile shrinks as n grows (~6 MiB budget)."""
+    VMEM, so its z tile shrinks as n grows (~6 MiB budget).  The
+    selection pass (pald_topk) defaults to the PR 5 contract — 1024-row
+    slabs, tile = n i.e. direct full-width top_k (the tile-min prefilter
+    must be opted in or measured in; on clustered data direct wins)."""
+    if pass_ == "pald_topk":
+        return max(min(1024, n), 1), max(n, 1)
     block = min(128, n)
     block_z = min(512, n)
     if pass_ == "cohesion_tri" and n > 0:
@@ -425,6 +440,11 @@ def _runner(pass_: str, D, W, X, block: int, block_z: int, impl: str,
     if pass_ == "pald_knn":
         return ops.pald_knn(D, k=k or 16, block=block, impl=impl,
                             ties=ties)[1]
+    if pass_ == "pald_topk":
+        # block = rows per slab, block_z = tile-min prefilter width
+        # (>= n means direct); candidates time the full selection entry
+        return ops.topk_select(X, k or 16, impl=impl, block=block,
+                               tile=block_z).distances
     if pass_ == "focus":
         return ops.focus_general(D, D, D, block=block, block_z=block_z,
                                  impl=impl, ties=ties)
@@ -476,6 +496,14 @@ def tune(
     row-block axis of the grid is swept.  Non-default ``ties`` modes are
     keyed separately too (their tile bodies differ).
 
+    ``pass_="pald_topk"`` (streaming neighbor selection) is keyed
+    ``pald_topk:k<k>:d<d>`` with no ties suffix (selection is
+    weight-independent); its grid sweeps the selection row slab
+    (``blocks``) against the tile-min prefilter width (``blocks_z``,
+    where a candidate >= n means the direct full-width top_k) — the
+    prefilter-vs-direct crossover is data- and k-dependent, which is
+    exactly why it is measured, not hardcoded.
+
     The sweep is guarded per candidate: a crashing candidate records a
     ``{"failed": True, "error": ...}`` row and the grid continues; once
     ``time_budget`` (wall seconds for the whole sweep, checked between
@@ -485,14 +513,23 @@ def tune(
     candidate failed, RuntimeError (nothing worth caching)."""
     backend = backend or _default_backend()
     impl = impl or _default_impl(backend)
-    if pass_ == "pald_fused" and d is None:
+    if pass_ in ("pald_fused", "pald_topk") and d is None:
         d = 8
     if pass_ == "pald_knn":
         k = k or 16
         blocks_z = (0,)  # no z tile: don't re-time identical cells
+    if pass_ == "pald_topk":
+        # k-dependent tiles: the row-slab grid scales with the slab cost,
+        # blocks_z doubles as the tile-min prefilter width (n = direct)
+        k = k or 16
+        blocks = tuple(blocks) if tuple(blocks) != (32, 64, 128, 256, 512) \
+            else (256, 512, 1024, 2048)
+        blocks_z = tuple(blocks_z) if tuple(blocks_z) != (128, 256, 512, 1024) \
+            else (32, 64, 128, n)
     D, W, X = _synthetic_inputs(
         n, seed, with_weights=pass_ in ("cohesion", "cohesion_tri"),
-        d=d if d is not None else 8, with_distances=pass_ != "pald_fused",
+        d=d if d is not None else 8,
+        with_distances=pass_ not in ("pald_fused", "pald_topk"),
     )
     rows = []
     t0 = time.monotonic()
@@ -531,8 +568,12 @@ def tune(
     }
     if save:
         save_entry(backend, impl, n,
-                   _pass_key(pass_, d if pass_ == "pald_fused" else None, ties,
-                             k=k if pass_ == "pald_knn" else None),
+                   _pass_key(pass_,
+                             d if pass_ in ("pald_fused", "pald_topk")
+                             else None,
+                             None if pass_ == "pald_topk" else ties,
+                             k=k if pass_ in ("pald_knn", "pald_topk")
+                             else None),
                    record, path)
     return record
 

@@ -226,10 +226,85 @@ def test_features_chain_exhausts_when_distance_frontend_is_dead():
 def test_knn_chain_is_impl_only():
     """No other path shares knn's sparse semantics: its chain must never
     degrade onto a dense method (which would silently change cost and,
-    below k=n-1, values)."""
-    p = _plan_for_cell("distance", "knn", "dense")
-    labels = [s.label for s in resilience.chain_for(p)]
-    assert labels and all(lb.startswith("impl:") for lb in labels)
+    below k=n-1, values).  Since ISSUE 9 the chain ends on the
+    ``select:chunked`` rung — row-chunked ``lax.top_k`` selection with
+    jnp cohesion — which keeps the sparse semantics and is the smallest
+    machinery that still answers."""
+    for kind in ("distance", "features"):
+        p = _plan_for_cell(kind, "knn", "dense")
+        labels = [s.label for s in resilience.chain_for(p)]
+        assert labels and labels[-1] == "select:chunked"
+        assert all(lb.startswith("impl:") for lb in labels[:-1])
+        assert "reference" not in labels  # the dense oracle never rescues knn
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 9: the fused select->cohere sites degrade bitwise
+# ---------------------------------------------------------------------------
+def _knn_features_plan(on_error="fallback"):
+    return pald.plan(kind="features", method="knn", n=33, d=3, k=5,
+                     on_error=on_error)
+
+
+def test_fused_selection_fault_rescued_bitwise():
+    """Kill the fused jnp select->cohere program (and the interpret rung
+    behind it): the terminal ``select:chunked`` rung must answer, bitwise
+    — chunked selection is a pure re-partition of the same per-row
+    ``lax.top_k`` contract, and the cohesion tile body is unchanged."""
+    x = _X(n=33)
+    baseline = np.asarray(_knn_features_plan().execute(x))
+    p = _knn_features_plan()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.failing("ops.select_cohere", match={"select": "jnp"}), \
+             faults.failing("ops.select_cohere",
+                            match={"select": "interpret"}):
+            out = np.asarray(p.execute(x))
+    np.testing.assert_array_equal(out, baseline)
+    events = p.explain()["degradations"]
+    assert events and events[-1]["fallback"] == "select:chunked"
+
+
+def test_topk_select_fault_rescued_bitwise():
+    """The standalone selection site (``ops.topk_select``) is a
+    registered fault point too: killing the jnp selection inside the
+    primary leaves the rescue bitwise-identical."""
+    x = _X(n=33)
+    baseline = np.asarray(_knn_features_plan().execute(x))
+    p = _knn_features_plan()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.failing("ops.topk_select", match={"impl": "jnp"}):
+            out = np.asarray(p.execute(x))
+    np.testing.assert_array_equal(out, baseline)
+    assert len(p.explain()["degradations"]) == 1
+
+
+def test_terminal_selection_rung_answers_alone_bitwise():
+    """Exhaust every rung above ``select:chunked`` for the features-knn
+    cell: the row-chunked ``lax.top_k`` terminal rung must answer by
+    itself, bitwise-equal to the un-faulted primary."""
+    x = _X(n=33)
+    baseline = np.asarray(_knn_features_plan().execute(x))
+    p = _knn_features_plan()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.failing("engine.execute", times=1), \
+             faults.failing("resilience.step",
+                            pred=lambda site, **c: str(
+                                c.get("step", "")).startswith("impl:")):
+            out = np.asarray(p.execute(x))
+    np.testing.assert_array_equal(out, baseline)
+    final = p.explain()["degradations"][-1]
+    assert final["fallback"] == "select:chunked"
+
+
+def test_selection_faults_raise_in_strict_mode():
+    x = _X(n=33)
+    p = _knn_features_plan(on_error="raise")
+    with faults.failing("ops.select_cohere", match={"select": "jnp"}):
+        with pytest.raises(RuntimeError, match="injected fault"):
+            p.execute(x)
 
 
 # ---------------------------------------------------------------------------

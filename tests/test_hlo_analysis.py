@@ -94,6 +94,47 @@ def test_fused_path_never_materializes_D():
         f"materialized ({mat_pipe} B)")
 
 
+def test_fused_select_cohere_never_materializes_D():
+    """ISSUE 9 acceptance: the fused select->cohere pipeline allocates
+    neither the (n, n) distance matrix nor a full per-row scored vector
+    beyond one (chunk, n) slab.
+
+    The jnp fused program is one lax.map over row slabs: selection, the
+    neighbor feature gather and the cohesion tile body share each step,
+    so its compiled temps must stay under ONE (n, n) f32 buffer and under
+    a small multiple of the (chunk, n) slab — the working set the module
+    comment in kernels/ops.py promises."""
+    from repro.kernels import ops
+
+    n, d, k, chunk = 2048, 8, 16, 128
+    X = jnp.zeros((n, d), jnp.float32)
+    d_bytes = n * n * 4
+    slab_bytes = chunk * n * 4
+
+    def temp(fn):
+        return (jax.jit(fn).lower(X).compile()
+                .memory_analysis().temp_size_in_bytes)
+
+    fused = temp(lambda X: ops.select_cohere(
+        X, k=k, block=chunk, tile=n)[1])
+    assert fused < d_bytes, (
+        f"fused select->cohere peaks at {fused} B >= one D ({d_bytes} B): "
+        "a full distance matrix fits in its temps")
+    assert fused <= 8 * slab_bytes, (
+        f"fused select->cohere peaks at {fused} B > 8 slabs "
+        f"({8 * slab_bytes} B): per-row state is not O(chunk * n)")
+
+    # the tile-min prefilter strategy obeys the same bound
+    pre = temp(lambda X: ops.select_cohere(
+        X, k=k, block=chunk, tile=64)[1])
+    assert pre < d_bytes and pre <= 8 * slab_bytes
+
+    # selection alone too (the standalone knn_from_features backend)
+    sel = temp(lambda X: (g := ops.topk_select(
+        X, k, impl="jnp", block=chunk, tile=n)).distances)
+    assert sel < d_bytes and sel <= 8 * slab_bytes
+
+
 def test_roofline_terms():
     t = H.roofline_terms(hlo_flops=197e12, hlo_bytes=819e9, coll_bytes=50e9,
                          chips=1, flops_is_global=False)
