@@ -1,0 +1,98 @@
+"""Mesh-sharded knn PaLD: points/sec vs device count (ISSUE 10).
+
+Each (n, d, k) cell is run at every device count in ``ps``: p=1 is the
+single-device fused select->cohere pipeline (the PR 9 baseline a caller
+gets with no ``mesh=``), p>1 shards rows across a 1-axis mesh of forced
+host devices (or real accelerators when present) with the given strategy.
+The ``speedup_vs_p1`` column is the scaling curve the CI gate consumes.
+
+Honesty note for CPU runners: forced host devices all share the same
+cores, so p>1 measures the sharding OVERHEAD there, not a speedup — the
+gate in ci.yml applies a no-regression floor on CPU and the >= 2x
+requirement only where devices are real (see BENCH_PR10.json gate row).
+
+The full-scale entry point ``run_scale`` lands the n=10^6 end-to-end run:
+row-sharded streaming selection + sparse cohesion, never materializing
+the (n, n) distance matrix — (n, k+1) sparse output only.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _features(n: int, d: int, seed: int = 0) -> jnp.ndarray:
+    rng = np.random.default_rng(seed)
+    # clustered gaussian blobs: realistic neighborhood structure
+    centers = rng.normal(scale=4.0, size=(max(8, n // 1000), d))
+    X = centers[rng.integers(0, len(centers), n)] + rng.normal(size=(n, d))
+    return jnp.asarray(X, jnp.float32)
+
+
+def _time_once(fn, *args, warm: bool = True) -> float:
+    if warm:
+        jax.block_until_ready(fn(*args))  # warmup + compile
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def _cell(X, k: int, p: int, strategy: str, block, warm: bool = True) -> float:
+    from repro.core import distributed_knn as dknn
+    from repro.kernels import ops
+    from repro.launch import mesh as meshlib
+
+    if p == 1:
+        return _time_once(
+            lambda A: ops.select_cohere(A, k=k, impl="jnp",
+                                        block=block, normalize=True), X,
+            warm=warm)
+    mesh = meshlib.make_test_mesh((p,), ("data",))
+    return _time_once(
+        lambda A: dknn.pald_knn_sharded(A, mesh, k=k, strategy=strategy,
+                                        block=block), X, warm=warm)
+
+
+def run(cells=((4096, 8, 16), (16384, 8, 16)), ps=(1, 2, 4),
+        strategy: str = "ring", block="auto",
+        warm: bool = True) -> list[dict]:
+    rows: list[dict] = []
+    avail = len(jax.devices())
+    for n, d, k in cells:
+        X = _features(n, d)
+        base = None
+        for p in ps:
+            if p > avail:
+                continue
+            sec = _cell(X, k, p, strategy, block, warm=warm)
+            if p == 1:
+                base = sec
+            rows.append({
+                "n": n, "d": d, "k": k, "p": p,
+                "strategy": "fused" if p == 1 else strategy,
+                "seconds": round(sec, 4),
+                "points_per_sec": round(n / sec, 1),
+                "speedup_vs_p1": round(base / sec, 3) if base else 1.0,
+            })
+    return rows
+
+
+def run_scale(n: int = 1_000_000, d: int = 4, k: int = 8,
+              ps=(1, 4), strategy: str = "ring",
+              block: int = 4096) -> list[dict]:
+    """The n=10^6 end-to-end scaling curve (full mode only).
+
+    An explicit large ``block`` keeps the host-side chunk loop short; the
+    sparse output is (n, k+1) floats (~36 MB at the defaults) and X is
+    (n, d) (~16 MB) — the 10^12-entry distance matrix never exists.
+    Each cell is timed cold (single run, compile included): at ~1 hour a
+    cell on a single-core host a warmup repeat would double an already
+    compile-dominated-by-nothing measurement for < 1% accuracy.
+    """
+    return run(cells=((n, d, k),), ps=ps, strategy=strategy, block=block,
+               warm=False)

@@ -161,12 +161,15 @@ def run_topk(args) -> None:
             args.n if t.strip() == "direct" else int(t)
             for t in args.tiles.split(",") if t.strip()
         )
+    if args.p and args.p > 1:
+        kw["p"] = args.p  # mesh cell: times the sharded body, keys :p<p>
     rec = autotune.tune(
         args.n, "pald_topk", impl=args.impl, path=args.cache,
         iters=args.iters, time_budget=args.budget, **kw,
     )
     print(f"# tuned pald_topk n={args.n} d={args.d} k={args.k} "
-          f"impl={args.impl or 'default'}")
+          f"impl={args.impl or 'default'}"
+          + (f" p={args.p}" if args.p and args.p > 1 else ""))
     for row in rec["grid"]:
         strat = "direct" if row["block_z"] >= args.n else f"tile={row['block_z']}"
         head = f"  block={row['block']:5d} {strat:12s} "
@@ -252,6 +255,10 @@ def main() -> None:
     topk.add_argument("--tiles", default=None,
                       help="csv prefilter tile candidates; >= n or the word "
                            "'direct' means full-width top_k")
+    topk.add_argument("--p", type=int, default=None,
+                      help="mesh device count: tune the SHARDED "
+                           "select->cohere cell (pald_topk:...:p<p>) on a "
+                           "p-device row shard; needs p devices")
     topk.add_argument("--iters", type=int, default=3)
     topk.add_argument("--cache", default=None, help="tuning cache path")
     topk.add_argument("--budget", type=float, default=None,

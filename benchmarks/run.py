@@ -56,8 +56,9 @@ def main() -> None:
     args = ap.parse_args()
 
     t0 = time.time()
-    from . import (bench_blocksize, bench_knn, bench_optimizations,
-                   bench_scaling, bench_text_analysis, bench_variants, common)
+    from . import (bench_blocksize, bench_distributed_knn, bench_knn,
+                   bench_optimizations, bench_scaling, bench_text_analysis,
+                   bench_variants, common)
 
     sections: dict[str, dict] = {}
 
@@ -102,6 +103,11 @@ def main() -> None:
                 "(--fast)",
                 lambda: bench_variants.run_batched(
                     cells=((3, 128), (3, 256), (2, 512))))
+        section("distributed_knn",
+                "distributed_knn: mesh-sharded select->cohere points/sec "
+                "vs devices (--fast)",
+                lambda: bench_distributed_knn.run(
+                    cells=((4096, 8, 16),), ps=(1, 2, 4)))
     else:
         section("fig3", "fig3: optimization waterfall",
                 bench_optimizations.run)
@@ -136,6 +142,14 @@ def main() -> None:
                 "engine: batched (B,n,n)/(B,n,d) throughput vs per-item loop",
                 lambda: bench_variants.run_batched(
                     cells=((4, 256), (4, 512), (2, 1024))))
+        section("distributed_knn",
+                "distributed_knn: mesh-sharded select->cohere points/sec "
+                "vs devices",
+                lambda: bench_distributed_knn.run(
+                    cells=((16384, 8, 16), (65536, 8, 16)), ps=(1, 2, 4, 8)))
+        section("distributed_knn_scale",
+                "distributed_knn: n=10^6 end-to-end scaling curve",
+                bench_distributed_knn.run_scale)
     section("scaling_measured", "fig9: measured scaling",
             bench_scaling.measured)
     section("comm_model", "comm model (n=100k analytic)",

@@ -1,7 +1,9 @@
-"""Large-n community detection with sparse k-NN PaLD (ISSUE 5 + 9).
+"""Large-n community detection with sparse k-NN PaLD (ISSUE 5 + 9 + 10).
 
     PYTHONPATH=src python examples/pald_knn_clusters.py            # n = 50,000
     PYTHONPATH=src python examples/pald_knn_clusters.py --n 4000   # quick run
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python examples/pald_knn_clusters.py --mesh 4  # sharded
 
 A synthetic mixture of many small gaussian communities at a size that is
 INFEASIBLE for every dense path: at n = 50k the distance matrix alone is
@@ -23,6 +25,12 @@ Communities are recovered with k >= the community size — the regime the
 restriction is designed for (each point's neighborhood covers its whole
 community, so within-community support survives while cross-community
 pairs are never even candidates).
+
+``--mesh P`` (ISSUE 10) runs the same fused pipeline row-sharded across
+P devices: feature blocks move by ``--strategy`` (allgather / ring / 2d,
+O(n*d) words total), each shard streams its own selection tiles into the
+cohesion body, and only the sparse (n, k+1) result is gathered — again
+bitwise-identical to the single-device paths.
 """
 import argparse
 import time
@@ -57,6 +65,15 @@ def main() -> None:
     ap.add_argument("--unfused", action="store_true",
                     help="two-stage path (standalone selection, then "
                          "cohesion) instead of the fused pipeline")
+    ap.add_argument("--mesh", type=int, default=0, metavar="P",
+                    help="shard rows across P devices (ISSUE 10 "
+                         "select->cohere shard_map pipeline; on CPU force "
+                         "host devices via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=P)")
+    ap.add_argument("--strategy", default="ring",
+                    choices=["allgather", "ring", "2d"],
+                    help="feature-movement strategy for --mesh "
+                         "(2d needs even P)")
     args = ap.parse_args()
 
     X, labels = make_mixture(args.n, args.comm_size, args.d, args.seed)
@@ -83,6 +100,33 @@ def main() -> None:
         t_coh = time.time() - t0
         print(f"[knn] sparse cohesion (O(n*k^2)): {t_coh:.1f}s")
         t_pipe = t_sel + t_coh
+    elif args.mesh > 1:
+        import jax
+        from jax.sharding import Mesh
+        from repro.core import distributed_knn as dknn
+        p = args.mesh
+        devs = jax.devices()
+        if len(devs) < p:
+            raise SystemExit(
+                f"--mesh {p}: need {p} devices, have {len(devs)} (set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={p})")
+        if args.strategy == "2d":
+            if p % 2:
+                raise SystemExit("--strategy 2d needs an even --mesh P")
+            shape, axnames = (p // 2, 2), ("rows", "cols")
+        else:
+            shape, axnames = (p,), ("data",)
+        mesh = Mesh(np.asarray(devs[:p]).reshape(shape), axnames)
+        t0 = time.time()
+        graph, vals = dknn.pald_knn_sharded(Xd, mesh, k=args.k,
+                                            strategy=args.strategy,
+                                            block=args.row_chunk,
+                                            normalize=True)
+        vals.block_until_ready()
+        t_pipe = time.time() - t0
+        print(f"[knn] mesh-sharded select->cohere ({args.strategy}, "
+              f"mesh {shape}): {t_pipe:.1f}s -> ({n}, {args.k}) graph + "
+              f"values, bitwise-equal to the single-device fused path")
     else:
         t0 = time.time()
         graph, vals = ops.select_cohere(Xd, k=args.k, metric="euclidean",

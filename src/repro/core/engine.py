@@ -204,6 +204,11 @@ class PaldPlan:
     select_block: int | None = None   # rows per selection slab
     select_tile: int | None = None    # tile-min prefilter width
     select_source: str = "n/a"        # provenance (explain)
+    # mesh-sharded knn (features kind, core/distributed_knn.py): the device
+    # mesh the fused select->cohere pipeline shards over, and the resolved
+    # shard strategy ('allgather'/'ring'/'2d').  None = single device.
+    mesh: Any = None
+    strategy: str | None = None
     # the resolved weight functional (core/weights.py); ``ties`` above is its
     # name, kept as the stable string surface for explain()/fault contexts.
     weight: WeightFunctional | None = None
@@ -283,6 +288,31 @@ class PaldPlan:
             return self.n
         return -(-self.n // self.block) * self.block
 
+    def _shard_rows(self) -> int | None:
+        """Per-shard padded row count of a mesh plan (None off the mesh)."""
+        if self.mesh is None:
+            return None
+        from repro.core import distributed_knn as _dknn
+
+        p = self.mesh.devices.size
+        chunk = self.select_block or 1
+        _, _, m = _dknn.resolve_shard_shapes(self.n, p=p, chunk=chunk)
+        return m // p
+
+    def _comm_estimate(self) -> dict | None:
+        """Per-device comm model of a mesh plan (None off the mesh)."""
+        if self.mesh is None:
+            return None
+        from repro.core import distributed_knn as _dknn
+
+        import math as _math
+        shape = tuple(self.mesh.devices.shape)
+        p = self.mesh.devices.size
+        pr = _math.prod(shape[:-1]) if len(shape) >= 2 else 1
+        return _dknn.comm_estimate(
+            self.strategy or "auto", n=self.n, d=self.d or 1,
+            k=self.k or 1, p=p, pr=pr, pc=shape[-1])
+
     def explain(self) -> dict[str, Any]:
         """The resolved plan as a plain dict — the debuggability surface.
 
@@ -296,7 +326,11 @@ class PaldPlan:
             ``degradations``, the guarded-execution event log), the knn
             selection-stage report ``select`` / ``select_block`` /
             ``select_tile`` / ``select_source`` (None / "n/a" off the
-            knn method), the
+            knn method), the mesh-sharding report ``mesh`` /
+            ``mesh_axes`` / ``strategy`` / ``shard_rows`` /
+            ``comm_estimate`` (device-mesh shape, resolved strategy,
+            per-shard padded rows and the per-device communication model
+            of ``core/distributed_knn.py``; all None off the mesh), the
             ``padded_n`` /
             ``padded_shape`` the executor will see, ``method_source`` and
             ``block_source`` provenance strings ("explicit",
@@ -338,6 +372,13 @@ class PaldPlan:
             "select_block": self.select_block,
             "select_tile": self.select_tile,
             "select_source": self.select_source,
+            "mesh": (tuple(self.mesh.devices.shape)
+                     if self.mesh is not None else None),
+            "mesh_axes": (tuple(self.mesh.axis_names)
+                          if self.mesh is not None else None),
+            "strategy": self.strategy,
+            "shard_rows": self._shard_rows(),
+            "comm_estimate": self._comm_estimate(),
             "method_source": self.method_source,
             "block_source": self.block_source,
             "executor": f"{fn.__module__}.{fn.__qualname__}",
@@ -528,6 +569,8 @@ def plan(
     select: str | None = None,
     select_block: int | str | None = None,
     select_tile: int | str | None = None,
+    mesh=None,
+    strategy: str | None = None,
 ) -> PaldPlan:
     """Resolve every knob exactly once and return a frozen ``PaldPlan``.
 
@@ -555,6 +598,14 @@ def plan(
     disables it); "auto"/None resolve via the ``pald_topk:k<k>:d<d>``
     tuning-cache pass.  On kind='distance' only ``select='chunked'`` (the
     row-chunked ``lax.top_k`` terminal rung) is meaningful.
+    ``mesh=`` / ``strategy=`` shard the fused select->cohere knn pipeline
+    across a ``jax.sharding.Mesh`` (``core/distributed_knn.py``): rows of X
+    are sharded over all mesh axes and features rotate by ``strategy``
+    ('allgather', 'ring', or '2d'; 'auto'/None picks '2d' on a >= 2-axis
+    mesh, 'ring' otherwise).  Only kind='features' with method='knn'
+    accepts a mesh, the result stays bitwise-equal to the single-device
+    fused path, and ``explain()`` reports the mesh shape, per-shard rows,
+    and a per-device comm estimate.
 
     One deliberate exception: ``block=`` is accepted AND ignored by
     ``method='dense'`` (the un-blocked path has no tile), so the common
@@ -672,6 +723,36 @@ def plan(
             "select_block=/select_tile= only apply to kind='features' "
             "(they tile the feature-space selection slabs)")
 
+    # -- mesh sharding (features knn only) ----------------------------------
+    if strategy is not None and mesh is None:
+        raise ValueError(
+            f"strategy={strategy!r} configures the mesh-sharded knn "
+            "pipeline; pass mesh= (a jax.sharding.Mesh) alongside it")
+    if mesh is not None:
+        from . import distributed_knn as _dknn
+
+        if kind != "features" or method != "knn":
+            raise ValueError(
+                "mesh= shards the fused select->cohere knn pipeline and "
+                f"needs kind='features' with method='knn' (got kind={kind!r}"
+                f", method={method!r}); drop mesh=, or pass k= to request "
+                "the knn method on feature input")
+        if batch is not None:
+            raise ValueError(
+                "mesh= plans run one item at a time (the device mesh is the "
+                "parallel axis); drop batch=")
+        if strategy is not None and strategy not in _dknn.STRATEGIES:
+            raise ValueError(
+                f"unknown strategy {strategy!r} (expected one of "
+                f"{_dknn.STRATEGIES})")
+        axes = tuple(mesh.axis_names)
+        if strategy in (None, "auto"):
+            strategy = "2d" if len(axes) >= 2 else "ring"
+        if strategy == "2d" and len(axes) < 2:
+            raise ValueError(
+                "strategy='2d' needs a mesh with >= 2 axes (row x column "
+                f"split), got axes={axes}; use 'ring' or 'allgather'")
+
     # -- impl --------------------------------------------------------------
     if method in _IMPL_METHODS:
         impl = impl or _default_kernel_impl(method)
@@ -739,7 +820,8 @@ def plan(
             sel_source = "explicit"
             if sb == "auto" or st == "auto":
                 rb, rt, sel_source = _tuner.resolve_blocks_ex(
-                    n, "pald_topk", d=d, k=k, impl=(select or impl))
+                    n, "pald_topk", d=d, k=k, impl=(select or impl),
+                    p=(int(mesh.devices.size) if mesh is not None else None))
                 sb = rb if sb == "auto" else sb
                 st = rt if st == "auto" else st
             sb = max(min(int(sb), max(n, 1)), 1)
@@ -752,6 +834,7 @@ def plan(
             n=n, d=d, k=k, on_error=on_error, method_source=method_source,
             block_source=block_source, select=select, select_block=sb,
             select_tile=st, select_source=sel_source,
+            mesh=mesh, strategy=(strategy if mesh is not None else None),
         )
     if method == "fused":
         # one authority for the fused tile defaults, shared with

@@ -224,6 +224,8 @@ def from_features(
     select: str | None = None,
     select_block: int | str | None = None,
     select_tile: int | str | None = None,
+    mesh=None,
+    strategy: str | None = None,
 ) -> jnp.ndarray:
     """PaLD cohesion straight from feature vectors.
 
@@ -279,6 +281,14 @@ def from_features(
         select_tile: tile-min prefilter width for the jnp selection
             strategy (a value >= n disables the prefilter; "auto"/None =
             tuned).
+        mesh: a ``jax.sharding.Mesh`` to shard the fused select->cohere
+            knn pipeline across (``method="knn"`` only) — rows of X are
+            sharded over all mesh axes, feature blocks rotate by
+            ``strategy``, and the result stays bitwise-equal to the
+            single-device fused path (``core/distributed_knn.py``).
+        strategy: mesh comm pattern — 'allgather', 'ring', or '2d'
+            ('auto'/None picks '2d' on a >= 2-axis mesh, 'ring'
+            otherwise); requires ``mesh=``.
 
     Returns:
         C as float32: (n, n) for 2-D X, (B, n, n) for batched input.
@@ -299,7 +309,7 @@ def from_features(
         block=block, block_z=block_z, normalize=normalize, impl=impl,
         ties=ties, weight=weight, batch=batch, check=check, k=k,
         on_error=on_error, select=select, select_block=select_block,
-        select_tile=select_tile,
+        select_tile=select_tile, mesh=mesh, strategy=strategy,
     )
     return p.execute(X)
 

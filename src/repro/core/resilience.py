@@ -206,8 +206,9 @@ def _impl_step(impl: str) -> Step:
     def run(x, plan, batch):
         fault_point("resilience.step", step=f"impl:{impl}", kind=plan.kind,
                     method=plan.method, schedule=plan.schedule, impl=impl)
-        return _dispatch_derived(dataclasses.replace(plan, impl=impl), x,
-                                 batch)
+        return _dispatch_derived(
+            dataclasses.replace(plan, impl=impl, mesh=None, strategy=None),
+            x, batch)
 
     return Step(f"impl:{impl}", run)
 
@@ -236,10 +237,26 @@ def _select_step() -> Step:
     def run(x, plan, batch):
         fault_point("resilience.step", step="select:chunked", kind=plan.kind,
                     method=plan.method, schedule=plan.schedule, impl="jnp")
-        derived = dataclasses.replace(plan, impl="jnp", select="chunked")
+        derived = dataclasses.replace(plan, impl="jnp", select="chunked",
+                                      mesh=None, strategy=None)
         return _dispatch_derived(derived, x, batch)
 
     return Step("select:chunked", run)
+
+
+def _mesh_off_step() -> Step:
+    """First rung of a mesh-sharded knn plan: re-enter the single-device
+    fused select->cohere path.  The sharded bodies are bitwise-equal to the
+    fused kernel by construction, so dropping the mesh degrades locality
+    and wall-clock, never values."""
+    def run(x, plan, batch):
+        fault_point("resilience.step", step="mesh:single-device",
+                    kind=plan.kind, method=plan.method,
+                    schedule=plan.schedule, impl=plan.impl)
+        derived = dataclasses.replace(plan, mesh=None, strategy=None)
+        return _dispatch_derived(derived, x, batch)
+
+    return Step("mesh:single-device", run)
 
 
 def _reference_step() -> Step:
@@ -303,6 +320,10 @@ def _default_chain(plan) -> list:
     change cost by orders of magnitude mid-request.
     """
     steps: list[Step] = []
+    if getattr(plan, "mesh", None) is not None:
+        # a failed mesh cell rescues onto ONE device first — same impl,
+        # same tiles, bitwise-identical answer, no collectives in the way
+        steps.append(_mesh_off_step())
     if plan.method in ("kernel", "fused", "knn"):
         on_tpu = jax.default_backend() == "tpu"
         for impl in IMPL_ORDER:
@@ -409,9 +430,15 @@ def execute_plan(plan, x):
         except Exception as step_exc:  # noqa: BLE001
             attempts.append((step.label, step_exc))
             continue
+        extra = {}
+        if getattr(plan, "mesh", None) is not None:
+            # record WHICH mesh cell failed so explain()["degradations"]
+            # pins the rescue to a concrete (mesh shape, strategy) pair
+            extra["mesh"] = tuple(plan.mesh.devices.shape)
+            extra["strategy"] = plan.strategy
         plan._events.append(_event(
             cell=cell, cause="executor-failure", error=original,
-            fallback=step.label, retries=len(attempts)))
+            fallback=step.label, retries=len(attempts), **extra))
         warn_once(("fallback", cell, step.label),
                   f"PaLD {cell}: primary executor failed "
                   f"({type(original).__name__}: {original}); degraded to "

@@ -1220,6 +1220,17 @@ def _exec_knn_features(X, plan):
 
         return _knn_dense_fallback(cdist_reference(X, metric=plan.metric),
                                    plan)
+    if getattr(plan, "mesh", None) is not None:
+        from repro.core import distributed_knn as _dknn
+
+        graph, vals = _dknn.pald_knn_sharded(
+            X, plan.mesh, k=plan.k, metric=plan.metric,
+            strategy=plan.strategy or "auto", normalize=False,
+            weight=plan.weight, block=plan.select_block or "auto",
+            tile=plan.select_tile if plan.select_tile is not None
+            else "auto", on_error="raise")
+        C = _knn.scatter_dense(graph, vals)
+        return C / max(n - 1, 1) if plan.normalize else C
     graph, vals = select_cohere(
         X, k=plan.k, metric=plan.metric,
         block=plan.select_block or "auto",

@@ -135,6 +135,50 @@ def run_cell(n: int, multi_pod: bool, strategy: str, *, dtype=jnp.float32,
     return cell
 
 
+def knn_pald_ops(n: int, k: int) -> float:
+    """Sharded-knn op count: selection scores every (row, candidate, dim)
+    triple (~3 ops: diff, fma, compare-amortized) and the sparse cohesion
+    runs the same 9-op inner loop as the dense form but over (k+1)-cliques
+    only — O(n·k²) instead of O(n³)."""
+    return 3.0 * n * n + 9.0 * n * (k + 1) ** 2
+
+
+def knn_shard_estimate(n: int, d: int, k: int, *, strategy: str,
+                       pr: int, pc: int, dtype_bytes: int = 4) -> dict:
+    """Cost model for one mesh-sharded knn plan cell (no compile needed).
+
+    Communication comes straight from ``distributed_knn.comm_estimate`` —
+    every strategy moves O(n·d) feature words per device-round, never the
+    O(n²) distance matrix.  Compute splits into the selection term
+    (n²·d/p distance ops) and the sparse cohesion term (n·k²/p), both on
+    the VPU.  Importable by tests: ``test_distributed.py`` asserts the
+    comm term here matches the distributed_knn docstring's n·d claim.
+    """
+    from repro.core import distributed_knn as dknn
+
+    p = pr * pc
+    comm = dknn.comm_estimate(strategy, n=n, d=d, k=k, p=p, pr=pr, pc=pc)
+    sel_ops = 3.0 * n * n * d / p
+    coh_ops = 9.0 * n * (k + 1) ** 2 / p
+    coll_bytes = comm["per_device_words"] * dtype_bytes
+    terms = {
+        "compute_s": (sel_ops + coh_ops) / VPU_PEAK,
+        "collective_s": coll_bytes / hlo_analysis.ICI_BW,
+    }
+    terms["bottleneck"] = max(
+        ("compute_s", "collective_s"), key=lambda kk: terms[kk]
+    ).removesuffix("_s")
+    return {
+        "workload": f"pald-knn-n{n}-k{k}", "strategy": comm["strategy"],
+        "mesh": f"{pr}x{pc}", "chips": p, "status": "ok",
+        "selection_ops_per_chip": sel_ops,
+        "cohesion_ops_per_chip": coh_ops,
+        "comm": comm,
+        "coll_bytes_per_chip": coll_bytes,
+        "roofline": terms,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=102400)
@@ -142,11 +186,37 @@ def main() -> None:
     ap.add_argument("--strategies", default="allgather,ring,2d,2d+stream")
     ap.add_argument("--dtype", choices=["float32", "bfloat16"], default="float32")
     ap.add_argument("--out", default="benchmarks/dryrun_out_pald")
+    ap.add_argument("--knn-k", type=int, default=None,
+                    help="emit mesh-sharded knn plan estimates for this k "
+                         "instead of compiling the dense bodies")
+    ap.add_argument("--knn-d", type=int, default=64,
+                    help="feature dim for the knn estimates")
     args = ap.parse_args()
     dtype = jnp.bfloat16 if args.dtype == "bfloat16" else jnp.float32
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
     os.makedirs(args.out, exist_ok=True)
     failures = 0
+    if args.knn_k is not None:
+        for multi in meshes:
+            pr, pc = (32, 16) if multi else (16, 16)
+            for strat in args.strategies.split(","):
+                if strat == "2d+stream":
+                    continue
+                tag = (f"paldknn{args.n}k{args.knn_k}__{strat}"
+                       f"__{'multi' if multi else 'single'}")
+                print(f"[dryrun-pald] {tag}")
+                cell = knn_shard_estimate(
+                    args.n, args.knn_d, args.knn_k, strategy=strat,
+                    pr=pr, pc=pc)
+                t = cell["roofline"]
+                print(f"  est compute {t['compute_s']*1e3:.2f} ms  "
+                      f"coll {cell['coll_bytes_per_chip']/2**20:,.1f} MiB  "
+                      f"coll_t {t['collective_s']*1e3:.2f} ms  "
+                      f"bottleneck {t['bottleneck']}")
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(cell, f, indent=1)
+        print("[dryrun-pald] done, 0 failures")
+        raise SystemExit(0)
     for multi in meshes:
         for strat in args.strategies.split(","):
             if strat == "2d+stream" and not multi:

@@ -52,7 +52,7 @@ _TIE_MODES = ("drop", "split", "ignore")
 
 
 def _pass_key(pass_: str, d: int | None, ties=None,
-              k: int | None = None) -> str:
+              k: int | None = None, p: int | None = None) -> str:
     """Feature-fused cells depend on the feature dimension too: the optimal
     tile moves with d (the in-register distance compute scales with it), so
     d joins the cache key as a ``:d<d>`` suffix on the pass name.  The
@@ -68,12 +68,18 @@ def _pass_key(pass_: str, d: int | None, ties=None,
 
     The selection pass is keyed ``pald_topk:k<k>:d<d>`` — k first (it
     bounds the best-list/network width, the stronger lever) — and takes
-    no ties suffix: neighbor selection is weight-independent."""
+    no ties suffix: neighbor selection is weight-independent.  Mesh-sharded
+    selection appends ``:p<p>`` (the device count): the optimal row slab
+    shrinks with the per-shard row count, so tiles tuned on one mesh shape
+    never leak onto another; a ``:p`` miss falls back to the single-device
+    cell of the same (k, d) before the size heuristic."""
     if pass_ == "pald_topk":
         if k is not None:
             pass_ = f"{pass_}:k{int(k)}"
         if d is not None:
             pass_ = f"{pass_}:d{int(d)}"
+        if p is not None and int(p) > 1:
+            pass_ = f"{pass_}:p{int(p)}"
         return pass_
     if d is not None:
         pass_ = f"{pass_}:d{int(d)}"
@@ -284,6 +290,7 @@ def resolve_blocks_ex(
     d: int | None = None,
     ties=None,
     k: int | None = None,
+    p: int | None = None,
 ) -> tuple[int, int, str]:
     """(block, block_z, source) for one pass at size n.
 
@@ -297,13 +304,17 @@ def resolve_blocks_ex(
     registered functional name, or a ``WeightFunctional`` instance) extends
     the key for every non-default functional (their tile bodies differ); a
     miss on such a cell falls back to the strict cell's entry before the
-    size heuristic, since the optima rarely move much."""
+    size heuristic, since the optima rarely move much.  ``p`` (mesh device
+    count) extends the selection-pass key (``pald_topk:...:p<p>``); a miss
+    on the mesh cell falls back to the single-device cell the same way."""
     backend = backend or _default_backend()
     impl = impl or _default_impl(backend)
     base = _pass_key(pass_, d, k=k)
     keyed = _pass_key(pass_, d, ties, k=k)
+    meshed = _pass_key(pass_, d, ties, k=k, p=p)
     quarantined = None
-    for pk in dict.fromkeys((keyed, base)):  # tie-mode cell first, then strict
+    # mesh cell first, then the tie-mode cell, then strict single-device
+    for pk in dict.fromkeys((meshed, keyed, base)):
         rec = lookup(backend, impl, n, pk, path)
         key = _key(backend, impl, n, pk)
         source = f"cache:{key}"
@@ -338,13 +349,14 @@ def resolve_blocks(
     d: int | None = None,
     ties=None,
     k: int | None = None,
+    p: int | None = None,
 ) -> tuple[int, int]:
     """(block, block_z) for one pass at size n: cached, nearest, or default.
 
     Thin wrapper over ``resolve_blocks_ex`` (which also reports the
     provenance of the answer)."""
     b, bz, _ = resolve_blocks_ex(n, pass_, impl=impl, backend=backend,
-                                 path=path, d=d, ties=ties, k=k)
+                                 path=path, d=d, ties=ties, k=k, p=p)
     return b, bz
 
 
@@ -435,12 +447,22 @@ def _synthetic_inputs(n: int, seed: int = 0, with_weights: bool = False,
 
 
 def _runner(pass_: str, D, W, X, block: int, block_z: int, impl: str,
-            ties="drop", k: int | None = None):
+            ties="drop", k: int | None = None, p: int | None = None):
     from repro.kernels import ops
     if pass_ == "pald_knn":
         return ops.pald_knn(D, k=k or 16, block=block, impl=impl,
                             ties=ties)[1]
     if pass_ == "pald_topk":
+        if p is not None and p > 1:
+            # mesh cell: time the sharded select->cohere body itself on a
+            # p-device row shard — block/tile mean exactly what the
+            # pald_knn_sharded consumer passes them as, so the argmin is
+            # measured where it will be spent
+            from repro.core import distributed_knn as dknn
+            from repro.launch import mesh as meshlib
+            m = meshlib.make_test_mesh((p,), ("data",))
+            return dknn.pald_knn_sharded(X, m, k=k or 16, block=block,
+                                         tile=block_z)[1]
         # block = rows per slab, block_z = tile-min prefilter width
         # (>= n means direct); candidates time the full selection entry
         return ops.topk_select(X, k or 16, impl=impl, block=block,
@@ -483,6 +505,7 @@ def tune(
     d: int | None = None,
     ties="drop",
     k: int | None = None,
+    p: int | None = None,
     time_budget: float | None = None,
 ) -> dict:
     """Measure the candidate grid for one (n, pass, impl) cell and record the
@@ -502,7 +525,11 @@ def tune(
     (``blocks``) against the tile-min prefilter width (``blocks_z``,
     where a candidate >= n means the direct full-width top_k) — the
     prefilter-vs-direct crossover is data- and k-dependent, which is
-    exactly why it is measured, not hardcoded.
+    exactly why it is measured, not hardcoded.  With ``p`` > 1 the cell
+    is the MESH cell (key gains ``:p<p>``): candidates time the sharded
+    select->cohere body on a p-device row shard, so the cached
+    (block, tile) is measured exactly where ``pald_knn_sharded``'s
+    ``block="auto"`` will spend it; requires p forced/real devices.
 
     The sweep is guarded per candidate: a crashing candidate records a
     ``{"failed": True, "error": ...}`` row and the grid continues; once
@@ -513,6 +540,17 @@ def tune(
     candidate failed, RuntimeError (nothing worth caching)."""
     backend = backend or _default_backend()
     impl = impl or _default_impl(backend)
+    if p is not None and p > 1:
+        if pass_ != "pald_topk":
+            raise ValueError(
+                f"p= (mesh device count) only keys the selection pass "
+                f"(pald_topk), not {pass_!r}")
+        import jax
+        if p > len(jax.devices()):
+            raise RuntimeError(
+                f"tuning the p={p} mesh cell needs {p} devices, have "
+                f"{len(jax.devices())} (force host devices via "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={p})")
     if pass_ in ("pald_fused", "pald_topk") and d is None:
         d = 8
     if pass_ == "pald_knn":
@@ -542,7 +580,7 @@ def tune(
                 continue
             try:
                 t = time_fn(
-                    lambda: _runner(pass_, D, W, X, b, bz, impl, ties, k),
+                    lambda: _runner(pass_, D, W, X, b, bz, impl, ties, k, p),
                     iters=iters)
             except Exception as exc:  # noqa: BLE001 - one bad candidate
                 rows.append({"block": b, "block_z": bz, "failed": True,
@@ -573,7 +611,8 @@ def tune(
                              else None,
                              None if pass_ == "pald_topk" else ties,
                              k=k if pass_ in ("pald_knn", "pald_topk")
-                             else None),
+                             else None,
+                             p=p if pass_ == "pald_topk" else None),
                    record, path)
     return record
 

@@ -1,0 +1,221 @@
+"""Mesh-sharded knn PaLD: bitwise conformance vs the single-device fused path.
+
+The conformance matrix crosses every strategy x mesh size x k x weight
+functional on a tie-heavy integer feature matrix whose n is NOT divisible
+by the larger meshes (uneven shards + pad lanes exercised in every cell).
+Every assertion is exact equality — the sharded bodies reproduce the
+single-device fused select->cohere pipeline bit for bit, including the
+stable (value, index) selection order under exact distance ties.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributed_knn as dknn
+from repro.core import knn as knnmod
+from repro.core import pald
+from repro.kernels import ops
+from repro.launch import mesh as meshlib
+
+pytestmark = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs 8 host devices"
+)
+
+N, DIM = 50, 4
+WEIGHTS = ("drop", "split", "ignore")
+K_VALUES = (1, 33, N - 1)  # tiny, mid, and the k >= n-1 dense boundary
+
+# p in {1, 2, 4, 8}; 50 % 4 != 0 and 50 % 8 != 0 -> uneven shards at the
+# larger meshes.  The 2d strategy needs >= 2 axes, so its p-ladder uses
+# (1,1), (1,2), (2,2), (4,2) — the last two with pr != 1 exercise the
+# strided candidate split.
+MESH_SHAPES = {
+    "allgather": [(1,), (2,), (4,), (8,)],
+    "ring": [(1,), (2,), (4,), (8,)],
+    "2d": [(1, 1), (1, 2), (2, 2), (4, 2)],
+}
+CELLS = [
+    (strategy, shape, k, weight)
+    for strategy, shapes in MESH_SHAPES.items()
+    for shape in shapes
+    for k in K_VALUES
+    for weight in WEIGHTS
+]
+
+
+def _mesh(shape):
+    return meshlib.make_test_mesh(
+        shape, tuple(f"ax{i}" for i in range(len(shape))))
+
+
+@pytest.fixture(scope="module")
+def X():
+    # integers 0..3 -> massive exact distance ties in every metric
+    rng = np.random.default_rng(42)
+    return jnp.asarray(rng.integers(0, 4, (N, DIM)), jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def single_device(X):
+    """Single-device fused reference, cached per (k, weight) cell."""
+    cache = {}
+
+    def get(k, weight):
+        if (k, weight) not in cache:
+            cache[(k, weight)] = np.asarray(
+                pald.from_features(X, method="knn", k=k, weight=weight))
+        return cache[(k, weight)]
+
+    return get
+
+
+# ---------------------------------------------------------------------------
+# the conformance matrix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy,shape,k,weight", CELLS)
+def test_conformance_bitwise(X, single_device, strategy, shape, k, weight):
+    C = np.asarray(pald.from_features(
+        X, method="knn", k=k, weight=weight, mesh=_mesh(shape),
+        strategy=strategy))
+    np.testing.assert_array_equal(C, single_device(k, weight))
+
+
+# ---------------------------------------------------------------------------
+# module-level contract (graph + values, bypassing the engine)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy,shape", [
+    ("allgather", (4,)), ("ring", (8,)), ("2d", (2, 2)),
+])
+def test_sharded_graph_matches_fused(X, strategy, shape):
+    """Neighbor indices, distances AND cohesion values — not just the
+    scattered matrix — must be identical to the single-device kernel."""
+    gr, vr = ops.select_cohere(X, k=7, impl="jnp", normalize=True)
+    gs, vs = dknn.pald_knn_sharded(X, _mesh(shape), k=7, strategy=strategy)
+    np.testing.assert_array_equal(np.asarray(gs.indices),
+                                  np.asarray(gr.indices))
+    np.testing.assert_array_equal(np.asarray(gs.distances),
+                                  np.asarray(gr.distances))
+    np.testing.assert_array_equal(np.asarray(vs), np.asarray(vr))
+
+
+@pytest.mark.parametrize("strategy,shape", [
+    ("allgather", (4,)), ("ring", (4,)), ("2d", (2, 2)),
+])
+def test_sharded_k_full_runs_sharded(X, strategy, shape):
+    """k = n-1 through the sharded bodies themselves (the engine facade
+    short-circuits this to dense; the module must still answer exactly)."""
+    gr, vr = ops.select_cohere(X, k=N - 1, impl="jnp", normalize=True)
+    gs, vs = dknn.pald_knn_sharded(X, _mesh(shape), k=N - 1,
+                                   strategy=strategy)
+    np.testing.assert_array_equal(np.asarray(gs.indices),
+                                  np.asarray(gr.indices))
+    np.testing.assert_array_equal(np.asarray(vs), np.asarray(vr))
+
+
+def test_k_clamped_and_short_circuit(X):
+    """The engine's k >= n-1 dense short-circuit stays in force on a mesh
+    plan: the result equals the dense method bitwise."""
+    mesh = _mesh((2, 2))
+    C = np.asarray(pald.from_features(X, method="knn", k=N - 1, mesh=mesh))
+    Cd = np.asarray(pald.from_features(X, method="dense"))
+    np.testing.assert_array_equal(C, Cd)
+
+
+@pytest.mark.parametrize("n", [7, 13, 53])
+def test_uneven_prime_n(n):
+    """Prime-ish n on p=4: every shard padded differently, pad lanes must
+    contribute nothing."""
+    rng = np.random.default_rng(n)
+    Xp = jnp.asarray(rng.integers(0, 3, (n, 3)), jnp.float32)
+    k = min(5, n - 1)
+    ref = np.asarray(pald.from_features(Xp, method="knn", k=k))
+    C = np.asarray(pald.from_features(
+        Xp, method="knn", k=k, mesh=_mesh((4,)), strategy="ring"))
+    np.testing.assert_array_equal(C, ref)
+
+
+@pytest.mark.parametrize("metric", ["sqeuclidean", "manhattan"])
+def test_other_metrics(X, metric):
+    ref = np.asarray(pald.from_features(X, method="knn", k=9, metric=metric))
+    C = np.asarray(pald.from_features(
+        X, method="knn", k=9, metric=metric, mesh=_mesh((4,)),
+        strategy="allgather"))
+    np.testing.assert_array_equal(C, ref)
+
+
+# ---------------------------------------------------------------------------
+# plan surface
+# ---------------------------------------------------------------------------
+def test_explain_reports_mesh(X):
+    mesh = _mesh((2, 4))
+    p = pald.plan(X, kind="features", k=7, mesh=mesh)
+    e = p.explain()
+    assert e["mesh"] == (2, 4)
+    assert e["mesh_axes"] == ("ax0", "ax1")
+    assert e["strategy"] == "2d"  # auto on a 2-axis mesh
+    assert e["shard_rows"] * 8 >= N
+    est = e["comm_estimate"]
+    assert est["strategy"] == "2d" and est["p"] == 8
+    assert est["per_device_words"] > 0
+    assert set(est["breakdown"]) == {
+        "allgather_x", "allgather_ids", "rowcand_slabs", "merge_partials"}
+
+
+def test_explain_off_mesh_is_none(X):
+    e = pald.plan(X, kind="features", k=7).explain()
+    assert e["mesh"] is None and e["strategy"] is None
+    assert e["shard_rows"] is None and e["comm_estimate"] is None
+
+
+def test_auto_strategy_1d_is_ring(X):
+    p = pald.plan(X, kind="features", k=7, mesh=_mesh((4,)))
+    assert p.strategy == "ring"
+
+
+def test_validation_errors(X):
+    mesh1 = _mesh((4,))
+    with pytest.raises(ValueError, match="strategy"):
+        pald.plan(X, kind="features", k=7, strategy="ring")  # no mesh
+    with pytest.raises(ValueError, match="mesh"):
+        pald.plan(X, kind="features", method="fused", mesh=mesh1)
+    with pytest.raises(ValueError, match="batch"):
+        pald.plan(X, kind="features", k=7, mesh=mesh1, batch=2)
+    with pytest.raises(ValueError, match="2d"):
+        pald.plan(X, kind="features", k=7, mesh=mesh1, strategy="2d")
+    with pytest.raises(ValueError, match="strategy"):
+        pald.plan(X, kind="features", k=7, mesh=mesh1, strategy="torus")
+    with pytest.raises(ValueError):
+        dknn.pald_knn_sharded(X, mesh1, k=7, strategy="torus")
+    with pytest.raises(ValueError):
+        dknn.pald_knn_sharded(X, mesh1, k=7, metric="nope")
+
+
+def test_shard_shape_resolution():
+    chunk, quantum, m = dknn.resolve_shard_shapes(50, p=4, chunk=64)
+    assert chunk == 13 and quantum == 52 and m == 52  # clamped to ceil(n/p)
+    chunk, quantum, m = dknn.resolve_shard_shapes(50, p=4, chunk=8)
+    assert chunk == 8 and quantum == 32 and m == 64
+    assert m % 4 == 0 and (m // 4) % chunk == 0
+
+
+def test_comm_estimate_model():
+    est = dknn.comm_estimate("ring", n=1000, d=16, k=8, p=8)
+    # the docstring's claim: ring moves 2*(p-1)/p * n*d words total
+    assert est["per_device_words"] == 2 * 7 * 125 * 16
+    est = dknn.comm_estimate("allgather", n=1000, d=16, k=8, p=8)
+    assert est["per_device_words"] == 7 * 125 * 16
+    with pytest.raises(ValueError):
+        dknn.comm_estimate("torus", n=10, d=2, k=1, p=2)
+
+
+# ---------------------------------------------------------------------------
+# tuning-cache mesh keys
+# ---------------------------------------------------------------------------
+def test_tuning_key_gains_p(tmp_path, monkeypatch, X):
+    from repro.tuning import autotune as tuner
+
+    assert tuner._pass_key("pald_topk", 4, k=7, p=4) == "pald_topk:k7:d4:p4"
+    assert tuner._pass_key("pald_topk", 4, k=7, p=1) == "pald_topk:k7:d4"
+    assert tuner._pass_key("pald_topk", 4, k=7) == "pald_topk:k7:d4"

@@ -458,3 +458,89 @@ def test_corrupt_tuning_cache_changes_only_provenance(tmp_path, monkeypatch):
     p_bad = pald.plan(D, method="kernel", block="auto")
     assert p_bad.explain()["block_source"].startswith("quarantined:")
     np.testing.assert_array_equal(np.asarray(p_bad.execute(D)), baseline)
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded knn rungs: a dead shard body re-enters single-device fused
+# ---------------------------------------------------------------------------
+_needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 4, reason="needs 4 host devices")
+
+
+def _knn_mesh_plan(mesh, strategy=None, on_error="fallback"):
+    return pald.plan(n=17, d=3, kind="features", k=5, mesh=mesh,
+                     strategy=strategy, on_error=on_error)
+
+
+def _test_mesh():
+    from repro.launch import mesh as meshlib
+
+    return meshlib.make_test_mesh((2, 2), ("rows", "cols"))
+
+
+@_needs_devices
+def test_mesh_body_fault_rescues_single_device_bitwise():
+    """Kill one shard body mid-chain: the rescue must re-enter the
+    single-device fused pipeline and answer bitwise-identically, and the
+    degradation record must name the mesh cell that failed."""
+    X = _X()
+    baseline = np.asarray(pald.from_features(X, method="knn", k=5))
+    p = _knn_mesh_plan(_test_mesh())
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.failing("distributed_knn.body"):
+            out = np.asarray(p.execute(X))
+    np.testing.assert_array_equal(out, baseline)
+    (evt,) = p.explain()["degradations"]
+    assert evt["fallback"] == "mesh:single-device"
+    assert evt["mesh"] == (2, 2)
+    assert evt["strategy"] == "2d"
+    assert evt["cell"] == ("features", "knn", "dense")
+
+
+@_needs_devices
+@pytest.mark.parametrize("strategy", ["allgather", "ring", "2d"])
+def test_mesh_fault_matches_strategy(strategy):
+    """A fault armed for ONE strategy fires only on that strategy's body;
+    the rescue works identically from any of them."""
+    X = _X()
+    baseline = np.asarray(pald.from_features(X, method="knn", k=5))
+    p = _knn_mesh_plan(_test_mesh(), strategy=strategy)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.failing("distributed_knn.body",
+                            match={"strategy": strategy}):
+            out = np.asarray(p.execute(X))
+    np.testing.assert_array_equal(out, baseline)
+    (evt,) = p.explain()["degradations"]
+    assert evt["strategy"] == strategy
+    assert evt["mesh"] == (2, 2)
+
+
+@_needs_devices
+def test_mesh_fault_strict_mode_raises():
+    X = _X()
+    p = _knn_mesh_plan(_test_mesh(), on_error="raise")
+    with faults.failing("distributed_knn.dispatch"):
+        with pytest.raises(RuntimeError, match="injected fault"):
+            p.execute(X)
+
+
+@_needs_devices
+def test_mesh_rescue_survives_dead_primary_impl_too():
+    """Mesh body dead AND the first single-device re-entry dead: the chain
+    keeps walking (mesh:single-device -> impl rungs) and still answers
+    bitwise, with the mesh cell recorded on the final event."""
+    X = _X()
+    baseline = np.asarray(pald.from_features(X, method="knn", k=5))
+    p = _knn_mesh_plan(_test_mesh())
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", resilience.DegradationWarning)
+        with faults.failing("distributed_knn.body"), \
+             faults.failing("resilience.step",
+                            match={"step": "mesh:single-device"}):
+            out = np.asarray(p.execute(X))
+    np.testing.assert_array_equal(out, baseline)
+    evt = p.explain()["degradations"][-1]
+    assert evt["fallback"].startswith("impl:")
+    assert evt["mesh"] == (2, 2)

@@ -103,3 +103,100 @@ def test_cohesion_nonnegative_bounded(D):
     C = np.asarray(pald.cohesion(jnp.asarray(D), method="dense"))
     assert (C >= -1e-12).all()
     assert (C <= 1.0 + 1e-9).all()
+
+
+# ---------------------------------------------------------------------------
+# sharded selection (core/distributed_knn) — mesh laws
+# ---------------------------------------------------------------------------
+import jax  # noqa: E402
+
+_needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 4, reason="needs 4 host devices")
+
+
+@st.composite
+def feature_sets(draw, nmin=8, nmax=12, dim=3):
+    X = _points(draw, nmin=nmin, nmax=nmax, dim=dim)
+    return np.asarray(X, np.float32)
+
+
+def _shard_graph(X, p, strategy="ring", k=3):
+    from repro.core import distributed_knn as dknn
+    from repro.launch import mesh as meshlib
+
+    mesh = meshlib.make_test_mesh((p,), ("data",))
+    g, v = dknn.pald_knn_sharded(jnp.asarray(X), mesh, k=k,
+                                 strategy=strategy)
+    return np.asarray(g.indices), np.asarray(g.distances), np.asarray(v)
+
+
+@_needs_devices
+@settings(max_examples=6, deadline=None)
+@given(feature_sets())
+def test_sharded_shard_count_invariance(X):
+    """The selected graph and cohesion values are identical for ANY shard
+    count — sharding is a data-movement choice, never a semantic one."""
+    i1, d1, v1 = _shard_graph(X, 1)
+    for p in (2, 4):
+        ip, dp, vp = _shard_graph(X, p)
+        np.testing.assert_array_equal(ip, i1)
+        np.testing.assert_array_equal(dp, d1)
+        np.testing.assert_array_equal(vp, v1)
+
+
+@_needs_devices
+@settings(max_examples=6, deadline=None)
+@given(feature_sets(), st.randoms(use_true_random=False))
+def test_sharded_permutation_equivariance(X, rnd):
+    """Permuting the points permutes the selected neighborhoods (as SETS;
+    tie-free input via assume) and the cohesion matrix equivariantly."""
+    n = X.shape[0]
+    D = euclidean_distance_matrix(X)
+    iu = np.triu_indices(n, 1)
+    assume(len(np.unique(D[iu])) == len(iu[0]))
+    perm = list(range(n))
+    rnd.shuffle(perm)
+    perm = np.asarray(perm)
+    inv = np.empty(n, np.int64)
+    inv[perm] = np.arange(n)
+
+    i0, _, v0 = _shard_graph(X, 4)
+    ip, _, vp = _shard_graph(X[perm], 4)
+    # row r of the permuted run is point perm[r]; its neighbor ids map
+    # back through perm — equal as sets (selection ORDER may differ only
+    # under ties, excluded above, so sorted comparison is exact)
+    np.testing.assert_array_equal(
+        np.sort(perm[ip], axis=1), np.sort(i0[perm], axis=1))
+    # cohesion values: same pair algebra, summation order may differ.
+    # vals column 0 is the self-lane, columns 1..k follow the graph.
+    ids = np.arange(n)
+    full0 = np.concatenate([ids[:, None], i0], axis=1)
+    fullp = np.concatenate([perm[:, None], perm[ip]], axis=1)
+    C0 = np.zeros((n, n), np.float64)
+    Cp = np.zeros((n, n), np.float64)
+    np.add.at(C0, (np.repeat(ids, full0.shape[1]), full0.reshape(-1)),
+              v0.reshape(-1))
+    np.add.at(Cp, (np.repeat(perm, fullp.shape[1]), fullp.reshape(-1)),
+              vp.reshape(-1))
+    np.testing.assert_allclose(Cp, C0, rtol=1e-4, atol=1e-6)
+
+
+@_needs_devices
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from([5, 7, 11, 13, 17, 19, 23]),
+       st.integers(0, 2**31 - 1))
+def test_sharded_pad_lane_masking(n, seed):
+    """Prime-ish n on p=4: the padded shard lanes (up to p-1 whole rows
+    plus ragged tails) must never leak into any selected neighborhood or
+    cohesion value — bitwise equality with the single-device kernel."""
+    from repro.kernels import ops as _ops
+
+    rng = np.random.default_rng(seed)
+    X = np.asarray(rng.integers(0, 3, (n, 3)), np.float32)  # ties welcome
+    k = min(3, n - 1)
+    gr, vr = _ops.select_cohere(jnp.asarray(X), k=k, impl="jnp",
+                                normalize=True)
+    ip, dp, vp = _shard_graph(X, 4, k=k)
+    np.testing.assert_array_equal(ip, np.asarray(gr.indices))
+    np.testing.assert_array_equal(dp, np.asarray(gr.distances))
+    np.testing.assert_array_equal(vp, np.asarray(vr))
